@@ -1,0 +1,60 @@
+"""Paper Figs. 4 / 8 / 9 — accumulator pattern: effect of update frequency
+with considerable state update time (``t_f = 2 t_acc``), on three simulated
+host sizes matching the paper's machines:
+
+* fig4: Sandy Bridge, 16 cores / 32 hw contexts
+* fig8: Power8, 20 cores / 160 hw contexts
+* fig9: Xeon PHI, 60 cores / 240 hw contexts
+
+Sweeps the flush period; frequent updates saturate the collector and stall
+scaling, periods above the stability threshold track ideal eq. (2).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, derived
+from repro.core import analytics, simulator
+
+M = 8192
+T_F = 2.0
+T_ACC = 1.0
+HOSTS = {
+    "fig4_sandybridge": (1, 2, 4, 8, 16, 32),
+    "fig8_power8": (1, 4, 16, 40, 80, 160),
+    "fig9_xeonphi": (1, 4, 16, 60, 120, 240),
+}
+FLUSH = (1, 4, 16, 64, 256)
+
+
+def run() -> list[Row]:
+    rows = []
+    for host, degrees in HOSTS.items():
+        for flush_every in FLUSH:
+            for n_w in degrees:
+                r = simulator.simulate_accumulator(
+                    M, n_w, T_F, T_ACC, flush_every=flush_every
+                )
+                ideal = analytics.ideal_completion(M, T_F, T_ACC, n_w)
+                k_stable = analytics.stable_flush_period(T_F, T_ACC, n_w)
+                rows.append(
+                    Row(
+                        f"{host}/flush={flush_every}/nw={n_w}",
+                        r.completion_time,
+                        derived(
+                            ideal=ideal,
+                            ratio_to_ideal=r.completion_time / ideal,
+                            stable_period=k_stable,
+                            paper_rule=analytics.paper_flush_threshold(
+                                T_F, T_ACC, n_w
+                            ),
+                            collector_busy=r.collector_busy_frac,
+                        ),
+                    )
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,40 @@
+"""Paper Fig. 3 — accumulator pattern: completion time vs parallelism degree,
+``t_f`` 100x longer than ``t_acc``.  Measured (simulated farm) vs ideal eq. (2).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, derived
+from repro.core import analytics, simulator
+
+M = 2048
+T_F = 100.0
+T_ACC = 1.0
+DEGREES = (1, 2, 4, 8, 12, 16, 24, 32)
+
+
+def run() -> list[Row]:
+    rows = []
+    for n_w in DEGREES:
+        r = simulator.simulate_accumulator(M, n_w, T_F, T_ACC, flush_every=1)
+        ideal = analytics.ideal_completion(M, T_F, T_ACC, n_w)
+        rows.append(
+            Row(
+                f"fig3/accumulator_scaling/nw={n_w}",
+                r.completion_time,
+                derived(
+                    ideal=ideal,
+                    ratio_to_ideal=r.completion_time / ideal,
+                    worker_busy=r.worker_busy_frac,
+                    collector_busy=r.collector_busy_frac,
+                    updates=r.state_updates_sent,
+                ),
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,48 @@
+"""Shared benchmark plumbing: row format + CSV emission.
+
+Every benchmark module exposes ``run() -> list[Row]``; ``benchmarks.run``
+aggregates and prints ``name,us_per_call,derived`` CSV (one row per
+measurement).  ``us_per_call`` is wall-clock microseconds for real JAX
+benchmarks and simulated time units for discrete-event reproductions of the
+paper's figures (the paper's synthetic workloads are calibrated the same way).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable
+
+
+@dataclasses.dataclass(frozen=True)
+class Row:
+    name: str
+    us_per_call: float
+    derived: str  # "key=value;key=value"
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def derived(**kv) -> str:
+    return ";".join(
+        f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}" for k, v in kv.items()
+    )
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock microseconds per call (after warmup)."""
+    for _ in range(warmup):
+        fn(*args)
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        samples.append((time.perf_counter() - t0) * 1e6)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def emit(rows: Iterable[Row]) -> None:
+    for r in rows:
+        print(r.csv())

@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks (CPU container: wall time is for the jnp reference
+path — kernel timings only mean anything on real TPU; the derived column
+carries the analytic FLOP counts used by the roofline)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, derived, time_fn
+from repro.kernels import ref
+
+
+def run() -> list[Row]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention ref at a training-like tile
+    B, H, S, hd = 1, 8, 1024, 128
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, hd), jnp.float32)
+    fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    jax.block_until_ready(fn(q, k, v))
+    us = time_fn(lambda *a: jax.block_until_ready(fn(*a)), q, k, v)
+    flops = 2.0 * B * H * S * S * hd * 2 / 2  # causal half, qk+pv
+    rows.append(
+        Row("kernel/flash_attention_ref/B1H8S1024d128", us,
+            derived(flops=flops, gflops_cpu=flops / us / 1e3))
+    )
+
+    # decode attention ref at a 32k cache
+    S_cache = 32768
+    ck = jax.random.normal(ks[1], (1, 8, S_cache, hd), jnp.bfloat16)
+    cv = jax.random.normal(ks[2], (1, 8, S_cache, hd), jnp.bfloat16)
+    qd = jax.random.normal(ks[0], (1, 8, hd), jnp.bfloat16)
+    fnd = jax.jit(lambda q, a, b: ref.decode_attention_ref(q, a, b, S_cache))
+    jax.block_until_ready(fnd(qd, ck, cv))
+    us = time_fn(lambda *a: jax.block_until_ready(fnd(*a)), qd, ck, cv)
+    bytes_ = 2 * 8 * S_cache * hd * 2
+    rows.append(
+        Row("kernel/decode_attention_ref/S32768", us,
+            derived(cache_bytes=bytes_, gbps_cpu=bytes_ / us / 1e3))
+    )
+
+    # ssd scan ref
+    Bm_, H_, S_, P_, N_ = 1, 8, 2048, 64, 128
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (Bm_, H_, S_, P_)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bm_, H_, S_)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H_,)) * 0.3)
+    Bmat = jax.random.normal(ks[3], (Bm_, H_, S_, N_)) * 0.3
+    Cmat = jax.random.normal(ks[4], (Bm_, H_, S_, N_)) * 0.3
+    fns = jax.jit(lambda *a: ref.ssd_scan_ref(*a))
+    jax.block_until_ready(fns(x, dt, A, Bmat, Cmat))
+    us = time_fn(lambda *a: jax.block_until_ready(fns(*a)), x, dt, A, Bmat, Cmat)
+    rows.append(
+        Row("kernel/ssd_scan_ref/H8S2048", us,
+            derived(state_flops=2.0 * Bm_ * H_ * S_ * N_ * P_ * 2))
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,43 @@
+"""Paper §4.2 analysis — fully partitioned pattern: scaling under fair and
+skewed hash functions (the paper: an unfair ``h`` impairs speedup by a
+proportional factor).  Not a numbered figure in the paper (its partitioned
+results are cited from [3,4]); this benchmark quantifies the claim.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, derived
+from repro.core import analytics, simulator
+
+M = 16384
+T_F, T_S = 4.0, 1.0
+DEGREES = (1, 2, 4, 8, 16, 32)
+SKEWS = (0.0, 0.5, 1.0, 1.5)
+
+
+def run() -> list[Row]:
+    rows = []
+    serial = simulator.simulate_serial(M, T_F, T_S).completion_time
+    for skew in SKEWS:
+        for n_w in DEGREES:
+            r = simulator.simulate_partitioned(
+                M, n_w, T_F, T_S, skew=skew, seed=42
+            )
+            rows.append(
+                Row(
+                    f"partitioned/skew={skew:g}/nw={n_w}",
+                    r.completion_time,
+                    derived(
+                        speedup=serial / r.completion_time,
+                        ideal=float(n_w),
+                        efficiency=serial / r.completion_time / n_w,
+                    ),
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,49 @@
+"""Regenerate the data-driven tables of EXPERIMENTS.md from dry-run artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.report
+Writes results/dryrun_table.md and results/roofline_pod1.md; EXPERIMENTS.md
+references these (and inlines them at authoring time).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline import load_records, roofline_for, write_md
+
+
+def dryrun_table(path: str) -> None:
+    lines = [
+        "| arch | shape | mesh | status | args GB/dev | temps GB/dev | "
+        "fits 16G? | flops/chip | coll B/chip | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_records():
+        name = f"{rec['arch']} | {rec['shape']} | {rec['tag']}"
+        if rec.get("status") == "skip":
+            lines.append(f"| {name} | SKIP ({rec['reason'][:40]}) | — | — | — | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"| {name} | ERROR | — | — | — | — | — |")
+            continue
+        mem = rec["memory_analysis"]
+        chips = rec["hlo_costs"]["num_partitions"]
+        args_gb = (mem["argument_size_in_bytes"] or 0) / 1e9
+        temps_gb = (mem["temp_size_in_bytes"] or 0) / 1e9
+        fits = "yes" if (args_gb + temps_gb) <= 16.0 else "**NO**"
+        lines.append(
+            f"| {name} | ok | {args_gb:.2f} | {temps_gb:.2f} | {fits} | "
+            f"{rec['hlo_costs']['flops_per_chip']:.3g} | "
+            f"{rec['hlo_costs']['collective_bytes_per_chip']:.3g} | "
+            f"{rec['timings']['compile_s']:.0f} |"
+        )
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    os.makedirs("results", exist_ok=True)
+    dryrun_table("results/dryrun_table.md")
+    write_md("results/roofline_pod1.md")

@@ -1,0 +1,115 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the dry-run
+artifacts (results/dryrun/*.json).
+
+  compute term    = HLO_FLOPs / (chips * 197 TFLOP/s)
+  memory term     = HLO_bytes / (chips * 819 GB/s)
+  collective term = collective_bytes / (chips * 50 GB/s/link)
+
+HLO_* come from the trip-count-aware analyzer (repro.launch.hlo_analysis);
+per-chip numbers are scaled to global by the partition count.  Also reports
+MODEL_FLOPS = 6*N(_active)*tokens and the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste).
+
+Run standalone with ``--write-md <path>`` to (re)generate the markdown table
+embedded in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.common import Row, derived
+from repro.core.analytics import Roofline
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(tag=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag and r.get("tag") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_for(rec):
+    h = rec["hlo_costs"]
+    chips = h["num_partitions"]
+    return Roofline(
+        flops=h["flops_per_chip"] * chips,
+        hbm_bytes=h["hbm_bytes_per_chip"] * chips,
+        collective_bytes=h["collective_bytes_per_chip"] * chips,
+        chips=chips,
+    )
+
+
+def run() -> list[Row]:
+    rows = []
+    for rec in load_records():
+        tagname = f"{rec['arch']}/{rec['shape']}/{rec['tag']}"
+        if rec.get("status") == "skip":
+            rows.append(Row(f"roofline/{tagname}", 0.0, f"SKIP:{rec['reason'][:60]}"))
+            continue
+        if rec.get("status") != "ok":
+            rows.append(Row(f"roofline/{tagname}", 0.0, "ERROR"))
+            continue
+        r = roofline_for(rec)
+        mf = rec["model_flops"]
+        rows.append(
+            Row(
+                f"roofline/{tagname}",
+                r.step_time * 1e6,  # us per step at the roofline bound
+                derived(
+                    compute_s=r.compute_s,
+                    memory_s=r.memory_s,
+                    collective_s=r.collective_s,
+                    dominant=r.dominant,
+                    model_flops=mf,
+                    useful_ratio=mf / max(r.flops, 1.0),
+                    mfu_bound=r.mfu_upper_bound(mf),
+                ),
+            )
+        )
+    return rows
+
+
+def write_md(path: str) -> None:
+    recs = load_records(tag="pod1")
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant | "
+        "MODEL_FLOPS | useful ratio | MFU bound |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        name = f"{rec['arch']} | {rec['shape']}"
+        if rec.get("status") == "skip":
+            lines.append(f"| {name} | — | — | — | SKIP | — | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"| {name} | — | — | — | ERROR | — | — | — |")
+            continue
+        r = roofline_for(rec)
+        mf = rec["model_flops"]
+        lines.append(
+            f"| {name} | {r.compute_s:.3e} | {r.memory_s:.3e} | "
+            f"{r.collective_s:.3e} | **{r.dominant}** | {mf:.3e} | "
+            f"{mf / max(r.flops, 1.0):.2f} | {r.mfu_upper_bound(mf) * 100:.1f}% |"
+        )
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path} ({len(recs)} cells)")
+
+
+if __name__ == "__main__":
+    if "--write-md" in sys.argv:
+        write_md(sys.argv[sys.argv.index("--write-md") + 1])
+    else:
+        from benchmarks.common import emit
+
+        emit(run())

@@ -1,0 +1,45 @@
+"""Paper Figs. 6 / 7 — separate task/state pattern: measured vs ideal speedup.
+
+Three cases, as in the paper: A (t_f = 100 t_s, bound 101), B (t_f = 10 t_s,
+bound 11), C (t_f = 5 t_s, bound 6).  Fig. 6 sweeps to 16 workers (Sandy
+Bridge), Fig. 7 to 24 (Magny Cours); we also extend to 256 to show the
+saturation at eq. (1).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, derived
+from repro.core import analytics, simulator
+
+M = 8192
+CASES = {"A": 100.0, "B": 10.0, "C": 5.0}
+DEGREES = (1, 2, 4, 8, 16, 24, 64, 256)
+
+
+def run() -> list[Row]:
+    rows = []
+    for case, ratio in CASES.items():
+        t_f, t_s = ratio, 1.0
+        serial = simulator.simulate_serial(M, t_f, t_s).completion_time
+        for n_w in DEGREES:
+            r = simulator.simulate_separate_task_state(M, n_w, t_f, t_s)
+            speedup = serial / r.completion_time
+            rows.append(
+                Row(
+                    f"fig6_7/separate/case={case}/nw={n_w}",
+                    r.completion_time,
+                    derived(
+                        speedup=speedup,
+                        ideal=float(min(n_w, analytics.separate_speedup_bound(t_f, t_s))),
+                        bound_eq1=analytics.separate_speedup_bound(t_f, t_s),
+                        paper_model=analytics.separate_speedup(n_w, t_f, t_s),
+                    ),
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

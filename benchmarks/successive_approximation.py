@@ -1,0 +1,45 @@
+"""Paper Fig. 5 — successive approximation pattern: completion time for
+several (t_c, t_s) mixes vs parallelism degree, against ideal eq. (2).
+
+The larger the worker-local condition time t_c relative to the update time
+t_s, the closer to ideal (the paper's observation); staleness adds discarded
+updates (third overhead source of §4.4).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, derived
+from repro.core import analytics, simulator
+
+M = 4096
+MIXES = ((100.0, 1.0), (10.0, 1.0), (2.0, 1.0), (1.0, 10.0))
+DEGREES = (1, 2, 4, 8, 16, 32)
+
+
+def run() -> list[Row]:
+    rows = []
+    for t_c, t_s in MIXES:
+        for n_w in DEGREES:
+            r = simulator.simulate_successive_approximation(
+                M, n_w, t_c, t_s, feedback_latency=0.5, seed=0
+            )
+            ideal = analytics.ideal_completion(M, t_c, 0.0, n_w)
+            rows.append(
+                Row(
+                    f"fig5/successive/tc={t_c:g}_ts={t_s:g}/nw={n_w}",
+                    r.completion_time,
+                    derived(
+                        ideal=ideal,
+                        ratio_to_ideal=r.completion_time / ideal,
+                        updates_sent=r.state_updates_sent,
+                        updates_discarded=r.state_updates_discarded,
+                    ),
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,46 @@
+"""Assigned-architecture registry: ``get(name)`` / ``names()``.
+
+One module per architecture; each exposes ``CONFIG``.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Tuple
+
+from repro.models.config import ModelConfig
+
+_ARCHS = (
+    "codeqwen1_5_7b",
+    "gemma2_27b",
+    "minicpm_2b",
+    "granite_8b",
+    "kimi_k2_1t_a32b",
+    "deepseek_moe_16b",
+    "paligemma_3b",
+    "seamless_m4t_medium",
+    "mamba2_780m",
+    "jamba_1_5_large_398b",
+    "paper_synthetic",
+)
+
+_ALIAS = {name.replace("_", "-"): name for name in _ARCHS}
+_ALIAS.update(
+    {
+        "codeqwen1.5-7b": "codeqwen1_5_7b",
+        "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+        "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    }
+)
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(n for n in _ARCHS if n != "paper_synthetic")
+
+
+def get(name: str) -> ModelConfig:
+    mod_name = _ALIAS.get(name, name).replace("-", "_").replace(".", "_")
+    if mod_name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ALIAS)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG

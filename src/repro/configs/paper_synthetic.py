@@ -1,0 +1,19 @@
+"""The paper's own synthetic workload "architecture": a task farm whose
+tasks are calibrated dummy computations (paper §5).  Used by the
+benchmark harness; exposed here so `--arch paper-synthetic` selects it.
+"""
+from repro.models.config import DENSE, FULL, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="paper-synthetic",
+    family="dense",
+    num_layers=2,
+    d_model=256,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=1024,
+    vocab_size=1024,
+    unit=(LayerSpec(FULL, DENSE),),
+    param_dtype="float32",
+    compute_dtype="float32",
+)

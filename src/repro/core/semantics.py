@@ -1,0 +1,149 @@
+"""Formal semantics of the five state access patterns (paper §4).
+
+These are the *definitions* from the paper, written as pure JAX folds over a
+finite stream prefix.  They serve as the oracles against which every parallel
+implementation in :mod:`repro.core.patterns` is tested.
+
+Stream convention: the paper writes streams right-to-left (``... x_2 x_1 x_0``);
+here a stream prefix is an array (or pytree of arrays) whose *leading* axis is
+stream order, i.e. ``xs[0] == x_0``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# §4.1 Serial state access pattern
+# ---------------------------------------------------------------------------
+
+def serial(
+    f: Callable,  # f : alpha x gamma -> beta
+    ns: Callable,  # ns : alpha x gamma -> gamma   (new state)
+    xs,            # stream prefix, leading axis = stream order
+    s0,            # initial state s_0 : gamma
+) -> Tuple[Array, object]:
+    """``..., f(x_1, ns(x_0, s_0)), f(x_0, s_0)`` — the sequential fold.
+
+    Returns ``(ys, s_final)`` where ``ys[i] = f(x_i, s_{i-1})`` and
+    ``s_final = ns(x_{m-1}, s_{m-2})``.
+    """
+
+    def step(s, x):
+        y = f(x, s)
+        return ns(x, s), y
+
+    s_final, ys = lax.scan(step, s0, xs)
+    return ys, s_final
+
+
+# ---------------------------------------------------------------------------
+# §4.2 Fully partitioned state access pattern
+# ---------------------------------------------------------------------------
+
+def partitioned(
+    f: Callable,   # f : alpha x gamma -> beta
+    ns: Callable,  # ns : alpha x gamma -> gamma
+    h: Callable,   # h : alpha -> [0, N)
+    xs,
+    v0: Array,     # state vector, v0[p] : gamma
+) -> Tuple[Array, Array]:
+    """Each task touches only ``v[h(x_i)]``; per-partition order is stream order."""
+
+    def step(v, x):
+        p = h(x)
+        sp = jax.tree.map(lambda leaf: leaf[p], v)
+        y = f(x, sp)
+        new_sp = ns(x, sp)
+        v = jax.tree.map(lambda leaf, nl: leaf.at[p].set(nl), v, new_sp)
+        return v, y
+
+    v_final, ys = lax.scan(step, v0, xs)
+    return ys, v_final
+
+
+# ---------------------------------------------------------------------------
+# §4.3 Accumulator state access pattern
+# ---------------------------------------------------------------------------
+
+def accumulator(
+    f: Callable,        # f : alpha x gamma -> beta   (reads current state view)
+    g: Callable,        # g : alpha -> gamma
+    combine: Callable,  # (+) : gamma x gamma -> gamma, associative + commutative
+    xs,
+    s_zero,             # identity of (+)
+) -> Tuple[Array, object]:
+    """``s_i = g(x_i) (+) s_{i-1}`` — the serial reference for the accumulator.
+
+    ``ys[i] = f(x_i, s_{i-1})`` matches the serial execution; parallel
+    implementations are only required to match ``s_final`` (associativity and
+    commutativity of ``(+)`` make the final state schedule-independent) while
+    their per-item ``ys`` may read stale views.
+    """
+
+    def step(s, x):
+        y = f(x, s)
+        return combine(g(x), s), y
+
+    s_final, ys = lax.scan(step, s_zero, xs)
+    return ys, s_final
+
+
+# ---------------------------------------------------------------------------
+# §4.4 Successive approximation state access pattern
+# ---------------------------------------------------------------------------
+
+def successive_approximation(
+    c: Callable,        # c : alpha x gamma -> bool  (update condition)
+    s_prime: Callable,  # s' : alpha x gamma -> gamma, monotone: s'(x, s) <= s
+    xs,
+    s_init,
+) -> Tuple[Array, object]:
+    """Monotone best-so-far fold.
+
+    Returns ``(trace, s_final)`` with ``trace[i]`` the state value after task
+    ``x_i`` (the paper's pattern outputs every accepted approximation; here the
+    trace carries the state after each task so accepted updates are visible as
+    changes in the trace).
+    """
+
+    def step(s, x):
+        s_new = lax.cond(c(x, s), lambda: s_prime(x, s), lambda: s)
+        return s_new, s_new
+
+    s_final, trace = lax.scan(step, s_init, xs)
+    return trace, s_final
+
+
+# ---------------------------------------------------------------------------
+# §4.5 Separate task/state function state access pattern
+# ---------------------------------------------------------------------------
+
+def separate_task_state(
+    f: Callable,  # f : alpha -> beta           (state-independent)
+    s: Callable,  # s : beta x gamma -> gamma   (serialized state update)
+    xs,
+    s0,
+) -> Tuple[Array, Array, object]:
+    """``y_i = f(x_i)`` then ``s_i = s(y_i, s_{i-1})`` under mutual exclusion.
+
+    The commit order is arbitrary in the parallel pattern; the canonical
+    reference commits in stream order.  Returns ``(ys, state_trace, s_final)``
+    — the pattern's output stream is the trace of state modifications.
+    """
+
+    ys = jax.vmap(f)(xs)  # embarrassingly parallel part
+
+    def step(st, y):
+        st_new = s(y, st)
+        return st_new, st_new
+
+    s_final, trace = lax.scan(step, s0, ys)
+    return ys, trace, s_final

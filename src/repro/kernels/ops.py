@@ -1,0 +1,85 @@
+"""Jit'd dispatch layer: Pallas kernel on TPU, pure-jnp reference elsewhere.
+
+`use_kernels(True/False/"auto")` flips the implementation globally; "auto"
+selects kernels when the default backend is TPU.  The model code calls these
+wrappers, so swapping implementations never touches model definitions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dk
+from repro.kernels import flash_attention as _fk
+from repro.kernels import moe_dispatch as _mk
+from repro.kernels import ref as _ref
+from repro.kernels import ssd_scan as _sk
+
+_MODE = "auto"  # "auto" | "kernel" | "ref" | "interpret"
+
+
+def use_kernels(mode: str) -> None:
+    global _MODE
+    assert mode in ("auto", "kernel", "ref", "interpret")
+    _MODE = mode
+
+
+def _kernel_enabled() -> Optional[bool]:
+    """True => compiled kernel; False => jnp ref; None->interpret kernel."""
+    if _MODE == "kernel":
+        return True
+    if _MODE == "ref":
+        return False
+    if _MODE == "interpret":
+        return None
+    return True if jax.default_backend() == "tpu" else False
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    mode = _kernel_enabled()
+    if mode is False:
+        return _ref.flash_attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap
+        )
+    return _fk.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        interpret=mode is None,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "window"))
+def decode_attention(q, cache_k, cache_v, valid_len, *, softcap=0.0, window=0):
+    mode = _kernel_enabled()
+    if mode is False:
+        return _ref.decode_attention_ref(
+            q, cache_k, cache_v, valid_len, softcap=softcap, window=window
+        )
+    return _dk.decode_attention(
+        q, cache_k, cache_v, valid_len, softcap=softcap, window=window,
+        interpret=mode is None,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128):
+    mode = _kernel_enabled()
+    if mode is False:
+        return _ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    return _sk.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=mode is None)
+
+
+@jax.jit
+def moe_gather(x, row_token):
+    mode = _kernel_enabled()
+    if mode is False:
+        return _ref.moe_gather_ref(x, row_token)
+    return _mk.moe_gather(x, row_token, interpret=mode is None)
+
+
+def moe_combine(expert_out, row_token, row_weight, num_tokens: int):
+    return _ref.moe_combine_ref(expert_out, row_token, row_weight, num_tokens)

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every kernel in this package."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q [B,Hq,Sq,hd]; k,v [B,Hkv,Skv,hd] (fp32 math)."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) / math.sqrt(hd)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def decode_attention_ref(q, cache_k, cache_v, valid_len, *, softcap=0.0, window=0):
+    """q [B,Hq,hd]; cache [B,Hkv,S,hd]; valid_len scalar int."""
+    B, Hq, hd = q.shape
+    Hkv, S = cache_k.shape[1], cache_k.shape[2]
+    g = Hq // Hkv
+    kf = jnp.repeat(cache_k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(cache_v.astype(jnp.float32), g, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kf) / math.sqrt(hd)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(S)[None, None, :]
+    valid = pos < valid_len
+    if window:
+        valid &= pos > valid_len - window
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, vf).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Sequential SSD recurrence (per head already expanded).
+
+    x [B,H,S,P]; dt [B,H,S]; A [H]; Bm/Cm [B,H,S,N].
+    Returns (y [B,H,S,P], h_final [B,H,N,P])."""
+    Bsz, H, S, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # [B,H,P],[B,H],[B,H,N],[B,H,N]
+        dA = jnp.exp(dt_t * A[None, :])
+        h = h * dA[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", B_t, x_t * dt_t[..., None]
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", C_t, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    xs = (
+        x.transpose(2, 0, 1, 3).astype(jnp.float32),
+        dt.transpose(2, 0, 1).astype(jnp.float32),
+        Bm.transpose(2, 0, 1, 3).astype(jnp.float32),
+        Cm.transpose(2, 0, 1, 3).astype(jnp.float32),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype), h
+
+
+def moe_gather_ref(x, row_token):
+    """x [T, d]; row_token [R] int32 in [0, T] (T = dummy row -> zeros)."""
+    x_pad = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)
+    return x_pad[row_token]
+
+
+def moe_combine_ref(expert_out, row_token, row_weight, num_tokens):
+    """expert_out [R, d]; scatter-add w_r * row into y[token_r]."""
+    R, d = expert_out.shape
+    y = jnp.zeros((num_tokens + 1, d), expert_out.dtype)
+    contrib = expert_out * row_weight[:, None].astype(expert_out.dtype)
+    y = y.at[row_token].add(contrib)
+    return y[:num_tokens]

@@ -1,0 +1,52 @@
+"""Per-(arch x shape) runtime knobs for the production meshes.
+
+`microbatches` is the gradient-accumulation factor for train cells — the
+paper's S3 flush period: grads are accumulated locally for k microbatches
+before the (hierarchical) cross-replica reduction commits them.  Values are
+sized so per-device activation memory fits a 16 GB v5e chip (see
+EXPERIMENTS.md §Dry-run for the resulting bytes-per-device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CellKnobs:
+    microbatches: int = 1        # S3 flush period (train only)
+    remat: bool = True           # activation checkpointing over scan units
+    grad_accum_dtype: str = "float32"  # "bfloat16" = compressed S3 (+Perf)
+    fsdp: bool = True            # ZeRO sharding of params/opt over "data"
+    shard_kv_heads: bool = True
+    pure_dp: bool = False        # model axis joins data parallelism (no TP);
+                                 # ZeRO spreads over all axes — for small archs
+    moe_a2a: bool = False        # expert-parallel all_to_all MoE routing (S2)
+    decode_unroll: bool = False  # unrolled decode layers (static cache access)
+    zero1: bool = False          # per-layer weight gather (see sharding.zero1)
+
+
+_TRAIN_MICROBATCHES = {
+    "codeqwen1.5-7b": 4,
+    "gemma2-27b": 4,
+    "minicpm-2b": 4,
+    "granite-8b": 4,
+    "kimi-k2-1t-a32b": 8,
+    "deepseek-moe-16b": 2,
+    "paligemma-3b": 2,
+    "seamless-m4t-medium": 1,
+    "mamba2-780m": 2,
+    "jamba-1.5-large-398b": 8,
+    "paper-synthetic": 1,
+}
+
+
+def knobs_for(cfg: ModelConfig, shape: ShapeConfig, **overrides) -> CellKnobs:
+    base = CellKnobs(
+        microbatches=_TRAIN_MICROBATCHES.get(cfg.name, 1) if shape.kind == "train" else 1,
+        remat=shape.kind == "train",
+    )
+    return dataclasses.replace(base, **overrides) if overrides else base

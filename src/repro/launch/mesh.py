@@ -1,0 +1,33 @@
+"""Production mesh builders.
+
+`make_production_mesh` is a FUNCTION (importing this module never touches jax
+device state).  Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod: (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the pod
+axis is pure data parallelism; gradient sync across it is the paper's
+hierarchical accumulator (reduce within pod, then across pods).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(tp: int = 1) -> Mesh:
+    """Smoke-scale mesh on whatever devices exist (usually 1 CPU device)."""
+    n = jax.device_count()
+    return jax.make_mesh(
+        (n // tp, tp), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto)
+    )
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

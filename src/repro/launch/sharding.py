@@ -1,0 +1,282 @@
+"""Sharding rules: logical axes -> mesh axes, param pspecs, activation
+constraints.
+
+The mesh axes are ("pod", "data", "model") (multi-pod) or ("data", "model")
+(single pod).  Logical roles:
+
+* batch        -> all data-parallel axes ("pod"+"data")
+* model/TP     -> "model" (attention heads, ff hidden, experts, vocab)
+* fsdp/ZeRO    -> "data" (parameter + optimizer-state sharding within a pod;
+                  cross-pod stays pure DP so gradient sync is the paper's
+                  hierarchical S3 accumulator)
+
+Activation constraints are applied through `constrain`, a no-op unless a
+`ShardingRules` context is active (so model code runs unchanged in smoke
+tests on one device).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: contextvars.ContextVar[Optional["ShardingRules"]] = contextvars.ContextVar(
+    "sharding_rules", default=None
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]        # ("pod","data") or ("data",)
+    tp_axis: str = "model"
+    tp_enabled: bool = True             # False => pure-DP (model axis joins dp)
+    fsdp_axis: Optional[object] = "data"  # str | tuple | None (ZeRO axes)
+    shard_kv_heads: bool = True
+    seq_axis: Optional[str] = None      # sequence sharding for long decode
+    moe_a2a: bool = False               # expert-parallel all_to_all MoE (S2)
+    zero1: bool = False                 # gather fsdp-sharded weights at use
+                                        # (per layer) instead of letting GSPMD
+                                        # all-reduce sharded-contraction acts
+
+    @property
+    def dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis] if self.tp_enabled else 1
+
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def axis_size(self, axis) -> int:
+        if axis is None:
+            return 1
+        names = axis if isinstance(axis, tuple) else (axis,)
+        n = 1
+        for a in names:
+            n *= self.mesh.shape[a]
+        return n
+
+    def divisible(self, n: int, axis) -> bool:
+        return axis is not None and n % self.axis_size(axis) == 0
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    token = _ACTIVE.set(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return _ACTIVE.get()
+
+
+# logical activation specs -------------------------------------------------
+
+def logical(*axes: Optional[str]) -> Tuple[Optional[str], ...]:
+    return axes
+
+
+def _resolve(rules: ShardingRules, axes) -> P:
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        elif a == "batch":
+            out.append(rules.dp)
+        elif a == "tp":
+            out.append(rules.tp_axis if rules.tp_enabled else None)
+        elif a == "seq":
+            out.append(rules.seq_axis)
+        else:  # a literal mesh axis name or tuple
+            out.append(a)
+    return P(*out)
+
+
+def constrain(x, *axes: Optional[str]):
+    """`with_sharding_constraint` against the active rules (no-op without a
+    rules context).  Axes whose mesh size does not divide the dim are dropped.
+    """
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    spec = _resolve(rules, axes)
+    fixed = []
+    for dim, a in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if a is None:
+            fixed.append(None)
+            continue
+        names = a if isinstance(a, tuple) else (a,)
+        size = 1
+        for nm in names:
+            size *= rules.mesh.shape[nm]
+        fixed.append(a if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*fixed))
+    )
+
+
+# parameter pspecs ----------------------------------------------------------
+
+def make_param_rule(cfg, rules: ShardingRules, *, fsdp_override="keep"):
+    """Returns rule(path, shape) -> PartitionSpec.  `fsdp_override=None`
+    builds the compute-time (ZeRO-1 gathered) specs: fsdp stripped, TP kept.
+    """
+    tp = rules.tp_axis if rules.tp_enabled else None
+    fsdp = rules.fsdp_axis if fsdp_override == "keep" else fsdp_override
+    tp_n = rules.tp_size()
+    heads_tp = cfg.num_heads % tp_n == 0 if cfg.num_heads else False
+    kv_tp = (
+        rules.shard_kv_heads
+        and cfg.num_kv_heads
+        and cfg.num_kv_heads % tp_n == 0
+    )
+    vocab_tp = cfg.padded_vocab % tp_n == 0
+    ff_tp = cfg.d_ff % tp_n == 0 if cfg.d_ff else True
+    exp_tp = cfg.moe is not None and cfg.moe.num_experts % tp_n == 0
+    shared_ff_tp = (
+        cfg.moe is not None
+        and cfg.moe.num_shared
+        and (cfg.moe.d_ff_expert * cfg.moe.num_shared) % tp_n == 0
+    )
+    if cfg.ssm is not None:
+        d_inner = cfg.ssm.expand * cfg.d_model
+        inner_tp = d_inner % tp_n == 0
+    else:
+        inner_tp = False
+
+    def guard(ok, axis):
+        return axis if ok else None
+
+    def fix(spec: P, shape) -> P:
+        """Drop any axis whose mesh size doesn't divide its dim."""
+        out = []
+        for dim, a in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+            out.append(a if (a is not None and dim % rules.axis_size(a) == 0) else None)
+        return P(*out)
+
+    def rule(path: str, shape) -> P:
+        r = len(shape)
+        if "embed/table" in path or "lm_head" in path:
+            return P(guard(vocab_tp, tp), fsdp)
+        if path.endswith("scale") or r <= 1:            # norms, biases, A_log...
+            return P(*([None] * r))
+        if "router" in path:
+            return P(None, None)
+        # attention
+        if "wq" in path and r == 3:
+            return P(fsdp, guard(heads_tp, tp), None)
+        if ("wk" in path or "wv" in path) and r == 3:
+            return P(fsdp, guard(kv_tp, tp), None)
+        if "wo" in path and r == 3:
+            return P(guard(heads_tp, tp), None, fsdp)
+        # moe experts
+        if rules.moe_a2a:
+            # expert-parallel a2a: E over "data" (partition owners), expert
+            # ff over the model axis (one TP psum inside the expert FFN)
+            if ("w_gate" in path or "w_up" in path) and r == 3:
+                return P("data", None, tp)
+            if "w_down" in path and r == 3:
+                return P("data", tp, None)
+        # default: expert dim over TP ("model" axis), ZeRO over data
+        if ("w_gate" in path or "w_up" in path) and r == 3:
+            return P(guard(exp_tp, tp), fsdp, None)
+        if "w_down" in path and r == 3:
+            return P(guard(exp_tp, tp), None, fsdp)
+        # moe shared-expert mlp
+        if "shared/wi" in path:
+            return P(fsdp, guard(shared_ff_tp, tp))
+        if "shared/wo" in path:
+            return P(guard(shared_ff_tp, tp), fsdp)
+        # mamba
+        if "w_z" in path or "w_x" in path:
+            return P(fsdp, guard(inner_tp, tp))
+        if "w_B" in path or "w_C" in path or "w_dt" in path:
+            return P(fsdp, None)
+        if "conv_x" in path:
+            return P(None, guard(inner_tp, tp))
+        if "conv_B" in path or "conv_C" in path:
+            return P(None, None)
+        if "mixer/w_out" in path:
+            return P(guard(inner_tp, tp), fsdp)
+        # dense mlp
+        if "wi_gate" in path or "wi_up" in path:
+            return P(fsdp, guard(ff_tp, tp))
+        if path.endswith("wo") and r == 2:
+            return P(guard(ff_tp, tp), fsdp)
+        # frontend projection etc.
+        if r == 2:
+            return P(None, fsdp)
+        return P(*([None] * r))
+
+    def fixed_rule(path, shape):
+        return fix(rule(path, shape), shape)
+
+    return fixed_rule
+
+
+def param_pspecs(cfg, params_shape, rules: ShardingRules):
+    """PartitionSpec tree for a param (shape) tree, by path+shape rules.
+
+    cfg: ModelConfig (for head counts); params_shape: tree of
+    ShapeDtypeStruct from `jax.eval_shape(init_params, ...)`.
+    """
+    rule = make_param_rule(cfg, rules)
+
+    # stacked (scanned) unit params have a leading n_units dim -> prepend None
+    def spec_for(kp, leaf) -> P:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        stacked = path.startswith("units") or "/units/" in path or path.startswith(
+            "enc_units"
+        )
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        spec = rule(path, shape)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def gather_params_for_compute(tree, cfg=None):
+    """ZeRO-1: constrain param leaves to their fsdp-STRIPPED (TP-kept) specs
+    so XLA all-gathers each weight once per use instead of all-reducing the
+    activations of the sharded contraction (no-op unless rules.zero1)."""
+    rules = _ACTIVE.get()
+    if rules is None or not getattr(rules, "zero1", False) or cfg is None:
+        return tree
+    rule = make_param_rule(cfg, rules, fsdp_override=None)
+
+    def constrain_leaf(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        spec = rule(path, leaf.shape)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(rules.mesh, spec)
+        )
+
+    return jax.tree_util.tree_map_with_path(constrain_leaf, tree)
+
+
+def named(rules: ShardingRules, spec: P) -> NamedSharding:
+    return NamedSharding(rules.mesh, spec)
+
+
+def tree_shardings(rules: ShardingRules, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s),
+        pspec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,334 @@
+"""Step builders + input specs for every (arch x shape) cell.
+
+`input_specs` returns `jax.ShapeDtypeStruct` stand-ins (weak-type-correct,
+shardable, no device allocation) for every input of the lowered step —
+including params, optimizer state and KV caches — together with the matching
+`NamedSharding` trees.
+
+train_step = the paper's pattern composition:
+  S3 (accumulator): grads accumulated locally over `microbatches` before the
+     cross-replica commit (GSPMD reduce) — the flush period.
+  S5 (separate task/state): fwd+bwd is the stateless f; the sharded AdamW
+     update is the state commit s.
+serve_step = S2 (partitioned): each data shard owns its requests' caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.launch.cells import CellKnobs, knobs_for
+from repro.launch.sharding import ShardingRules, param_pspecs, use_rules
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+def make_rules(mesh: Mesh, cfg: ModelConfig, knobs: CellKnobs) -> ShardingRules:
+    if knobs.pure_dp:
+        dp = mesh_lib.dp_axes(mesh) + ("model",)
+        return ShardingRules(
+            mesh=mesh,
+            dp_axes=dp,
+            tp_axis="model",
+            tp_enabled=False,
+            fsdp_axis=dp if knobs.fsdp else None,
+            shard_kv_heads=False,
+            zero1=knobs.zero1,
+        )
+    return ShardingRules(
+        mesh=mesh,
+        dp_axes=mesh_lib.dp_axes(mesh),
+        tp_axis="model",
+        fsdp_axis="data" if knobs.fsdp else None,
+        shard_kv_heads=knobs.shard_kv_heads,
+        moe_a2a=knobs.moe_a2a,
+        zero1=knobs.zero1,
+    )
+
+
+def _dp(rules: ShardingRules):
+    return rules.dp
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins + shardings)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(
+    cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules, knobs: CellKnobs
+) -> Tuple[dict, dict]:
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the data batch."""
+    dp = _dp(rules)
+    B, S = shape.global_batch, shape.seq_len
+    fd = cfg.frontend_dim or cfg.d_model
+    if shape.kind == "train":
+        k = knobs.microbatches
+        assert B % k == 0, (B, k)
+        mb = B // k
+        specs = {
+            "tokens": _sds((k, mb, S), "int32"),
+            "labels": _sds((k, mb, S), "int32"),
+        }
+        pspecs = {"tokens": P(None, dp, None), "labels": P(None, dp, None)}
+        if cfg.num_prefix_embeds:
+            specs["prefix_embeds"] = _sds((k, mb, cfg.num_prefix_embeds, fd), "float32")
+            pspecs["prefix_embeds"] = P(None, dp, None, None)
+        if cfg.encoder_layers:
+            specs["src_embeds"] = _sds((k, mb, S // 4, fd), "float32")
+            pspecs["src_embeds"] = P(None, dp, None, None)
+        return specs, pspecs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, S), "int32")}
+        pspecs = {"tokens": P(dp, None)}
+        if cfg.num_prefix_embeds:
+            specs["prefix_embeds"] = _sds((B, cfg.num_prefix_embeds, fd), "float32")
+            pspecs["prefix_embeds"] = P(dp, None, None)
+        if cfg.encoder_layers:
+            specs["src_embeds"] = _sds((B, S // 4, fd), "float32")
+            pspecs["src_embeds"] = P(dp, None, None)
+        return specs, pspecs
+    # decode
+    specs = {"tokens": _sds((B, 1), "int32"), "index": _sds((), "int32")}
+    batch_shardable = B % rules.dp_size() == 0
+    pspecs = {"tokens": P(dp if batch_shardable else None, None), "index": P()}
+    if cfg.encoder_layers:
+        specs["enc_out"] = _sds((B, S // 4, cfg.d_model), cfg.compute_dtype)
+        pspecs["enc_out"] = P(dp if batch_shardable else None, None, None)
+    return specs, pspecs
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules):
+    """PartitionSpec tree matching `T.init_caches` output."""
+    from repro.models import attention as attn_lib
+
+    dp = _dp(rules)
+    tp = rules.tp_axis
+    B = shape.global_batch
+    batch_shardable = B % rules.dp_size() == 0
+    _, kv_heads = attn_lib.padded_head_counts(
+        cfg.num_heads, cfg.num_kv_heads, rules.tp_size()
+    )
+    kv_tp = rules.shard_kv_heads and kv_heads and kv_heads % rules.tp_size() == 0
+
+    def kv_spec(stacked: bool):
+        if batch_shardable:
+            spec = P(dp, None, tp if kv_tp else None, None)
+        else:  # long-context decode: shard the sequence axis instead
+            spec = P(None, dp, tp if kv_tp else None, None)
+        return P(None, *spec) if stacked else spec
+
+    def mamba_spec(stacked: bool):
+        if cfg.ssm is None:
+            return None
+        from repro.models import mamba2
+        d_inner, H = mamba2.dims(cfg.d_model, cfg.ssm)
+        inner_tp = d_inner % rules.tp_size() == 0
+        if batch_shardable:
+            h_spec = P(dp, tp if H % rules.tp_size() == 0 else None, None, None)
+            cx_spec = P(dp, None, tp if inner_tp else None)
+            cbc_spec = P(dp, None, None)
+        else:
+            # long-context decode, batch=1: spread heads over all axes
+            flat = []
+            for a in (dp, tp):
+                flat.extend(a if isinstance(a, tuple) else (a,))
+            both = rules.dp_size() * rules.tp_size()
+            if H % both == 0:
+                h_spec = P(None, tuple(flat), None, None)
+            elif H % rules.tp_size() == 0:
+                h_spec = P(None, tp, None, None)
+            else:
+                h_spec = P(None, None, None, None)
+            cx_spec = P(None, None, tp if inner_tp else None)
+            cbc_spec = P(None, None, None)
+        return {
+            "h": h_spec, "conv_x": cx_spec, "conv_B": cbc_spec, "conv_C": cbc_spec,
+        }
+
+    prefix, unit, n_units = cfg.layout()
+
+    def one(spec_l, stacked):
+        if spec_l.mixer == "mamba":
+            ms = mamba_spec(False)
+            if stacked:
+                ms = {k: P(None, *v) for k, v in ms.items()}
+            return ms
+        return kv_spec(stacked)
+
+    return {
+        "prefix": tuple(one(s, False) for s in prefix),
+        "units": {f"l{i}": one(s, True) for i, s in enumerate(unit)},
+    }
+
+
+def model_specs(cfg: ModelConfig, rules: ShardingRules):
+    """(params ShapeDtypeStruct tree, params PartitionSpec tree)."""
+    params_shape = jax.eval_shape(
+        functools.partial(T.init_params, cfg), jax.random.PRNGKey(0)
+    )
+    pspecs = param_pspecs(cfg, params_shape, rules)
+    return params_shape, pspecs
+
+
+def opt_specs(params_shape, params_pspecs):
+    m = jax.tree.map(lambda s: _sds(s.shape, "float32"), params_shape)
+    state_shape = {"m": m, "v": m, "step": _sds((), "int32")}
+    state_pspecs = {"m": params_pspecs, "v": params_pspecs, "step": P()}
+    return state_shape, state_pspecs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, tp: int = 1):
+    B = shape.global_batch
+    # VLM prompts prepend the image-patch embeddings to the cache
+    s_max = shape.seq_len + (cfg.num_prefix_embeds or 0)
+    return jax.eval_shape(lambda: T.init_caches(cfg, B, s_max, cfg.cdtype, tp=tp))
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build_train_step(
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    knobs: CellKnobs,
+    opt_cfg: Optional[adamw.AdamWConfig] = None,
+):
+    run_cfg = dataclasses.replace(cfg, remat=knobs.remat)
+    accum_dtype = jnp.dtype(knobs.grad_accum_dtype)
+    if opt_cfg is None:
+        opt_cfg = adamw.AdamWConfig(
+            schedule="wsd" if cfg.name == "minicpm-2b" else "cosine"
+        )
+
+    def train_step(params, opt_state, batch):
+        """batch leaves have leading [k, mb, ...] (k = S3 flush period)."""
+
+        def loss_fn(p, mb):
+            loss, metrics = T.train_forward(p, mb, run_cfg)
+            return loss, metrics
+
+        def micro(carry, mb):
+            loss_acc, g_acc = carry
+            (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(accum_dtype), g_acc, g
+            )
+            return (loss_acc + loss, g_acc), None
+
+        k = jax.tree.leaves(batch)[0].shape[0]
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        (loss_sum, grads), _ = jax.lax.scan(micro, (jnp.float32(0.0), g0), batch)
+        grads = jax.tree.map(lambda g: (g / k), grads)
+        new_params, new_opt, om = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics = {"loss": loss_sum / k, **om}
+        return new_params, new_opt, metrics
+
+    def wrapped(params, opt_state, batch):
+        with use_rules(rules):
+            return train_step(params, opt_state, batch)
+
+    return wrapped
+
+
+def build_prefill_step(cfg: ModelConfig, rules: ShardingRules):
+    def prefill_step(params, caches, batch):
+        with use_rules(rules):
+            logits, new_caches = T.prefill_forward(params, batch, cfg, caches)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok, new_caches
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, rules: ShardingRules):
+    def serve_step(params, caches, batch):
+        """One decode step: tokens [B,1] + caches @ index -> next token."""
+        with use_rules(rules):
+            dec = {"tokens": batch["tokens"]}
+            if "enc_out" in batch:
+                dec["enc_out"] = batch["enc_out"]
+            logits, new_caches = T.decode_forward(
+                params, dec, cfg, caches, batch["index"]
+            )
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return next_tok, new_caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# the full lowering bundle for one (arch x shape x mesh) cell
+# ---------------------------------------------------------------------------
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    **knob_overrides,
+):
+    """Returns (lowered, meta) — `.compile()` on the result is the dry-run."""
+    knobs = knobs_for(cfg, shape, **knob_overrides)
+    rules = make_rules(mesh, cfg, knobs)
+    params_shape, params_ps = model_specs(cfg, rules)
+    b_specs, b_ps = batch_specs(cfg, shape, rules, knobs)
+
+    def shard(ps_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            ps_tree,
+            is_leaf=lambda s: isinstance(s, P),
+        )
+
+    meta: Dict[str, Any] = {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "knobs": dataclasses.asdict(knobs),
+    }
+
+    if shape.kind == "train":
+        opt_shape, opt_ps = opt_specs(params_shape, params_ps)
+        step = build_train_step(cfg, rules, knobs)
+        jitted = jax.jit(
+            step,
+            in_shardings=(shard(params_ps), shard(opt_ps), shard(b_ps)),
+            out_shardings=(shard(params_ps), shard(opt_ps), None),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_shape, opt_shape, b_specs)
+    else:
+        c_shape = cache_specs(cfg, shape, tp=rules.tp_size())
+        c_ps = cache_pspecs(cfg, shape, rules)
+        serve_cfg = dataclasses.replace(cfg, decode_unroll=knobs.decode_unroll)
+        if shape.kind == "prefill":
+            step = build_prefill_step(serve_cfg, rules)
+        else:
+            step = build_serve_step(serve_cfg, rules)
+        jitted = jax.jit(
+            step,
+            in_shardings=(shard(params_ps), shard(c_ps), shard(b_ps)),
+            out_shardings=(None, shard(c_ps)),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_shape, c_shape, b_specs)
+    return lowered, meta

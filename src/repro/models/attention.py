@@ -1,0 +1,382 @@
+"""GQA attention: full / sliding-window / prefix-LM / bidirectional / cross,
+with train (full-seq), prefill (cache write) and decode (cache read) paths.
+
+The full-seq path is *block-chunked with online softmax* (the same dataflow as
+the Pallas TPU kernel in `repro.kernels.flash_attention`): q is processed in
+static blocks and, for causal/sliding masks, each q block only visits the kv
+blocks its mask admits — so the lowered HLO carries the *true* FLOP/byte
+counts into the dry-run roofline instead of a dense S x S attention.
+
+`attend_naive` is the O(S^2)-materializing oracle used by tests and smoke
+configs.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+
+NEG_INF = -2.0e38
+
+# mask modes
+CAUSAL = "causal"
+SLIDING = "sliding"
+PREFIX = "prefix"   # bidirectional over [0, prefix_len), causal after
+BIDIR = "bidir"
+
+
+def init_attention(key, d_model, n_heads, n_kv, head_dim, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d_model**-0.5
+    return {
+        "wq": layers.truncated_normal(kq, (d_model, n_heads, head_dim), dtype, s),
+        "wk": layers.truncated_normal(kk, (d_model, n_kv, head_dim), dtype, s),
+        "wv": layers.truncated_normal(kv, (d_model, n_kv, head_dim), dtype, s),
+        "wo": layers.truncated_normal(
+            ko, (n_heads, head_dim, d_model), dtype, (n_heads * head_dim) ** -0.5
+        ),
+    }
+
+
+def padded_head_counts(n_heads: int, n_kv: int, tp: int):
+    """TP head padding: if Hq doesn't divide over the model axis, pad q heads
+    (zeros) to the next multiple of tp and kv heads by the same group ratio.
+    Returns (Hq_pad, Hkv_pad) — unchanged when padding can't help (e.g. MQA
+    with tiny head counts), in which case attention stays TP-replicated
+    (recorded per-arch in DESIGN.md)."""
+    if tp <= 1 or n_heads == 0 or n_heads % tp == 0:
+        return n_heads, n_kv
+    g = n_heads // n_kv
+    hq_pad = -(-n_heads // tp) * tp
+    kv_pad = hq_pad // g
+    if hq_pad % g or kv_pad % tp:
+        return n_heads, n_kv
+    return hq_pad, kv_pad
+
+
+def _pad_heads(t, n_pad):
+    h = t.shape[2]
+    if n_pad == h:
+        return t
+    return jnp.pad(t, ((0, 0), (0, 0), (0, n_pad - h), (0, 0)))
+
+
+def _mask_bias(q_pos, k_pos, mode: str, window: int, prefix_len: int):
+    """Additive fp32 bias [len(q_pos), len(k_pos)]."""
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    if mode == BIDIR:
+        allowed = jnp.ones(q.shape[:1] + k.shape[1:], dtype=bool)
+    elif mode == CAUSAL:
+        allowed = k <= q
+    elif mode == SLIDING:
+        allowed = (k <= q) & (k > q - window)
+    elif mode == PREFIX:
+        allowed = (k <= q) | ((k < prefix_len) & (q < prefix_len)) | (
+            (k < prefix_len) & (q >= prefix_len)
+        )
+    else:  # pragma: no cover
+        raise ValueError(mode)
+    return jnp.where(allowed, 0.0, NEG_INF)
+
+
+def _gqa_scores(q, k):
+    """q [B,bq,Hq,hd], k [B,bk,Hkv,hd] -> [B,Hq,bq,bk] (fp32 accumulate)."""
+    B, bq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, bq, Hkv, g, hd)
+    s = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg, k, preferred_element_type=jnp.float32
+    )
+    return s.reshape(B, Hq, bq, k.shape[1])
+
+
+def _gqa_pv(p, v):
+    """p [B,Hq,bq,bk] fp32, v [B,bk,Hkv,hd] -> [B,bq,Hq,hd]."""
+    B, Hq, bq, bk = p.shape
+    Hkv = v.shape[2]
+    g = Hq // Hkv
+    pg = p.reshape(B, Hkv, g, bq, bk)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", pg.astype(v.dtype), v)
+    return o.reshape(B, bq, Hq, v.shape[3])
+
+
+def attend_naive(
+    q, k, v, *, mode=CAUSAL, window=0, prefix_len=0, softcap=0.0,
+    q_offset=0, kv_valid_len: Optional[jax.Array] = None,
+):
+    """Materializing oracle. q [B,Sq,Hq,hd]; k,v [B,Skv,Hkv,hd]."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    hd = q.shape[-1]
+    scores = _gqa_scores(q, k) / math.sqrt(hd)
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Skv)
+    scores = scores + _mask_bias(q_pos, k_pos, mode, window, prefix_len)
+    if kv_valid_len is not None:
+        scores = jnp.where(
+            (k_pos < kv_valid_len)[None, None, None, :], scores, NEG_INF
+        )
+    p = jax.nn.softmax(scores, axis=-1)
+    return _gqa_pv(p, v)
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest power-of-two-ish block <= target dividing n (MXU-friendly)."""
+    for b in (target, 2048, 1024, 512, 384, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if b <= target and n % b == 0:
+            return b
+    return 1
+
+
+def _online_block(q_blk, k_blk, v_blk, carry, bias, softcap):
+    """One kv block of online softmax. carry = (m, l, acc)."""
+    m, l, acc = carry
+    hd = q_blk.shape[-1]
+    s = _gqa_scores(q_blk, k_blk) / math.sqrt(hd)  # [B,H,bq,bk] fp32
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + bias
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    scale = jnp.exp(m - m_new)
+    l_new = l * scale + p.sum(axis=-1)
+    acc_new = acc * scale[..., None] + _gqa_pv_f32(p, v_blk)
+    return m_new, l_new, acc_new
+
+
+def _gqa_pv_f32(p, v):
+    """p fp32 -> cast to v dtype for the MXU matmul, accumulate fp32 (flash
+    kernel convention; avoids materializing an fp32 copy of v)."""
+    B, Hq, bq, bk = p.shape
+    Hkv = v.shape[2]
+    g = Hq // Hkv
+    pg = p.reshape(B, Hkv, g, bq, bk)
+    o = jnp.einsum(
+        "bkgqs,bskh->bkgqh", pg.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, Hq, bq, v.shape[3])  # [B,H,bq,hd] fp32
+
+
+def attend_chunked(
+    q, k, v, *, mode=CAUSAL, window=0, prefix_len=0, softcap=0.0,
+    block_q=1024, block_k=1024,
+):
+    """Blocked online-softmax attention with static mask-aware block skipping.
+
+    Python loop over q blocks (static); per q block a `lax.scan` over exactly
+    the kv blocks admitted by the mask => lowered FLOPs match the real kernel.
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv = k.shape[1]
+    block_q = _pick_block(Sq, block_q)
+    block_k = _pick_block(Skv, block_k)
+    nq = Sq // block_q
+
+    outs = []
+    for qi in range(nq):
+        q_blk = lax.slice_in_dim(q, qi * block_q, (qi + 1) * block_q, axis=1)
+        q_lo, q_hi = qi * block_q, (qi + 1) * block_q  # static bounds
+        # static kv block range admitted by the mask
+        if mode == CAUSAL:
+            k_lo, k_hi = 0, q_hi
+        elif mode == SLIDING:
+            k_lo, k_hi = max(0, q_lo - window), q_hi
+        elif mode == PREFIX:
+            k_lo, k_hi = 0, max(q_hi, prefix_len)
+        else:  # BIDIR
+            k_lo, k_hi = 0, Skv
+        k_lo = (k_lo // block_k) * block_k
+        k_hi = min(int(math.ceil(k_hi / block_k)) * block_k, Skv)
+        nk = (k_hi - k_lo) // block_k
+
+        q_pos = jnp.arange(q_lo, q_hi)
+
+        def body(carry, ki):
+            # slice kv blocks in place (no transposed block copies)
+            k_blk = lax.dynamic_slice_in_dim(k, k_lo + ki * block_k, block_k, axis=1)
+            v_blk = lax.dynamic_slice_in_dim(v, k_lo + ki * block_k, block_k, axis=1)
+            k_pos = k_lo + ki * block_k + jnp.arange(block_k)
+            bias = _mask_bias(q_pos, k_pos, mode, window, prefix_len)
+            return _online_block(q_blk, k_blk, v_blk, carry, bias, softcap), None
+
+        m0 = jnp.full((B, Hq, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hq, block_q), jnp.float32)
+        a0 = jnp.zeros((B, Hq, block_q, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(body, (m0, l0, a0), jnp.arange(nk))
+        o = acc / jnp.maximum(l, 1e-37)[..., None]
+        outs.append(o.swapaxes(1, 2).astype(q.dtype))  # [B,bq,H,hd]
+    return jnp.concatenate(outs, axis=1)
+
+
+def attend_decode(
+    q, cache_k, cache_v, *, kv_valid_len, k_new=None, v_new=None,
+    softcap=0.0, window=0, block_k=4096,
+):
+    """Single/few-token query against a long KV cache (memory-bound).
+
+    Chunked over kv (lax.scan, in-place block slices) with online softmax;
+    positions >= kv_valid_len are masked (and, for sliding windows, positions
+    <= kv_valid_len - window).  `k_new`/`v_new` [B, Sq, Hkv, hd] are the
+    query step's own k/v — attended WITHOUT being written to the cache, so
+    the caller can commit a token-sized cache update instead of copying the
+    whole cache (flash-decode convention).
+    q: [B, Sq(small), Hq, hd]; cache: [B, S_max, Hkv, hd].
+    """
+    B, Sq, Hq, hd = q.shape
+    S_max = cache_k.shape[1]
+    block_k = _pick_block(S_max, block_k)
+    nk = S_max // block_k
+
+    m0 = jnp.full((B, Hq, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hq, Sq, hd), jnp.float32)
+    carry0 = (m0, l0, a0)
+    if k_new is not None:
+        # the current token(s): causal over the step, always in-window
+        bias0 = _mask_bias(jnp.arange(Sq), jnp.arange(Sq), CAUSAL, 0, 0)
+        carry0 = _online_block(q, k_new, v_new, carry0, bias0, softcap)
+
+    kv_valid_len = jnp.asarray(kv_valid_len)
+    per_slot = kv_valid_len.ndim == 1  # ragged continuous batching
+
+    # sliding windows only need ceil(window/block)+1 blocks ending at the
+    # current position — read just those instead of streaming the whole cache
+    if window and window < S_max and not per_slot:
+        nk = min(nk, window // block_k + 1)
+        first_block = jnp.maximum(kv_valid_len - window, 0) // block_k
+    else:
+        first_block = jnp.int32(0)
+
+    def body(carry, bi):
+        ki = first_block + bi
+        k_blk = lax.dynamic_slice_in_dim(cache_k, ki * block_k, block_k, axis=1)
+        v_blk = lax.dynamic_slice_in_dim(cache_v, ki * block_k, block_k, axis=1)
+        k_pos = ki * block_k + jnp.arange(block_k)
+        if per_slot:
+            valid = k_pos[None, :] < kv_valid_len[:, None]  # [B, bk]
+            if window:
+                valid &= k_pos[None, :] > kv_valid_len[:, None] - window
+            bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+        else:
+            valid = k_pos < kv_valid_len
+            if window:
+                valid &= k_pos > kv_valid_len - window
+            bias = jnp.where(valid, 0.0, NEG_INF)[None, :]  # [1(bq), bk]
+        return _online_block(q, k_blk, v_blk, carry, bias, softcap), None
+
+    (m, l, acc), _ = lax.scan(body, carry0, jnp.arange(nk))
+    o = acc / jnp.maximum(l, 1e-37)[..., None]
+    return o.swapaxes(1, 2).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention sub-layer (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def attention_block(
+    x,
+    params,
+    *,
+    mode: str,
+    rope_theta: float,
+    window: int = 0,
+    prefix_len: int = 0,
+    softcap: float = 0.0,
+    positions=None,
+    cache: Optional[dict] = None,
+    cache_index=None,
+    use_naive: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """x [B,S,d].  Returns (out [B,S,d], new_cache).
+
+    * cache is None: full-sequence attention (train).
+    * cache + mode != decode: prefill — writes k/v into the cache.
+    * cache + S small + cache_index: decode — reads the cache.
+    """
+    from repro.launch.sharding import active_rules, constrain
+
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"].astype(x.dtype))
+
+    rules = active_rules()
+    n_heads, n_kv = q.shape[2], k.shape[2]
+    if rules is not None:
+        hq_pad, kv_pad = padded_head_counts(n_heads, n_kv, rules.tp_size())
+        if hq_pad != n_heads:
+            q, k, v = _pad_heads(q, hq_pad), _pad_heads(k, kv_pad), _pad_heads(v, kv_pad)
+        q = constrain(q, "batch", None, "tp", None)
+        k = constrain(k, "batch", None, "tp", None)
+        v = constrain(v, "batch", None, "tp", None)
+
+    if positions is None:
+        base = jnp.asarray(cache_index if cache_index is not None else 0)
+        base = jnp.atleast_1d(base)  # scalar or per-slot [B] (ragged batching)
+        positions = base[:, None] + jnp.arange(S)[None, :]
+    q = layers.rope(q, positions, rope_theta)
+    k = layers.rope(k, positions, rope_theta)
+
+    new_cache = None
+    if cache is not None and cache_index is not None and S < cache["k"].shape[1]:
+        # decode: attend over cache + the step's own k/v; return a TOKEN-sized
+        # update so the caller commits it in place (no full-cache copy)
+        idx = cache_index
+        o = attend_decode(
+            q, cache["k"], cache["v"], kv_valid_len=idx,
+            k_new=k, v_new=v, softcap=softcap,
+            window=window if mode == SLIDING else 0,
+        )
+        new_cache = {
+            "k_tok": k.astype(cache["k"].dtype),
+            "v_tok": v.astype(cache["v"].dtype),
+        }
+    else:
+        if cache is not None:  # prefill: persist k/v
+            ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            new_cache = {"k": ck, "v": cv}
+        attend = attend_naive if (use_naive or S <= 256) else attend_chunked
+        o = attend(
+            q, k, v, mode=mode, window=window, prefix_len=prefix_len, softcap=softcap
+        )
+    o = o[:, :, :n_heads]  # drop TP-padding heads (exact: their wo rows absent)
+    out = jnp.einsum("bsnh,nhd->bsd", o, params["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def init_cross_attention(key, d_model, n_heads, n_kv, head_dim, dtype) -> dict:
+    return init_attention(key, d_model, n_heads, n_kv, head_dim, dtype)
+
+
+def cross_attention_block(x, params, enc_kv: dict) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder k/v (no rope)."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
+    big = q.shape[1] * enc_kv["k"].shape[1] > (1 << 20)
+    attend = attend_chunked if big else attend_naive
+    o = attend(q, enc_kv["k"], enc_kv["v"], mode=BIDIR)
+    return jnp.einsum("bsnh,nhd->bsd", o, params["wo"].astype(x.dtype))
+
+
+def encode_cross_kv(enc_out, params) -> dict:
+    k = jnp.einsum("bsd,dnh->bsnh", enc_out, params["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dnh->bsnh", enc_out, params["wv"].astype(enc_out.dtype))
+    return {"k": k, "v": v}
+
+
+def init_kv_cache(batch, s_max, n_kv, head_dim, dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
+    }

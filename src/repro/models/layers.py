@@ -1,0 +1,126 @@
+"""Shared layer primitives: norms, embeddings, RoPE, MLPs, softcap.
+
+Pure-functional: params are nested dicts of arrays; every `init_*` has a
+matching `apply` and a matching PartitionSpec tree builder in
+`repro.launch.sharding` (logical axis names are attached here via the
+`AXES` side tables).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Logical axis vocabulary (mapped to mesh axes in repro/launch/sharding.py):
+#   "vocab"   - vocabulary dim
+#   "embed"   - d_model dim
+#   "heads"   - attention head dim (q heads)
+#   "kv"      - kv head dim
+#   "ff"      - mlp hidden dim
+#   "expert"  - expert dim
+#   "fsdp"    - dim to shard for ZeRO/FSDP (usually the largest non-TP dim)
+
+
+def truncated_normal(key, shape, dtype, stddev: float):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype=dtype)}  # gemma-style (1+scale)
+
+
+def rmsnorm(x, params, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": truncated_normal(key, (vocab, d), dtype, 0.02)}
+
+
+def embed(tokens, params, *, scale: bool, d_model: int, compute_dtype):
+    x = jnp.take(params["table"], tokens, axis=0).astype(compute_dtype)
+    if scale:
+        x = x * jnp.asarray(jnp.sqrt(d_model), compute_dtype)
+    return x
+
+
+def unembed(x, embed_params, *, softcap: float = 0.0):
+    logits = jnp.einsum(
+        "...d,vd->...v", x, embed_params["table"].astype(x.dtype)
+    ).astype(jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] int32."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, half]
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": truncated_normal(k1, (d, ff), dtype, d**-0.5),
+        "wi_up": truncated_normal(k2, (d, ff), dtype, d**-0.5),
+        "wo": truncated_normal(k3, (ff, d), dtype, ff**-0.5),
+    }
+
+
+def mlp(x, params, activation: str):
+    act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
+    gate = act(jnp.einsum("...d,df->...f", x, params["wi_gate"].astype(x.dtype)))
+    up = jnp.einsum("...d,df->...f", x, params["wi_up"].astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", gate * up, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def cross_entropy_loss(logits, labels, *, ignore_id: int = -1):
+    """Mean token NLL in fp32; labels==ignore_id are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = labels != ignore_id
+    labels_safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

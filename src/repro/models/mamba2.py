@@ -1,0 +1,255 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+TPU adaptation (DESIGN §8): the GPU reference uses a hardware-aware parallel
+scan (warp shuffles); on TPU we use the *chunked SSD* formulation, which is
+the paper's own "restricted state update" insight applied along time — the
+sequence is split into chunks, intra-chunk terms are dense MXU matmuls, and
+only a small [heads, headdim, d_state] state is carried across chunks by a
+`lax.scan` (the serial fraction, tiny by construction).
+
+Shapes follow the Mamba2 paper: d_inner = expand * d_model, heads =
+d_inner / headdim, state N = d_state, one shared B/C group (ngroups=1).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+from repro.models.config import SSMConfig
+
+
+def dims(d_model: int, ssm: SSMConfig) -> Tuple[int, int]:
+    d_inner = ssm.expand * d_model
+    n_heads = d_inner // ssm.headdim
+    return d_inner, n_heads
+
+
+def init_mamba(key, d_model: int, ssm: SSMConfig, dtype) -> dict:
+    """In-projections are SPLIT (not fused) so that each output dim shards
+    cleanly over the model axis: z/x are TP-sharded on d_inner (head-major,
+    so heads stay shard-local in the SSD math); B/C/dt are tiny and stay
+    replicated (sharding d_state would put a psum inside the scan)."""
+    d_inner, n_heads = dims(d_model, ssm)
+    N, G = ssm.d_state, ssm.ngroups
+    k = jax.random.split(key, 8)
+    s = d_model**-0.5
+    return {
+        "w_z": layers.truncated_normal(k[0], (d_model, d_inner), dtype, s),
+        "w_x": layers.truncated_normal(k[1], (d_model, d_inner), dtype, s),
+        "w_B": layers.truncated_normal(k[2], (d_model, G * N), dtype, s),
+        "w_C": layers.truncated_normal(k[3], (d_model, G * N), dtype, s),
+        "w_dt": layers.truncated_normal(k[4], (d_model, n_heads), dtype, s),
+        "conv_x": layers.truncated_normal(k[5], (ssm.conv_width, d_inner), dtype, 0.1),
+        "conv_B": layers.truncated_normal(k[6], (ssm.conv_width, G * N), dtype, 0.1),
+        "conv_C": layers.truncated_normal(k[7], (ssm.conv_width, G * N), dtype, 0.1),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)
+        ),  # A = -exp(A_log), per head
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": layers.init_rmsnorm(d_inner, dtype),
+        "w_out": layers.truncated_normal(
+            jax.random.fold_in(key, 99), (d_inner, d_model), dtype, d_inner**-0.5
+        ),
+    }
+
+
+def _causal_conv(x, conv_w, conv_state=None):
+    """Depthwise causal conv over time.  x [B,S,D]; conv_w [W,D].
+
+    Returns (y, new_conv_state[W-1 last inputs]) when conv_state given."""
+    W = conv_w.shape[0]
+    if conv_state is not None:
+        x_ext = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    else:
+        x_ext = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = sum(
+        x_ext[:, i : i + x.shape[1], :] * conv_w[i].astype(x.dtype) for i in range(W)
+    )
+    new_state = x_ext[:, -(W - 1) :, :] if W > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(xh, dt, A, Bmat, Cmat, chunk: int):
+    """Chunked SSD scan.
+
+    xh  [B, S, H, P]   (P = headdim)
+    dt  [B, S, H]      (softplus'd step sizes, fp32)
+    A   [H]            (negative reals, fp32)
+    Bmat/Cmat [B, S, G, N] (G broadcasts over H)
+    Returns y [B, S, H, P] and final state [B, H, P, N].
+    """
+    Bsz, S, H, P = xh.shape
+    G, N = Bmat.shape[2], Bmat.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    # fp32 decay math, bf16 matmuls
+    dA = dt * A[None, None, :]                       # [B,S,H] (negative)
+    x_dt = xh * dt[..., None].astype(xh.dtype)       # fold dt into x
+
+    def reshape_c(t):
+        return t.reshape((Bsz, nc, chunk) + t.shape[2:])
+
+    xc, dAc = reshape_c(x_dt), reshape_c(dA)
+    Bc, Cc = reshape_c(Bmat), reshape_c(Cmat)
+
+    cum = jnp.cumsum(dAc, axis=2)                    # [B,nc,c,H]
+    seg_total = cum[:, :, -1]                        # [B,nc,H]
+
+    # intra-chunk (diagonal block): y = (C B^T * L) x
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    Bh = jnp.repeat(Bc, rep, axis=3) if G != H else Bc      # [B,nc,c,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3) if G != H else Cc
+    scores = jnp.einsum("bnihd,bnjhd->bnhij", Ch, Bh)        # [B,nc,H,c,c]
+    li = cum[..., None]                                       # [B,nc,c,H,1]
+    decay = jnp.exp(
+        jnp.clip(
+            cum.transpose(0, 1, 3, 2)[..., :, None]
+            - cum.transpose(0, 1, 3, 2)[..., None, :],
+            -60.0,
+            0.0,
+        )
+    )  # [B,nc,H,c,c], lower triangle valid
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask, decay, 0.0)
+    y_diag = jnp.einsum(
+        "bnhij,bnjhp->bnihp", (scores * L).astype(xh.dtype), xc
+    )
+
+    # chunk input -> state contribution: states = sum_j exp(total - cum_j) B_j x_j
+    in_decay = jnp.exp(jnp.clip(seg_total[:, :, None] - cum, -60.0, 0.0))  # [B,nc,c,H]
+    states = jnp.einsum(
+        "bnjhd,bnjhp->bnhdp", (Bh * in_decay[..., None]).astype(xh.dtype), xc
+    )  # [B,nc,H,N,P]
+
+    # inter-chunk recurrence over nc (the tiny serial fraction)
+    def carry_fn(h_prev, inp):
+        st, tot = inp  # [B,H,N,P], [B,H]
+        h_new = h_prev * jnp.exp(jnp.clip(tot, -60.0, 0.0))[..., None, None] + st.astype(
+            jnp.float32
+        )
+        return h_new, h_prev
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    h_final, h_prevs = lax.scan(
+        carry_fn,
+        h0,
+        (states.swapaxes(0, 1), seg_total.swapaxes(0, 1)),
+    )
+    h_prevs = h_prevs.swapaxes(0, 1)  # [B,nc,H,N,P] state entering each chunk
+
+    # state -> chunk output: y_off = C_i exp(cum_i) h_prev
+    out_decay = jnp.exp(jnp.clip(cum, -60.0, 0.0))  # [B,nc,c,H]
+    y_off = jnp.einsum(
+        "bnihd,bnhdp->bnihp",
+        (Ch * out_decay[..., None]).astype(xh.dtype),
+        h_prevs.astype(xh.dtype),
+    )
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, h_final  # [B,H,N,P]
+
+
+def ssd_decode_step(xh, dt, A, Bvec, Cvec, h):
+    """Single-token recurrence.  xh [B,1,H,P], Bvec/Cvec [B,1,G,N],
+    h [B,H,N,P] fp32.  Returns (y [B,1,H,P], h_new)."""
+    Bsz, _, H, P = xh.shape
+    G, N = Bvec.shape[2], Bvec.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bvec[:, 0], rep, axis=1) if G != H else Bvec[:, 0]  # [B,H,N]
+    Ch = jnp.repeat(Cvec[:, 0], rep, axis=1) if G != H else Cvec[:, 0]
+    dA = jnp.exp(jnp.clip(dt[:, 0] * A[None, :], -60.0, 0.0))  # [B,H]
+    upd = jnp.einsum("bhd,bhp->bhdp", Bh.astype(jnp.float32), (xh[:, 0] * dt[:, 0, :, None].astype(xh.dtype)).astype(jnp.float32))
+    h_new = h * dA[..., None, None] + upd
+    y = jnp.einsum("bhd,bhdp->bhp", Ch.astype(jnp.float32), h_new)
+    return y[:, None].astype(xh.dtype), h_new
+
+
+def mamba_block(
+    x,
+    params,
+    ssm: SSMConfig,
+    *,
+    norm_eps: float,
+    state: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """x [B,S,d_model].  state = {"h": [B,H,N,P] fp32, "conv": [B,W-1,Dconv]}
+    for decode (S small); None for train/prefill.
+
+    Returns (out, new_state) — new_state is populated whenever state was given
+    (decode) or prefill needs to hand a state to subsequent decode."""
+    Bsz, S, d_model = x.shape
+    d_inner, H = dims(d_model, ssm)
+    G, N, P = ssm.ngroups, ssm.d_state, ssm.headdim
+
+    cd = x.dtype
+    z = jnp.einsum("bsd,di->bsi", x, params["w_z"].astype(cd))
+    xr = jnp.einsum("bsd,di->bsi", x, params["w_x"].astype(cd))
+    Bm = jnp.einsum("bsd,dn->bsn", x, params["w_B"].astype(cd))
+    Cm = jnp.einsum("bsd,dn->bsn", x, params["w_C"].astype(cd))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["w_dt"].astype(cd))
+
+    cs = state if state is not None else {}
+    xr, new_cx = _causal_conv(xr, params["conv_x"], cs.get("conv_x"))
+    Bm, new_cb = _causal_conv(Bm, params["conv_B"], cs.get("conv_B"))
+    Cm, new_cc = _causal_conv(Cm, params["conv_C"], cs.get("conv_C"))
+
+    xh = xr.reshape(Bsz, S, H, P)
+    Bmat = Bm.reshape(Bsz, S, G, N)
+    Cmat = Cm.reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )
+    A = -jnp.exp(params["A_log"])
+
+    if state is not None and S <= 4:
+        y, h_new = ssd_decode_step(xh, dt, A, Bmat, Cmat, state["h"])
+    else:
+        chunk = min(ssm.chunk, S)
+        pad = (-S) % chunk
+        if pad:
+            # dt=0 padding is state-neutral: decay exp(0)=1, update dt*Bx=0
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B_p = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            C_p = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            y, h_new = ssd_chunked(xh_p, dt_p, A, B_p, C_p, chunk)
+            y = y[:, :S]
+        else:
+            y, h_new = ssd_chunked(xh, dt, A, Bmat, Cmat, chunk)
+
+    y = y + xh * params["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(Bsz, S, d_inner) * jax.nn.silu(z)
+    y = layers.rmsnorm(y, params["norm"], norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, params["w_out"].astype(x.dtype))
+
+    new_state = None
+    if state is not None:  # decode or prefill-with-state; train returns None
+        cdt = state["conv_x"].dtype
+        new_state = {
+            "h": h_new,
+            "conv_x": new_cx.astype(cdt),
+            "conv_B": new_cb.astype(cdt),
+            "conv_C": new_cc.astype(cdt),
+        }
+    return out, new_state
+
+
+def init_mamba_state(batch, d_model, ssm: SSMConfig, dtype=jnp.float32) -> dict:
+    d_inner, H = dims(d_model, ssm)
+    gn = ssm.ngroups * ssm.d_state
+    w = ssm.conv_width - 1
+    return {
+        "h": jnp.zeros((batch, H, ssm.d_state, ssm.headdim), jnp.float32),
+        "conv_x": jnp.zeros((batch, w, d_inner), dtype),
+        "conv_B": jnp.zeros((batch, w, gn), dtype),
+        "conv_C": jnp.zeros((batch, w, gn), dtype),
+    }

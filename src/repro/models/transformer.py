@@ -1,0 +1,422 @@
+"""Unified LM: dense / MoE / SSM / hybrid / prefix-VLM / encoder-decoder.
+
+The per-layer layout comes from `ModelConfig.layout()`: an unrolled prefix
+plus a repeating unit that is `lax.scan`-ned with stacked params (HLO size is
+O(unit), not O(depth) — essential for 512-device dry-run compiles).
+
+Three entry points (all pure functions of (params, batch)):
+  * `train_forward`   -> mean NLL loss (+ aux losses)
+  * `prefill_forward` -> (last-position logits, caches)
+  * `decode_forward`  -> (logits, updated caches)   [one serve_step token]
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.launch.sharding import constrain
+from repro.models import attention as attn
+from repro.models import layers, mamba2, moe
+from repro.models.config import (
+    DENSE, FULL, MAMBA, MOE, NONE, SLIDING, LayerSpec, ModelConfig,
+)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, spec: LayerSpec, cfg: ModelConfig, *, cross: bool) -> dict:
+    ks = iter(jax.random.split(key, 8))
+    p: Dict[str, Any] = {"ln1": layers.init_rmsnorm(cfg.d_model, cfg.pdtype)}
+    if spec.mixer == MAMBA:
+        p["mixer"] = mamba2.init_mamba(next(ks), cfg.d_model, cfg.ssm, cfg.pdtype)
+    else:
+        p["mixer"] = attn.init_attention(
+            next(ks), cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.head_dim_, cfg.pdtype,
+        )
+    if cfg.post_norms:
+        p["post_ln1"] = layers.init_rmsnorm(cfg.d_model, cfg.pdtype)
+    if cross:
+        p["ln_cross"] = layers.init_rmsnorm(cfg.d_model, cfg.pdtype)
+        p["cross"] = attn.init_cross_attention(
+            next(ks), cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.head_dim_, cfg.pdtype,
+        )
+    if spec.mlp != NONE:
+        p["ln2"] = layers.init_rmsnorm(cfg.d_model, cfg.pdtype)
+        if spec.mlp == MOE:
+            p["mlp"] = moe.init_moe(next(ks), cfg.d_model, cfg.moe, cfg.pdtype)
+        else:
+            p["mlp"] = layers.init_mlp(next(ks), cfg.d_model, cfg.d_ff, cfg.pdtype)
+        if cfg.post_norms:
+            p["post_ln2"] = layers.init_rmsnorm(cfg.d_model, cfg.pdtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    prefix, unit, n_units = cfg.layout()
+    keys = iter(jax.random.split(key, 16))
+    cross = cfg.encoder_layers > 0
+    params: Dict[str, Any] = {
+        "embed": layers.init_embed(
+            next(keys), cfg.padded_vocab, cfg.d_model, cfg.pdtype
+        ),
+        "final_norm": layers.init_rmsnorm(cfg.d_model, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.init_embed(
+            next(keys), cfg.padded_vocab, cfg.d_model, cfg.pdtype
+        )
+    if cfg.num_prefix_embeds or cfg.encoder_layers:
+        fd = cfg.frontend_dim or cfg.d_model
+        params["frontend_proj"] = {
+            "w": layers.truncated_normal(next(keys), (fd, cfg.d_model), cfg.pdtype, fd**-0.5)
+        }
+    # unrolled prefix layers
+    params["prefix_layers"] = tuple(
+        _init_layer(next(keys), s, cfg, cross=cross) for s in prefix
+    )
+    # scanned units: stack n_units copies of the unit params
+    def one_unit(k):
+        sub = jax.random.split(k, len(unit))
+        return {f"l{i}": _init_layer(sub[i], s, cfg, cross=cross)
+                for i, s in enumerate(unit)}
+
+    unit_keys = jax.random.split(next(keys), n_units)
+    units = [one_unit(k) for k in unit_keys]
+    params["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+    # encoder (seamless): bidirectional dense transformer, scanned
+    if cfg.encoder_layers:
+        enc_spec = LayerSpec(FULL, DENSE)
+        enc = [
+            _init_layer(k, enc_spec, cfg, cross=False)
+            for k in jax.random.split(next(keys), cfg.encoder_layers)
+        ]
+        params["enc_units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+        params["enc_final_norm"] = layers.init_rmsnorm(cfg.d_model, cfg.pdtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(
+    x, p, spec: LayerSpec, cfg: ModelConfig, ctx: dict, cache: Optional[dict],
+):
+    """Returns (x, new_cache, aux_loss)."""
+    from repro.launch.sharding import gather_params_for_compute
+
+    p = gather_params_for_compute(p, cfg)  # ZeRO-1 per-layer gather (no-op
+    # unless rules.zero1): weights are all-gathered over the fsdp axis once
+    # per use, so sharded-contraction activations are never all-reduced
+    rs = cfg.residual_scale
+    aux = jnp.float32(0.0)
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer == MAMBA:
+        h, new_cache = mamba2.mamba_block(
+            h, p["mixer"], cfg.ssm, norm_eps=cfg.norm_eps, state=cache
+        )
+    else:
+        mode = ctx["mask_mode"] if spec.mixer == FULL else attn.SLIDING
+        h, new_cache = attn.attention_block(
+            h, p["mixer"],
+            mode=mode,
+            rope_theta=cfg.rope_theta,
+            window=cfg.sliding_window,
+            prefix_len=ctx.get("prefix_len", 0),
+            softcap=cfg.attn_logit_softcap,
+            cache=cache,
+            cache_index=ctx.get("cache_index"),
+            use_naive=ctx.get("use_naive", False),
+        )
+    if cfg.post_norms:
+        h = layers.rmsnorm(h, p["post_ln1"], cfg.norm_eps)
+    x = x + rs * h
+    x = constrain(x, "batch", None, None)
+
+    if "cross" in p and ctx.get("enc_kv") is not None:
+        hc = layers.rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        hc = attn.cross_attention_block(hc, p["cross"], ctx["enc_kv"])
+        x = x + rs * hc
+
+    if spec.mlp != NONE:
+        h2 = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.mlp == MOE:
+            h2, aux = moe.moe_ffn(h2, p["mlp"], cfg.moe, activation=cfg.mlp_activation)
+        else:
+            h2 = layers.mlp(h2, p["mlp"], cfg.mlp_activation)
+        if cfg.post_norms:
+            h2 = layers.rmsnorm(h2, p["post_ln2"], cfg.norm_eps)
+        x = x + rs * h2
+        x = constrain(x, "batch", None, None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# encoder / frontends
+# ---------------------------------------------------------------------------
+
+def _encode(params, src_embeds, cfg: ModelConfig):
+    """Bidirectional encoder over stub frontend embeddings [B,S_src,fd]."""
+    x = jnp.einsum(
+        "bsf,fd->bsd", src_embeds.astype(cfg.cdtype),
+        params["frontend_proj"]["w"].astype(cfg.cdtype),
+    )
+    ctx = {"mask_mode": attn.BIDIR}
+    enc_spec = LayerSpec(FULL, DENSE)
+
+    def body(xx, p_layer):
+        xx, _, _ = _apply_layer(xx, p_layer, enc_spec, cfg, ctx, None)
+        return xx, None
+
+    x, _ = lax.scan(body, x, params["enc_units"])
+    return layers.rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """Token embedding (+ prefixed modality embeddings for VLM)."""
+    x = layers.embed(
+        batch["tokens"], params["embed"],
+        scale=cfg.embed_scale, d_model=cfg.d_model, compute_dtype=cfg.cdtype,
+    )
+    prefix_len = 0
+    if cfg.num_prefix_embeds and "prefix_embeds" in batch:
+        pe = jnp.einsum(
+            "bpf,fd->bpd", batch["prefix_embeds"].astype(cfg.cdtype),
+            params["frontend_proj"]["w"].astype(cfg.cdtype),
+        )
+        x = jnp.concatenate([pe, x], axis=1)
+        prefix_len = pe.shape[1]
+    return constrain(x, "batch", None, None), prefix_len
+
+
+def _logits(x, params, cfg: ModelConfig):
+    from repro.launch.sharding import gather_params_for_compute
+
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    table = gather_params_for_compute({"embed": table}, cfg)["embed"]
+    logits = layers.unembed(x, table, softcap=cfg.final_logit_softcap)
+    return constrain(logits, "batch", None, "tp")
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def train_forward(params, batch, cfg: ModelConfig, *, aux_weight: float = 0.01):
+    """batch: tokens [B,S], labels [B,S] (+ prefix_embeds / src_embeds)."""
+    ctx: Dict[str, Any] = {"mask_mode": attn.CAUSAL}
+    x, prefix_len = _embed_inputs(params, batch, cfg)
+    if prefix_len:
+        ctx["mask_mode"] = attn.PREFIX
+        ctx["prefix_len"] = prefix_len
+    if cfg.encoder_layers and "src_embeds" in batch:
+        enc_out = _encode(params, batch["src_embeds"], cfg)
+        # precompute shared cross k/v once per layer group: cross params are
+        # per-layer, so k/v are computed inside the layer from enc_out
+        ctx["enc_out"] = enc_out
+        ctx["enc_kv"] = "per_layer"
+    x, _, aux = _run_stack_with_cross(x, params, cfg, ctx, None)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(x, params, cfg)
+    if prefix_len:
+        logits = logits[:, prefix_len:]
+    loss = layers.cross_entropy_loss(logits, batch["labels"])
+    return loss + aux_weight * aux, {"nll": loss, "aux": aux}
+
+
+def _run_stack_with_cross(x, params, cfg, ctx, caches):
+    """Wrapper materializing per-layer cross kv lazily inside _apply_layer."""
+    if ctx.get("enc_kv") == "per_layer":
+        # each cross layer computes k/v from enc_out with its own projections
+        enc_out = ctx["enc_out"]
+
+        def shim_apply(x, p, spec, cfg_, ctx_, cache):
+            local_ctx = dict(ctx_)
+            if "cross" in p:
+                local_ctx["enc_kv"] = attn.encode_cross_kv(enc_out, p["cross"])
+            return _apply_layer(x, p, spec, cfg_, local_ctx, cache)
+
+        return _run_stack_generic(x, params, cfg, ctx, caches, shim_apply)
+    return _run_stack_generic(x, params, cfg, ctx, caches, _apply_layer)
+
+
+def _run_stack_generic(x, params, cfg, ctx, caches, apply_fn):
+    prefix, unit, n_units = cfg.layout()
+    aux_total = jnp.float32(0.0)
+    new_prefix = []
+    for i, spec in enumerate(prefix):
+        c = caches["prefix"][i] if caches else None
+        x, nc, aux = apply_fn(x, params["prefix_layers"][i], spec, cfg, ctx, c)
+        new_prefix.append(nc)
+        aux_total += aux
+
+    unit_caches = caches["units"] if caches else None
+
+    if cfg.decode_unroll and caches is not None:
+        # python loop with STATIC unit indices: params and caches are read
+        # with plain slices (no dynamic-slice materialization of the cache
+        # stack per step) — decode-path optimization, HLO size O(L)
+        collected = []
+        for u in range(n_units):
+            p_u = jax.tree.map(lambda leaf: leaf[u], params["units"])
+            c_u = jax.tree.map(lambda leaf: leaf[u], unit_caches)
+            new_c = {}
+            for i, spec in enumerate(unit):
+                x, nc, aux = apply_fn(x, p_u[f"l{i}"], spec, cfg, ctx, c_u[f"l{i}"])
+                if nc is not None:
+                    new_c[f"l{i}"] = nc
+                aux_total += aux
+            collected.append(new_c)
+        new_unit_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *collected)
+        return x, {"prefix": tuple(new_prefix), "units": new_unit_caches}, aux_total
+
+    def unit_body(carry, scanned):
+        xx, aux_acc = carry
+        new_c = {}
+        for i, spec in enumerate(unit):
+            c = scanned["c"][f"l{i}"] if "c" in scanned else None
+            xx, nc, aux = apply_fn(xx, scanned["p"][f"l{i}"], spec, cfg, ctx, c)
+            if nc is not None:
+                new_c[f"l{i}"] = nc
+        return (xx, aux_acc + aux), new_c if new_c else None
+
+    scanned_in = {"p": params["units"]}
+    if unit_caches is not None:
+        scanned_in["c"] = unit_caches
+    body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+    (x, aux_total), new_unit_caches = lax.scan(body, (x, aux_total), scanned_in)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"prefix": tuple(new_prefix), "units": new_unit_caches}
+    return x, new_caches, aux_total
+
+
+# -- caches ------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int, dtype=None, tp: int = 1) -> dict:
+    """KV caches / mamba states for every layer, prefix unrolled + units
+    stacked.  `tp` must match the serving mesh's model-axis size so that the
+    TP head padding of `attention.padded_head_counts` is reflected in the
+    cache shapes."""
+    dtype = dtype or cfg.cdtype
+    prefix, unit, n_units = cfg.layout()
+    _, kv_heads = attn.padded_head_counts(cfg.num_heads, cfg.num_kv_heads, tp)
+
+    def one(spec: LayerSpec):
+        if spec.mixer == MAMBA:
+            st = mamba2.init_mamba_state(batch, cfg.d_model, cfg.ssm, dtype)
+            return st
+        return attn.init_kv_cache(batch, s_max, kv_heads, cfg.head_dim_, dtype)
+
+    prefix_caches = tuple(one(s) for s in prefix)
+    unit_cache = {f"l{i}": one(s) for i, s in enumerate(unit)}
+    unit_caches = jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf, (n_units,) + leaf.shape), unit_cache
+    )
+    return {"prefix": prefix_caches, "units": unit_caches}
+
+
+def prefill_forward(params, batch, cfg: ModelConfig, caches):
+    """Run the full prompt, writing caches.  Returns (last logits, caches)."""
+    ctx: Dict[str, Any] = {"mask_mode": attn.CAUSAL, "cache_index": None}
+    x, prefix_len = _embed_inputs(params, batch, cfg)
+    if prefix_len:
+        ctx["mask_mode"] = attn.PREFIX
+        ctx["prefix_len"] = prefix_len
+    if cfg.encoder_layers and "src_embeds" in batch:
+        ctx["enc_out"] = _encode(params, batch["src_embeds"], cfg)
+        ctx["enc_kv"] = "per_layer"
+    x, new_caches, _ = _run_stack_with_cross(x, params, cfg, ctx, caches)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(x[:, -1:], params, cfg)
+    return logits, new_caches
+
+
+def _merge_decode_caches(caches, updates, idx):
+    """Commit token-sized decode updates in place (no full-cache copies).
+
+    Attention layers return {"k_tok","v_tok"} [.., 1, kv, hd] — written with a
+    single dynamic-update-slice at the cache position.  Mamba layers return
+    their full (small) recurrent state — replaced wholesale."""
+
+    idx = jnp.asarray(idx)
+    per_slot = idx.ndim == 1  # ragged continuous batching: one index per slot
+
+    def write(c, tok, seq_axis):
+        tok = tok.astype(c.dtype)
+        if not per_slot:
+            return lax.dynamic_update_slice_in_dim(c, tok, idx, axis=seq_axis)
+        b = jnp.arange(c.shape[seq_axis - 1])
+        if seq_axis == 1:       # [B, S, kv, hd]
+            return c.at[b, idx].set(tok[:, 0])
+        return c.at[:, b, idx].set(tok[:, :, 0])  # [n_units, B, S, kv, hd]
+
+    def merge(c, u, seq_axis):
+        if c is None or u is None:
+            return u
+        if "k_tok" in u:
+            return {
+                "k": write(c["k"], u["k_tok"], seq_axis),
+                "v": write(c["v"], u["v_tok"], seq_axis),
+            }
+        return u
+
+    new_prefix = tuple(
+        merge(c, u, 1) for c, u in zip(caches["prefix"], updates["prefix"])
+    )
+    new_units = {
+        key: merge(caches["units"][key], updates["units"][key], 2)
+        for key in caches["units"]
+    }
+    return {"prefix": new_prefix, "units": new_units}
+
+
+def decode_forward(params, batch, cfg: ModelConfig, caches, cache_index):
+    """One serve_step: batch["tokens"] [B,1] against caches of length S_max."""
+    ctx: Dict[str, Any] = {"mask_mode": attn.CAUSAL, "cache_index": cache_index}
+    x, _ = _embed_inputs(params, {"tokens": batch["tokens"]}, cfg)
+    if cfg.encoder_layers and "enc_out" in batch:
+        ctx["enc_out"] = batch["enc_out"]
+        ctx["enc_kv"] = "per_layer"
+    x, updates, _ = _run_stack_with_cross(x, params, cfg, ctx, caches)
+    new_caches = _merge_decode_caches(caches, updates, cache_index)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(x, params, cfg)
+    return logits, new_caches
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def model_flops_per_token(cfg: ModelConfig, params_shape=None) -> float:
+    """6*N (dense) or 6*N_active (MoE) — the §Roofline MODEL_FLOPS factor."""
+    import numpy as np
+
+    if params_shape is None:
+        params_shape = jax.eval_shape(
+            lambda: init_params(cfg, jax.random.PRNGKey(0))
+        )
+    total = 0
+    active = 0
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        n = int(np.prod(leaf.shape))
+        if "embed/table" in path or "lm_head" in path:
+            continue  # embedding lookups are not matmul FLOPs
+        total += n
+        if cfg.moe and ("w_gate" in path or "w_up" in path or "w_down" in path):
+            frac = cfg.moe.top_k / cfg.moe.num_experts
+            active += int(n * frac)
+        else:
+            active += n
+    return 6.0 * active

@@ -1,0 +1,106 @@
+"""AdamW with global-norm clipping — the paper's *separate task/state*
+pattern (§4.5) at the training-step level:
+
+  f (stateless, embarrassingly parallel): per-microbatch forward+backward
+  s (the serialized state section):       moment/param update
+
+The paper bounds speedup by ``t_f/t_s + 1`` when ``s`` is a mutually-exclusive
+section.  Here the commit is *sharded* instead of serialized — optimizer
+state follows the parameter PartitionSpecs (ZeRO when an fsdp axis is set),
+which is the beyond-paper optimization studied in §Perf: it moves ``t_s``
+from a serialized fold to an O(N/devices) local update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "wsd"  # wsd | cosine | constant
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    decay_frac: float = 0.1  # WSD: fraction of steps in final decay
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Learning-rate schedules; WSD (warmup-stable-decay) per MiniCPM."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.peak_lr * warm
+    if cfg.schedule == "cosine":
+        t = jnp.clip(
+            (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        return cfg.peak_lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    # WSD: stable at peak until the last decay_frac of steps, then 1/sqrt-like
+    decay_start = cfg.total_steps * (1 - cfg.decay_frac)
+    t = jnp.clip(
+        (step - decay_start) / max(cfg.total_steps - decay_start, 1), 0.0, 1.0
+    )
+    return cfg.peak_lr * warm * (1.0 - 0.9 * t)
+
+
+def init_state(params) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(tree))
+    )
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return (
+        new_params,
+        {"m": new_m, "v": new_v, "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )

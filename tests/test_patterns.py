@@ -1,0 +1,227 @@
+"""Unit + property tests for the state access pattern semantics (paper §4).
+
+These run in the main pytest process on a single device; multi-worker SPMD
+equivalence is covered by tests/test_spmd.py (subprocess with 8 host devices).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import patterns, semantics
+
+
+def int_streams(min_size=1, max_size=64):
+    return st.lists(
+        st.integers(min_value=-1000, max_value=1000),
+        min_size=min_size,
+        max_size=max_size,
+    )
+
+
+# ---------------------------------------------------------------------------
+# §4.1 serial
+# ---------------------------------------------------------------------------
+
+class TestSerial:
+    def test_matches_paper_unrolled_definition(self):
+        # ..., f(x1, ns(x0,s0)), f(x0, s0)
+        f = lambda x, s: x * 10 + s
+        ns = lambda x, s: s + x
+        xs = jnp.array([1, 2, 3], dtype=jnp.int32)
+        ys, s_final = semantics.serial(f, ns, xs, jnp.int32(100))
+        assert ys.tolist() == [
+            1 * 10 + 100,
+            2 * 10 + 101,
+            3 * 10 + 103,
+        ]
+        assert int(s_final) == 106
+
+    @given(int_streams())
+    @settings(max_examples=25, deadline=None)
+    def test_run_equals_reference(self, data):
+        pat = patterns.SerialState(f=lambda x, s: x - s, ns=lambda x, s: s + 2 * x)
+        xs = jnp.asarray(data, dtype=jnp.int32)
+        mesh = jax.make_mesh((1,), ("w",), axis_types=(jax.sharding.AxisType.Auto,))
+        ys_ref, s_ref = pat.reference(xs, jnp.int32(0))
+        ys, s = pat.run(mesh, "w", xs, jnp.int32(0))
+        np.testing.assert_array_equal(np.asarray(ys), np.asarray(ys_ref))
+        assert int(s) == int(s_ref)
+
+
+# ---------------------------------------------------------------------------
+# §4.2 partitioned
+# ---------------------------------------------------------------------------
+
+class TestPartitioned:
+    @given(int_streams(), st.sampled_from([2, 4, 8]))
+    @settings(max_examples=25, deadline=None)
+    def test_per_slot_substream_is_serial(self, data, num_slots):
+        """Partitioned semantics == running the serial pattern independently
+        on each hash-class sub-stream (the paper's core §4.2 claim)."""
+        f = lambda x, s: x + 3 * s
+        ns = lambda x, s: s + x
+        h = lambda x: jnp.abs(x.astype(jnp.int32) * 31 + 7) % num_slots
+        xs = jnp.asarray(data, dtype=jnp.int32)
+        v0 = jnp.arange(num_slots, dtype=jnp.int32)
+
+        ys, v_final = semantics.partitioned(f, ns, h, xs, v0)
+
+        hs = np.asarray(jax.vmap(h)(xs))
+        for slot in range(num_slots):
+            sub = xs[hs == slot]
+            ys_slot, s_slot = semantics.serial(f, ns, sub, v0[slot])
+            assert int(v_final[slot]) == int(s_slot)
+            np.testing.assert_array_equal(
+                np.asarray(ys)[hs == slot], np.asarray(ys_slot)
+            )
+
+    def test_pytree_state(self):
+        # state per slot is a pytree, not just a scalar
+        f = lambda x, s: s["a"] + x
+        ns = lambda x, s: {"a": s["a"] + x, "n": s["n"] + 1}
+        h = lambda x: x % 4
+        xs = jnp.arange(16, dtype=jnp.int32)
+        v0 = {"a": jnp.zeros(4, jnp.int32), "n": jnp.zeros(4, jnp.int32)}
+        ys, v = semantics.partitioned(f, ns, h, xs, v0)
+        assert v["n"].tolist() == [4, 4, 4, 4]
+        assert int(v["a"].sum()) == int(xs.sum())
+
+    def test_owner_block_distribution(self):
+        pat = patterns.PartitionedState(
+            f=lambda x, s: s, ns=lambda x, s: s, h=lambda x: x, num_slots=16
+        )
+        assert pat.slots_per_worker(4) == 4
+        assert int(pat.owner(jnp.int32(0), 4)) == 0
+        assert int(pat.owner(jnp.int32(15), 4)) == 3
+        with pytest.raises(ValueError):
+            pat.slots_per_worker(5)
+
+    @given(
+        st.integers(min_value=1, max_value=6).map(lambda k: 2**k),
+        st.integers(min_value=0, max_value=3).map(lambda k: 2**k),
+        st.integers(min_value=0, max_value=3).map(lambda k: 2**k),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_handoff_volume_props(self, num_slots, n_old, n_new):
+        if num_slots % n_old or num_slots % n_new:
+            return
+        v = patterns.PartitionedState.handoff_volume(num_slots, n_old, n_new)
+        assert 0 <= v <= num_slots
+        assert v == patterns.PartitionedState.handoff_volume(num_slots, n_new, n_old)
+        if n_old == n_new:
+            assert v == 0
+
+
+# ---------------------------------------------------------------------------
+# §4.3 accumulator
+# ---------------------------------------------------------------------------
+
+class TestAccumulator:
+    @given(int_streams())
+    @settings(max_examples=25, deadline=None)
+    def test_final_state_is_fold(self, data):
+        xs = jnp.asarray(data, dtype=jnp.int32)
+        ys, s = semantics.accumulator(
+            f=lambda x, s: s,
+            g=lambda x: x,
+            combine=lambda a, b: a + b,
+            xs=xs,
+            s_zero=jnp.int32(0),
+        )
+        assert int(s) == int(np.asarray(data, dtype=np.int64).sum() % 2**32 % 2**32) or int(
+            s
+        ) == int(jnp.sum(xs))
+
+    @given(int_streams(min_size=2))
+    @settings(max_examples=25, deadline=None)
+    def test_schedule_independence(self, data):
+        """Associativity+commutativity => any permutation yields the same
+        final state (the property that licenses parallelism in §4.3)."""
+        xs = np.asarray(data, dtype=np.int32)
+        perm = np.random.default_rng(0).permutation(len(xs))
+        _, s1 = semantics.accumulator(
+            lambda x, s: s, lambda x: x, lambda a, b: a + b, jnp.asarray(xs), jnp.int32(0)
+        )
+        _, s2 = semantics.accumulator(
+            lambda x, s: s,
+            lambda x: x,
+            lambda a, b: a + b,
+            jnp.asarray(xs[perm]),
+            jnp.int32(0),
+        )
+        assert int(s1) == int(s2)
+
+    def test_merge_rule(self):
+        pat = patterns.AccumulatorState(
+            f=lambda x, s: s,
+            g=lambda x: x,
+            combine=lambda a, b: a + b,
+            zero=lambda: jnp.int32(0),
+        )
+        assert int(pat.merge_workers(jnp.int32(5), jnp.int32(7))) == 12
+        assert int(pat.new_worker_state()) == 0
+
+
+# ---------------------------------------------------------------------------
+# §4.4 successive approximation
+# ---------------------------------------------------------------------------
+
+class TestSuccessiveApproximation:
+    @given(
+        st.lists(
+            st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+            min_size=1,
+            max_size=64,
+        )
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_trace_monotone_and_final_is_min(self, data):
+        xs = jnp.asarray(data, dtype=jnp.float32)
+        trace, s = semantics.successive_approximation(
+            c=lambda x, s: x < s,
+            s_prime=lambda x, s: jnp.minimum(x, s),
+            xs=xs,
+            s_init=jnp.float32(jnp.inf),
+        )
+        tr = np.asarray(trace)
+        assert (np.diff(tr) <= 1e-9).all()
+        assert float(s) == pytest.approx(float(np.min(np.float32(data))))
+
+    def test_non_monotone_updates_discarded(self):
+        # an "update" that would raise the state must be rejected by c
+        xs = jnp.asarray([5.0, 9.0, 3.0, 7.0], dtype=jnp.float32)
+        trace, s = semantics.successive_approximation(
+            c=lambda x, s: x < s,
+            s_prime=lambda x, s: x,
+            xs=xs,
+            s_init=jnp.float32(6.0),
+        )
+        assert np.asarray(trace).tolist() == [5.0, 5.0, 3.0, 3.0]
+        assert float(s) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# §4.5 separate task/state
+# ---------------------------------------------------------------------------
+
+class TestSeparateTaskState:
+    @given(int_streams())
+    @settings(max_examples=25, deadline=None)
+    def test_f_is_state_independent_and_trace_folds(self, data):
+        xs = jnp.asarray(data, dtype=jnp.int32)
+        ys, trace, s = semantics.separate_task_state(
+            f=lambda x: x * x, s=lambda y, st: st + y, xs=xs, s0=jnp.int32(0)
+        )
+        np.testing.assert_array_equal(np.asarray(ys), np.asarray(xs) ** 2)
+        assert int(s) == int(jnp.sum(xs * xs))
+        np.testing.assert_array_equal(
+            np.asarray(trace), np.cumsum(np.asarray(xs, dtype=np.int64) ** 2).astype(np.int32)
+        )
+
+    def test_speedup_bound(self):
+        assert patterns.SeparateTaskState.speedup_bound(100, 1) == 101
+        assert patterns.SeparateTaskState.speedup_bound(10, 1) == 11
+        assert patterns.SeparateTaskState.speedup_bound(5, 1) == 6

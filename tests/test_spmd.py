@@ -1,0 +1,34 @@
+"""Run the SPMD pattern equivalence checks in a subprocess.
+
+The subprocess sets ``--xla_force_host_platform_device_count=8``; running it
+out-of-process keeps the main pytest session on 1 device (required for the
+arch smoke tests)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_REPO = os.path.dirname(_HERE)
+
+
+def _run(script: str, timeout: int = 600) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    return subprocess.run(
+        [sys.executable, os.path.join(_HERE, script)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )
+
+
+def test_spmd_pattern_equivalence():
+    proc = _run("spmd_checks.py")
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL SPMD CHECKS PASSED" in proc.stdout
