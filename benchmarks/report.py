@@ -1,8 +1,9 @@
 """Regenerate the data-driven tables of EXPERIMENTS.md from dry-run artifacts.
 
 Usage: PYTHONPATH=src python -m benchmarks.report
-Writes results/dryrun_table.md and results/roofline_pod1.md; EXPERIMENTS.md
-references these (and inlines them at authoring time).
+Writes results/dryrun_table.md, results/roofline_pod1.md, and
+results/elastic_runtime.md (throughput tracking across resize events);
+EXPERIMENTS.md references these (and inlines them at authoring time).
 """
 
 from __future__ import annotations
@@ -43,7 +44,46 @@ def dryrun_table(path: str) -> None:
     print(f"wrote {path}")
 
 
+def elastic_runtime_table(path: str) -> None:
+    """Markdown view of results/elastic_runtime.json (produced by
+    benchmarks/elastic_runtime.py): per-phase throughput vs the analytic
+    envelope, plus the §4.x resize accounting."""
+    src = "results/elastic_runtime.json"
+    if not os.path.exists(src):
+        print(f"skip {path}: run benchmarks/elastic_runtime.py first")
+        return
+    with open(src) as f:
+        rep = json.load(f)
+    lines = [
+        "| phase | degree | thpt (items/u) | model | rel err | in envelope |",
+        "|---|---|---|---|---|---|",
+    ]
+    for k, p in enumerate(rep["simulated_phases"]):
+        lines.append(
+            f"| {k} | {p['degree']} | {p['throughput_measured']:.4g} | "
+            f"{p['throughput_model']:.4g} | {p['rel_err']:.2%} | "
+            f"{'yes' if p['within_envelope'] else '**NO**'} |"
+        )
+    lines.append("")
+    lines.append("| resize | protocol | handoff items |")
+    lines.append("|---|---|---|")
+    for r in rep["resizes"]:
+        lines.append(
+            f"| {r['n_old']} -> {r['n_new']} | {r['protocol']} | "
+            f"{r['handoff_items']} |"
+        )
+    lines.append("")
+    lines.append(
+        f"All phases within ±{rep['workload']['envelope_tol']:.0%} envelope: "
+        f"**{rep['all_within_envelope']}**"
+    )
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path}")
+
+
 if __name__ == "__main__":
     os.makedirs("results", exist_ok=True)
     dryrun_table("results/dryrun_table.md")
     write_md("results/roofline_pod1.md")
+    elastic_runtime_table("results/elastic_runtime.md")

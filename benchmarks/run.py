@@ -25,6 +25,7 @@ def main() -> None:
         "benchmarks.separate_state_speedup",
         "benchmarks.partitioned_scaling",
         "benchmarks.shardmap_farm",
+        "benchmarks.elastic_runtime",
         "benchmarks.kernel_bench",
         "benchmarks.roofline",
     ]

@@ -1,0 +1,62 @@
+"""Compatibility shims for older JAX releases.
+
+The reproduction targets the JAX >= 0.6 API surface (`jax.shard_map`,
+`lax.pvary` VMA typing, `jax.sharding.AxisType`, `jax.make_mesh(...,
+axis_types=...)`); the pinned container image ships an older JAX where those
+names do not exist.  :func:`install` backfills each missing name with a
+semantically equivalent fallback — on a new-enough JAX it is a no-op, so the
+shims never shadow real APIs.
+
+Installed automatically from ``repro/__init__.py`` (every entry point —
+tests, benchmarks, examples, subprocess checks — imports ``repro.*`` before
+building meshes).
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+from jax import lax
+
+
+def install() -> None:
+    if not hasattr(jax, "shard_map"):  # moved out of experimental in 0.4.35+
+        from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+        def shard_map(f, *args, **kwargs):
+            # new-API callers pass check_vma; the old kwarg is check_rep.
+            # Old JAX's replication checker cannot type collective-in-scan
+            # carries the new VMA system handles (pvary), so it defaults OFF
+            # here — pattern correctness is proven against serial oracles by
+            # the test suite, not by the static checker.
+            if "check_vma" in kwargs:
+                kwargs["check_rep"] = kwargs.pop("check_vma")
+            kwargs.setdefault("check_rep", False)
+            return _shard_map(f, *args, **kwargs)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(lax, "pvary"):
+        # Pre-VMA JAX has no varying-manual-axes typing: replicated values
+        # may seed varying scan carries directly, so identity is correct.
+        lax.pvary = lambda x, axis_names=None: x
+
+    if not hasattr(jax.sharding, "AxisType"):
+
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+            del axis_types  # pre-AxisType meshes are implicitly Auto
+            return _orig(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh

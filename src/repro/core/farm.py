@@ -56,12 +56,15 @@ class TaskFarm:
 
         ``step(state, chunk) -> (state, out)`` where ``step`` is typically a
         closed-over ``pattern.run(mesh, axis, ...)``.
+
+        Subsumed by :class:`repro.runtime.executor.StreamExecutor`, which
+        adds online resizing, metrics, and a compiled-step cache; this
+        wrapper delegates to the executor module's chunked fold and is kept
+        for fixed-degree callers.
         """
-        outs = []
-        for chunk in stream:
-            state, out = step(state, chunk, *run_args)
-            outs.append(out)
-        return state, outs
+        from repro.runtime import executor as _executor  # local: no cycle
+
+        return _executor.run_stream(step, stream, state, *run_args)
 
 
 def pipeline_stages(

@@ -108,9 +108,14 @@ class PartitionedState:
 
     # -- ownership -----------------------------------------------------------
     def slots_per_worker(self, n_w: int) -> int:
+        if n_w < 1:
+            raise ValueError(f"worker count must be >= 1, got {n_w}")
         if self.num_slots % n_w:
             raise ValueError(
-                f"num_slots={self.num_slots} must divide evenly over {n_w} workers"
+                f"block ownership needs num_slots % n_w == 0: "
+                f"num_slots={self.num_slots} does not divide over {n_w} workers "
+                f"(remainder {self.num_slots % n_w}); choose a worker count "
+                f"from the divisors of {self.num_slots}"
             )
         return self.num_slots // n_w
 
@@ -186,7 +191,21 @@ class PartitionedState:
     @staticmethod
     def handoff_volume(num_slots: int, n_old: int, n_new: int) -> int:
         """Number of slots that change owner when n_old -> n_new (paper's
-        adaptivity cost)."""
+        adaptivity cost).
+
+        Both degrees must divide ``num_slots`` — with a ragged block size the
+        floor-division owner map silently mis-assigns the tail slots, so the
+        count would be wrong rather than approximate.
+        """
+        for name, n in (("n_old", n_old), ("n_new", n_new)):
+            if n < 1:
+                raise ValueError(f"{name} must be >= 1, got {n}")
+            if num_slots % n:
+                raise ValueError(
+                    f"handoff accounting needs num_slots % {name} == 0: "
+                    f"num_slots={num_slots}, {name}={n} "
+                    f"(remainder {num_slots % n})"
+                )
         old_owner = np.arange(num_slots) // (num_slots // n_old)
         new_owner = np.arange(num_slots) // (num_slots // n_new)
         return int(np.sum(old_owner != new_owner))
@@ -219,16 +238,21 @@ class AccumulatorState:
     def reference(self, xs):
         return semantics.accumulator(self.f, self.g, self.combine, xs, self.zero())
 
-    def run(self, mesh: Mesh, axis: str, xs, flush_every: int):
+    def run(self, mesh: Mesh, axis: str, xs, flush_every: int, s0=None):
         """xs sharded over ``axis``; returns (ys sharded, s_global replicated).
 
         The returned global state is exact (associativity/commutativity);
         per-item ys read the latest flushed global view plus the local
         accumulator — matching the paper's first implementation variant.
+
+        ``s0`` (replicated) seeds the global view — the long-running runtime
+        threads the committed state across successive stream chunks with it,
+        so chunk N+1's views include chunk N's flushes.  Defaults to the
+        identity (a single-chunk run).
         """
         f, g, combine, zero = self.f, self.g, self.combine, self.zero
 
-        def worker(xs_local):
+        def worker(xs_local, s_init):
             m_local = jax.tree.leaves(xs_local)[0].shape[0]
             if m_local % flush_every:
                 raise ValueError("flush_every must divide the local chunk size")
@@ -251,15 +275,16 @@ class AccumulatorState:
                 s_new = combine(lax.psum(acc, axis), s_global_view)
                 return s_new, ys
 
-            s_final, ys = lax.scan(flush_block, zero(), xs_blocks)
+            s_final, ys = lax.scan(flush_block, s_init, xs_blocks)
             ys = jax.tree.map(
                 lambda leaf: leaf.reshape((m_local,) + leaf.shape[2:]), ys
             )
             return ys, s_final
 
+        s_init = zero() if s0 is None else s0
         return shard_map(
-            worker, mesh=mesh, in_specs=(P(axis),), out_specs=(P(axis), P()),
-        )(xs)
+            worker, mesh=mesh, in_specs=(P(axis), P()), out_specs=(P(axis), P()),
+        )(xs, s_init)
 
     # -- adaptivity (paper §4.3) ----------------------------------------------
     def merge_workers(self, s_i, s_j):

@@ -9,9 +9,12 @@ Structure per the paper's farm: the stream (data pipeline) feeds workers
 * S5 separate task/state: fwd/bwd (f) + sharded AdamW commit (s).
 * S4 successive approximation: `BestTracker` — monotone best-loss register;
   stale reads are harmless, non-improving updates discarded.
-* §4.x adaptivity: `resize()` restores the latest checkpoint under a new
-  mesh (S2 block repartitioning; new workers inherit the global S4 value,
-  which the paper notes avoids convergence slowdown).
+* §4.x adaptivity: the elastic path delegates the DEGREE DECISION to
+  `repro.runtime.autoscaler` (the same controller that drives the streaming
+  executor) and the STATE TRANSITION to `elastic_resize()` — a restore of
+  the latest checkpoint under the new mesh's shardings (S2 block
+  repartitioning; new workers inherit the global S4 value, which the paper
+  notes avoids convergence slowdown).
 
 Failures: any exception in the step loop (or an injected `FailAt`) falls
 back to the newest complete checkpoint — the idempotent stream cursor makes
@@ -31,10 +34,27 @@ import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt_lib
 from repro.data.pipeline import StreamState, SyntheticLM
+from repro.runtime.metrics import ChunkRecord, MetricsBus
 
 
 class InjectedFailure(RuntimeError):
     """Simulated node failure (tests / chaos drills)."""
+
+
+def elastic_resize(ckpt_dir: str, template, sharding_tree):
+    """Checkpoint-mediated §4.x resize: restore the newest checkpoint under
+    the NEW mesh's shardings (block-partitioned state is placement-invariant,
+    so re-placement IS the repartitioning protocol).
+
+    Returns ``(state, metadata)``; raises if no checkpoint exists — an
+    elastic transition without a committed state has nothing to hand off.
+    """
+    latest = ckpt_lib.latest_step(ckpt_dir)
+    if latest is None:
+        raise FileNotFoundError(
+            f"elastic resize needs a checkpoint in {ckpt_dir!r}; none found"
+        )
+    return ckpt_lib.restore(ckpt_dir, latest, template, sharding_tree=sharding_tree)
 
 
 @dataclasses.dataclass
@@ -59,6 +79,27 @@ class TrainLoop:
     ckpt_every: int = 10
     metric_flush_every: int = 5   # S3 flush period for host metrics
     fail_at: Optional[int] = None  # inject a failure BEFORE this step once
+    # -- elastic path: degree decisions delegated to the runtime autoscaler --
+    autoscaler: Optional[object] = None   # repro.runtime.autoscaler.Autoscaler
+    degree: int = 1                        # current data-parallel degree
+    on_resize: Optional[Callable[[int], None]] = None  # rebuilds mesh+step
+    metrics_bus: Optional[MetricsBus] = None
+
+    def _maybe_autoscale(self, step: int, log) -> None:
+        """Consulted at checkpoint boundaries (the loop's quiescent points,
+        where `elastic_resize` has a fresh state to hand off)."""
+        if self.autoscaler is None or self.metrics_bus is None:
+            return
+        target = self.autoscaler.propose(self.metrics_bus, self.degree)
+        self.autoscaler.tick()
+        if target is None:
+            return
+        log(f"[elastic] step {step}: autoscaler proposes degree "
+            f"{self.degree} -> {target}")
+        if self.on_resize is not None:
+            self.on_resize(target)  # caller runs elastic_resize + rebuild
+        self.degree = target
+        self.autoscaler.notify_resized()
 
     def run(self, params, opt_state, num_steps: int, *, log=print):
         stream = StreamState(0)
@@ -82,9 +123,16 @@ class TrainLoop:
                     failed_once = True
                     raise InjectedFailure(f"injected failure at step {step}")
                 batch = self.data.batch_at(stream.position)
+                t0 = time.perf_counter()
                 params, opt_state, metrics = self.train_step(
                     params, opt_state, batch
                 )
+                t1 = time.perf_counter()
+                if self.metrics_bus is not None:
+                    self.metrics_bus.record_chunk(ChunkRecord(
+                        t_start=t0, t_end=t1, m=1, n_workers=self.degree,
+                        queue_depth=0,
+                    ))
                 stream = StreamState(stream.position + 1)
                 step += 1
                 # S3: accumulate locally, flush periodically (device->host
@@ -104,12 +152,14 @@ class TrainLoop:
                         self.ckpt_dir, step, (params, opt_state),
                         metadata={"stream": stream.to_dict(), "best": best.best},
                     )
+                    self._maybe_autoscale(step, log)
             except InjectedFailure as e:
                 log(f"[ft] {e}; restarting from checkpoint")
                 latest = ckpt_lib.latest_step(self.ckpt_dir)
                 if latest is None:
                     stream = StreamState(0)
                     step = 0
+                    loss_acc, acc_n = 0.0, 0  # discard pre-failure partials
                     continue
                 (params, opt_state), meta = ckpt_lib.restore(
                     self.ckpt_dir, latest, (params, opt_state)

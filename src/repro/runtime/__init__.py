@@ -1,0 +1,94 @@
+"""repro.runtime — elastic streaming runtime over the §4 patterns.
+
+The pipeline: an :mod:`~repro.runtime.stream` source feeds a backpressure
+queue; the :mod:`~repro.runtime.executor` drives a pattern adapter over
+fixed-size chunks; the :mod:`~repro.runtime.autoscaler` changes the
+parallelism degree online through the paper's §4.x adaptivity protocols; the
+:mod:`~repro.runtime.metrics` bus closes the loop; the
+:mod:`~repro.runtime.supervisor` adds checkpoint-mediated failure shrink /
+recovery grow.
+"""
+
+from repro.runtime.autoscaler import (
+    Autoscaler,
+    Decision,
+    Policy,
+    QueueDepthPolicy,
+    ThroughputTargetPolicy,
+    UtilizationPolicy,
+)
+from repro.runtime.executor import (
+    AccumulatorAdapter,
+    PartitionedAdapter,
+    PatternAdapter,
+    ResizeInfo,
+    SeparateAdapter,
+    StreamExecutor,
+    SuccessiveAdapter,
+    default_mesh_factory,
+    run_stream,
+)
+from repro.runtime.metrics import (
+    ChunkRecord,
+    LogicalClock,
+    MetricsBus,
+    ResizeRecord,
+    WallClock,
+)
+from repro.runtime.stream import (
+    ArrivalModel,
+    BackpressureQueue,
+    BoundedSource,
+    BurstyRate,
+    Chunker,
+    ConstantRate,
+    PoissonRate,
+    SinusoidRate,
+    Source,
+    SyntheticSource,
+    pump,
+)
+from repro.runtime.supervisor import (
+    FailurePlan,
+    Supervisor,
+    SupervisorEvent,
+    WorkerFailure,
+)
+
+__all__ = [
+    "Autoscaler",
+    "Decision",
+    "Policy",
+    "QueueDepthPolicy",
+    "ThroughputTargetPolicy",
+    "UtilizationPolicy",
+    "AccumulatorAdapter",
+    "PartitionedAdapter",
+    "PatternAdapter",
+    "ResizeInfo",
+    "SeparateAdapter",
+    "StreamExecutor",
+    "SuccessiveAdapter",
+    "default_mesh_factory",
+    "run_stream",
+    "ChunkRecord",
+    "LogicalClock",
+    "MetricsBus",
+    "ResizeRecord",
+    "WallClock",
+    "ArrivalModel",
+    "BackpressureQueue",
+    "BoundedSource",
+    "BurstyRate",
+    "Chunker",
+    "ConstantRate",
+    "PoissonRate",
+    "SinusoidRate",
+    "Source",
+    "SyntheticSource",
+    "pump",
+    "FailurePlan",
+    "Supervisor",
+    "SupervisorEvent",
+    "WorkerFailure",
+]

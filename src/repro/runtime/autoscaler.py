@@ -1,0 +1,194 @@
+"""Online parallelism-degree controller.
+
+Policies are pure functions from observed signals to a target degree drawn
+from a fixed candidate ladder (degrees that divide the chunk size and the
+state's slot count — validated by the executor).  The autoscaler adds the
+operational guardrails: cooldown between transitions, hysteresis (a policy
+must ask for the same change twice in a row before it is applied — arrival
+noise shouldn't thrash the farm), and the §4.x protocol invocation via
+``StreamExecutor.set_degree``.
+
+Three built-in policies mirror the three signals the paper's runtime
+discussion cares about:
+
+* :class:`QueueDepthPolicy` — backlog-driven: grow above the high watermark,
+  shrink below the low one.
+* :class:`UtilizationPolicy` — offered-load-driven, using the bus's queueing
+  estimate ``lambda * t_f_hat / n_w``.
+* :class:`ThroughputTargetPolicy` — model-driven: pick the smallest degree
+  whose analytic service time (paper §2, with measured ``t_f_hat``) meets a
+  throughput target.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.core import analytics
+from repro.runtime.metrics import MetricsBus
+
+
+class Policy:
+    def target(
+        self, bus: MetricsBus, current: int, candidates: Sequence[int], queue=None
+    ) -> int:
+        raise NotImplementedError
+
+
+def _step_up(candidates: Sequence[int], current: int) -> int:
+    ups = [c for c in candidates if c > current]
+    return min(ups) if ups else current
+
+
+def _step_down(candidates: Sequence[int], current: int) -> int:
+    downs = [c for c in candidates if c < current]
+    return max(downs) if downs else current
+
+
+@dataclasses.dataclass
+class QueueDepthPolicy(Policy):
+    """Grow one rung when the queue is above its high watermark, shrink one
+    rung when at/below the low watermark.  One rung at a time: the §4.x
+    handoff cost is paid per transition, so the controller moves gradually."""
+
+    def target(self, bus, current, candidates, queue=None) -> int:
+        if queue is None:
+            return current
+        depth = queue.depth
+        if depth >= queue.high_watermark:
+            return _step_up(candidates, current)
+        if depth <= queue.low_watermark:
+            return _step_down(candidates, current)
+        return current
+
+
+@dataclasses.dataclass
+class UtilizationPolicy(Policy):
+    """Keep offered-load/capacity inside [low, high]."""
+
+    low: float = 0.4
+    high: float = 0.9
+
+    def target(self, bus, current, candidates, queue=None) -> int:
+        util = bus.utilization()
+        if util is None:
+            return current
+        if util > self.high:
+            return _step_up(candidates, current)
+        if util < self.low:
+            return _step_down(candidates, current)
+        return current
+
+
+@dataclasses.dataclass
+class ThroughputTargetPolicy(Policy):
+    """Smallest candidate degree whose modeled throughput meets the target.
+
+    Modeled throughput at degree ``n`` is ``1 / T_s(n)`` items per unit time
+    with the paper's ``T_s(n) = max(t_a, t_f_hat / n)`` — measured work
+    plugged into the analytic model, so the controller and the benchmark's
+    cross-check share one source of truth."""
+
+    target_throughput: float
+    t_a: float = 0.0
+
+    def target(self, bus, current, candidates, queue=None) -> int:
+        t_f = bus.t_f_hat
+        if t_f is None:
+            return current
+        for n in sorted(candidates):
+            ts = analytics.service_time(self.t_a, t_f, n)
+            if ts > 0 and 1.0 / ts >= self.target_throughput:
+                return n
+        return max(candidates)
+
+
+@dataclasses.dataclass
+class Decision:
+    chunk_index: int
+    current: int
+    proposed: int
+    applied: bool
+    reason: str
+
+
+class Autoscaler:
+    """Wraps a policy with candidates, cooldown, and hysteresis, and applies
+    accepted transitions through the executor's §4.x resize path."""
+
+    def __init__(
+        self,
+        policy: Policy,
+        candidates: Sequence[int],
+        *,
+        cooldown_chunks: int = 2,
+        confirm: int = 1,
+    ):
+        if not candidates:
+            raise ValueError("need at least one candidate degree")
+        self.policy = policy
+        self.candidates = sorted(set(candidates))
+        self.cooldown_chunks = cooldown_chunks
+        self.confirm = confirm  # consecutive identical proposals required
+        self.decisions: List[Decision] = []
+        self._since_resize = cooldown_chunks  # allow an immediate first move
+        self._pending: Optional[int] = None
+        self._pending_count = 0
+
+    def propose(self, bus: MetricsBus, current: int, queue=None) -> Optional[int]:
+        """Pure decision (also used by ft/driver's elastic path): returns a
+        target degree != current once cooldown+hysteresis are satisfied."""
+        target = self.policy.target(bus, current, self.candidates, queue=queue)
+        if target == current:
+            # no-op is always legal — policies signal "hold" by returning
+            # `current` even when the farm started off the candidate ladder
+            self._pending, self._pending_count = None, 0
+            return None
+        if target not in self.candidates:
+            raise ValueError(
+                f"policy proposed degree {target} outside candidates "
+                f"{self.candidates}"
+            )
+        if self._since_resize < self.cooldown_chunks:
+            return None
+        if target == self._pending:
+            self._pending_count += 1
+        else:
+            self._pending, self._pending_count = target, 1
+        if self._pending_count < self.confirm:
+            return None
+        return target
+
+    def tick(self) -> None:
+        """Advance the cooldown clock by one chunk (standalone `propose`
+        users — e.g. the ft driver — call this once per decision period)."""
+        self._since_resize += 1
+
+    def notify_resized(self) -> None:
+        """Reset cooldown/hysteresis after the caller applied a transition."""
+        self._since_resize = 0
+        self._pending, self._pending_count = None, 0
+
+    def maybe_scale(self, executor, queue=None) -> Optional[Decision]:
+        """Consult the policy and apply the transition if accepted."""
+        bus = executor.metrics
+        current = executor.degree
+        target = self.propose(bus, current, queue=queue)
+        self.tick()
+        if target is None:
+            return None
+        rec = executor.set_degree(
+            target,
+            reason=f"{type(self.policy).__name__}: {current}->{target}",
+        )
+        self.notify_resized()
+        d = Decision(
+            chunk_index=executor.chunks_done,
+            current=current,
+            proposed=target,
+            applied=rec is not None,
+            reason=rec.reason if rec else "noop",
+        )
+        self.decisions.append(d)
+        return d

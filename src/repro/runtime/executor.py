@@ -1,0 +1,399 @@
+"""Pattern-agnostic elastic executor (the runtime's SPMD back-end).
+
+A :class:`PatternAdapter` wraps one of the paper's §4 patterns behind a
+uniform interface the runtime can drive over successive stream chunks:
+
+* ``step(state, chunk)`` — one SPMD execution of ``pattern.run`` at the
+  current parallelism degree;
+* ``resize(state, n_old, n_new)`` — the pattern's §4.x adaptivity protocol,
+  returning the re-placed state and an accounting record (S2 block handoff
+  with ``handoff_volume``; S3 merge / identity-init; S4 join-with-global;
+  S5 no-op).
+
+:class:`StreamExecutor` owns the degree, the mesh cache, and a **compiled
+step cache keyed by degree**: resizing to a previously used degree reuses
+the already-traced/compiled step instead of re-tracing (JAX jit caching by
+shape does the per-degree work — the executor just keeps one jitted callable
+alive per degree so nothing is evicted on resize).
+
+Because every chunk is identical in shape and chunk boundaries are the only
+resize points, a run with any schedule of degree changes processes exactly
+the same chunks in exactly the same order as a fixed-degree run — the
+correctness contract `tests/test_runtime.py` proves bit-exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import patterns
+from repro.runtime.metrics import ChunkRecord, MetricsBus, ResizeRecord
+
+
+def default_mesh_factory(n: int, axis: str) -> Mesh:
+    return jax.make_mesh(
+        (n,), (axis,), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ResizeInfo:
+    """What a §4.x transition did (fed to the metrics bus / benchmarks)."""
+
+    protocol: str
+    handoff_items: int = 0
+    detail: str = ""
+
+
+# ---------------------------------------------------------------------------
+# adapters
+# ---------------------------------------------------------------------------
+
+class PatternAdapter:
+    """Uniform driving interface over a §4 pattern instance."""
+
+    #: per-worker granularity: each worker's local chunk slice must be a
+    #: multiple of this (1 except for flush/sync-period patterns)
+    granularity: int = 1
+
+    def validate_degree(self, chunk_size: int, n_w: int) -> None:
+        if chunk_size % n_w:
+            raise ValueError(
+                f"chunk_size={chunk_size} must shard evenly over {n_w} workers"
+            )
+        if (chunk_size // n_w) % self.granularity:
+            raise ValueError(
+                f"per-worker slice {chunk_size // n_w} must be a multiple of "
+                f"the pattern granularity {self.granularity} "
+                f"(chunk_size={chunk_size}, n_w={n_w})"
+            )
+
+    def init_state(self):
+        raise NotImplementedError
+
+    def make_step(self, mesh: Mesh, axis: str) -> Callable:
+        """Return ``(state, chunk) -> (state, out)`` — jit-compilable."""
+        raise NotImplementedError
+
+    def place(self, state, mesh: Mesh, axis: str):
+        """Device-place ``state`` for ``mesh`` (the physical handoff)."""
+        return state
+
+    def resize(self, state, n_old: int, n_new: int) -> Tuple[Any, ResizeInfo]:
+        """Run the pattern's §4.x protocol for a degree change."""
+        raise NotImplementedError
+
+
+class PartitionedAdapter(PatternAdapter):
+    """S2 fully-partitioned state: resize = block repartitioning (handoff)."""
+
+    def __init__(self, pattern: patterns.PartitionedState, v0):
+        self.pattern = pattern
+        self._v0 = v0
+
+    def init_state(self):
+        return self._v0
+
+    def validate_degree(self, chunk_size: int, n_w: int) -> None:
+        super().validate_degree(chunk_size, n_w)
+        self.pattern.slots_per_worker(n_w)  # raises if slots don't divide
+
+    def make_step(self, mesh: Mesh, axis: str) -> Callable:
+        def step(v, chunk):
+            ys, v = self.pattern.run(mesh, axis, chunk, v)
+            return v, ys
+
+        return step
+
+    def place(self, v, mesh: Mesh, axis: str):
+        return jax.device_put(v, NamedSharding(mesh, P(axis)))
+
+    def resize(self, v, n_old: int, n_new: int) -> Tuple[Any, ResizeInfo]:
+        moved = self.pattern.handoff_volume(self.pattern.num_slots, n_old, n_new)
+        v = self.pattern.reshard(v, n_old, n_new)  # value is placement-invariant
+        return v, ResizeInfo(
+            protocol="S2-block-handoff",
+            handoff_items=moved,
+            detail=f"{moved}/{self.pattern.num_slots} slots change owner",
+        )
+
+
+class AccumulatorAdapter(PatternAdapter):
+    """S3 accumulator: state is the committed global value; resize merges
+    (shrink) or identity-initializes (grow) worker-local accumulators.
+
+    Local accumulators are always flushed at chunk boundaries (the chunk's
+    trailing flush), so at a resize point the *entire* state is the global
+    value: a shrink's merge folds identity elements (recorded for the
+    accounting), never loses contributions, and the carried ``s0`` threads
+    the committed view into the next chunk's reads.
+    """
+
+    def __init__(self, pattern: patterns.AccumulatorState, flush_every: int):
+        self.pattern = pattern
+        self.flush_every = flush_every
+        self.granularity = flush_every
+
+    def init_state(self):
+        return self.pattern.zero()
+
+    def make_step(self, mesh: Mesh, axis: str) -> Callable:
+        def step(s, chunk):
+            ys, s = self.pattern.run(
+                mesh, axis, chunk, flush_every=self.flush_every, s0=s
+            )
+            return s, ys
+
+        return step
+
+    def place(self, s, mesh: Mesh, axis: str):
+        return jax.device_put(s, NamedSharding(mesh, P()))
+
+    def resize(self, s, n_old: int, n_new: int) -> Tuple[Any, ResizeInfo]:
+        if n_new < n_old:
+            # departing workers' accumulators are identities (flushed at the
+            # chunk boundary); merging them is exact: s (+) 0 (+) ... (+) 0
+            merged = s
+            for _ in range(n_old - n_new):
+                merged = self.pattern.merge_workers(
+                    merged, self.pattern.new_worker_state()
+                )
+            return merged, ResizeInfo(
+                protocol="S3-merge",
+                detail=f"merged {n_old - n_new} flushed (identity) accumulators",
+            )
+        fresh = n_new - n_old
+        # growth: new workers start from the identity (paper's init rule)
+        return s, ResizeInfo(
+            protocol="S3-identity-init",
+            detail=f"{fresh} new workers initialized to zero()",
+        )
+
+
+class SuccessiveAdapter(PatternAdapter):
+    """S4 successive approximation: state is the committed global best;
+    resize hands every (new) worker the global value — the paper's
+    join-with-global rule, avoiding the convergence slowdown of s_init."""
+
+    def __init__(
+        self,
+        pattern: patterns.SuccessiveApproximationState,
+        s_init,
+        sync_every: int,
+    ):
+        self.pattern = pattern
+        self._s_init = s_init
+        self.sync_every = sync_every
+        self.granularity = sync_every
+
+    def init_state(self):
+        return self._s_init
+
+    def make_step(self, mesh: Mesh, axis: str) -> Callable:
+        def step(s, chunk):
+            trace, s = self.pattern.run(
+                mesh, axis, chunk, s, sync_every=self.sync_every
+            )
+            # the committed global value is the application-visible output
+            return s, {"trace": trace, "committed": s}
+
+        return step
+
+    def place(self, s, mesh: Mesh, axis: str):
+        return jax.device_put(s, NamedSharding(mesh, P()))
+
+    def resize(self, s, n_old: int, n_new: int) -> Tuple[Any, ResizeInfo]:
+        joined = self.pattern.new_worker_state(s)  # global-value join
+        return joined, ResizeInfo(
+            protocol="S4-global-join",
+            detail=f"workers join with committed global value ({n_old}->{n_new})",
+        )
+
+
+class SeparateAdapter(PatternAdapter):
+    """S5 separate task/state: the commit fold is replicated and canonical-
+    order, so a degree change needs no state protocol at all."""
+
+    def __init__(self, pattern: patterns.SeparateTaskState, s0):
+        self.pattern = pattern
+        self._s0 = s0
+
+    def init_state(self):
+        return self._s0
+
+    def make_step(self, mesh: Mesh, axis: str) -> Callable:
+        def step(s, chunk):
+            ys, trace, s = self.pattern.run(mesh, axis, chunk, s)
+            return s, {"ys": ys, "trace": trace}
+
+        return step
+
+    def place(self, s, mesh: Mesh, axis: str):
+        return jax.device_put(s, NamedSharding(mesh, P()))
+
+    def resize(self, s, n_old: int, n_new: int) -> Tuple[Any, ResizeInfo]:
+        return s, ResizeInfo(
+            protocol="S5-noop", detail="replicated state: no transfer"
+        )
+
+
+# ---------------------------------------------------------------------------
+# executor
+# ---------------------------------------------------------------------------
+
+class StreamExecutor:
+    """Drive a pattern adapter over successive chunks with online resizes.
+
+    ``set_degree`` is legal *between* chunks only (chunk boundaries are the
+    quiescent points of the paper's protocols: all in-flight tasks of the old
+    degree have committed).  Compiled steps are cached per degree, so a
+    degree revisited after further resizes pays no re-trace.
+    """
+
+    def __init__(
+        self,
+        adapter: PatternAdapter,
+        *,
+        degree: int,
+        chunk_size: int,
+        axis: str = "workers",
+        mesh_factory: Callable[[int, str], Mesh] = default_mesh_factory,
+        metrics: Optional[MetricsBus] = None,
+        max_degree: Optional[int] = None,
+    ):
+        self.adapter = adapter
+        self.axis = axis
+        self.chunk_size = chunk_size
+        self.mesh_factory = mesh_factory
+        self.metrics = metrics if metrics is not None else MetricsBus()
+        self.max_degree = max_degree
+        self._meshes: Dict[int, Mesh] = {}
+        self._steps: Dict[int, Callable] = {}
+        self.degree = degree
+        adapter.validate_degree(chunk_size, degree)
+        self.state = adapter.place(adapter.init_state(), self._mesh(degree), axis)
+        self.chunks_done = 0
+
+    # -- degree / compile caches ---------------------------------------------
+    def _mesh(self, n: int) -> Mesh:
+        if n not in self._meshes:
+            if self.max_degree is not None and n > self.max_degree:
+                raise ValueError(f"degree {n} exceeds max_degree={self.max_degree}")
+            self._meshes[n] = self.mesh_factory(n, self.axis)
+        return self._meshes[n]
+
+    def _step(self, n: int) -> Callable:
+        if n not in self._steps:
+            raw = self.adapter.make_step(self._mesh(n), self.axis)
+            self._steps[n] = jax.jit(raw)
+        return self._steps[n]
+
+    @property
+    def compiled_degrees(self) -> List[int]:
+        return sorted(self._steps)
+
+    def set_degree(self, n_new: int, *, reason: str = "") -> Optional[ResizeRecord]:
+        """Apply a §4.x transition to ``n_new``; no-op if already there."""
+        if n_new == self.degree:
+            return None
+        self.adapter.validate_degree(self.chunk_size, n_new)
+        n_old = self.degree
+        self.state, info = self.adapter.resize(self.state, n_old, n_new)
+        self.state = self.adapter.place(self.state, self._mesh(n_new), self.axis)
+        self.degree = n_new
+        rec = ResizeRecord(
+            t=self.metrics.clock.now(),
+            n_old=n_old,
+            n_new=n_new,
+            protocol=info.protocol,
+            handoff_items=info.handoff_items,
+            reason=reason or info.detail,
+        )
+        self.metrics.record_resize(rec)
+        return rec
+
+    # -- execution ------------------------------------------------------------
+    def process(self, chunk, *, queue_depth: int = 0):
+        """Run one chunk at the current degree; returns the chunk output."""
+        chunk = jnp.asarray(chunk)
+        if chunk.shape[0] != self.chunk_size:
+            # tail chunk: fall back to the largest compatible degree
+            self._fit_degree_for(chunk.shape[0])
+        t0 = self.metrics.clock.now()
+        self.state, out = self._step(self.degree)(self.state, chunk)
+        jax.block_until_ready(out)
+        t1 = self.metrics.clock.now()
+        self.metrics.record_chunk(
+            ChunkRecord(
+                t_start=t0,
+                t_end=t1,
+                m=int(chunk.shape[0]),
+                n_workers=self.degree,
+                queue_depth=queue_depth,
+                collector_updates=int(chunk.shape[0]) // self.adapter.granularity,
+            )
+        )
+        self.chunks_done += 1
+        return out
+
+    def _fit_degree_for(self, m: int) -> None:
+        """Shrink to the largest degree that fits a short (tail) chunk.
+
+        ``chunk_size`` itself is left untouched: a short chunk is an event,
+        not a reconfiguration — subsequent full chunks validate against the
+        original size, and the degree recovers via the schedule/autoscaler.
+        """
+        for n in range(min(self.degree, m), 0, -1):
+            try:
+                self.adapter.validate_degree(m, n)
+            except ValueError:
+                continue
+            saved = self.chunk_size
+            self.chunk_size = m  # set_degree validates against chunk_size
+            try:
+                self.set_degree(n, reason=f"short chunk of {m} items")
+            finally:
+                self.chunk_size = saved
+            return
+        raise ValueError(f"no degree can process a tail chunk of {m} items")
+
+    def run(
+        self,
+        chunks: Iterable,
+        *,
+        schedule: Optional[Dict[int, int]] = None,
+        autoscaler=None,
+        queue=None,
+    ) -> List[Any]:
+        """Process an iterable of chunks.  ``schedule`` maps chunk index ->
+        degree (explicit resize points, used by tests/benchmarks);
+        ``autoscaler`` is consulted between chunks when given."""
+        outs: List[Any] = []
+        for i, chunk in enumerate(chunks):
+            if schedule and i in schedule:
+                self.set_degree(schedule[i], reason=f"schedule@chunk{i}")
+            if autoscaler is not None:
+                autoscaler.maybe_scale(self, queue=queue)
+            outs.append(self.process(chunk))
+        return outs
+
+
+def run_stream(step: Callable, stream: Iterable, state, *run_args):
+    """Generic chunked fold: ``step(state, chunk, *run_args) -> (state, out)``.
+
+    The compatibility core of the old ``TaskFarm.run_stream`` — kept for
+    callers that drive a hand-rolled step; new code should use
+    :class:`StreamExecutor`, which adds degree management, metrics, and the
+    compiled-step cache.
+    """
+    outs = []
+    for chunk in stream:
+        state, out = step(state, chunk, *run_args)
+        outs.append(out)
+    return state, outs

@@ -1,0 +1,174 @@
+"""Telemetry bus for the elastic runtime.
+
+Records per-chunk service times, queue depth, resize events, and collector
+pressure, and derives the queueing quantities the autoscaler consumes:
+
+* ``t_f_hat`` — EWMA estimate of per-item work, recovered from measured chunk
+  service times as ``service * n_w / m`` (the paper's §2 model inverted).
+* ``utilization`` — offered load over capacity, ``lambda * t_f_hat / n_w``,
+  with the arrival rate measured over a sliding window.
+* ``throughput`` — completed items per unit time over the window.
+
+The same quantities cross-check against :mod:`repro.core.analytics`:
+``expected_service_time`` is the paper's ``T_s(n_w) = max(t_a, t_f/n_w)``
+with the *measured* ``t_f_hat`` plugged in, which is how the elastic
+benchmark validates post-resize throughput against the analytic envelope.
+
+Clocks are pluggable so the same bus serves real wall-clock runs and
+discrete-event simulations (:class:`LogicalClock` advances only when told).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core import analytics
+
+
+class WallClock:
+    def now(self) -> float:
+        return time.perf_counter()
+
+
+class LogicalClock:
+    """Deterministic clock for simulated runs: advances only via `advance`."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = t0
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError("time cannot go backwards")
+        self._t += dt
+        return self._t
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkRecord:
+    t_start: float
+    t_end: float
+    m: int                 # items in the chunk
+    n_workers: int
+    queue_depth: int       # depth observed when the chunk was formed
+    collector_updates: int = 0  # flush/sync commits in the chunk (S3/S4)
+
+    @property
+    def service_time(self) -> float:
+        return self.t_end - self.t_start
+
+
+@dataclasses.dataclass(frozen=True)
+class ResizeRecord:
+    t: float
+    n_old: int
+    n_new: int
+    protocol: str          # which §4.x transition ran
+    handoff_items: int     # S2 slots moved; 0 for S3/S4/S5
+    reason: str
+
+
+class MetricsBus:
+    def __init__(self, *, clock=None, ewma_alpha: float = 0.3, window: int = 16):
+        self.clock = clock if clock is not None else WallClock()
+        self.chunks: List[ChunkRecord] = []
+        self.resizes: List[ResizeRecord] = []
+        self.depth_samples: List[int] = []
+        self._alpha = ewma_alpha
+        self._window = window
+        self._t_f_hat: Optional[float] = None
+
+    # -- recording -----------------------------------------------------------
+    def record_chunk(self, rec: ChunkRecord) -> None:
+        self.chunks.append(rec)
+        if rec.m > 0 and rec.service_time > 0:
+            sample = rec.service_time * rec.n_workers / rec.m
+            if self._t_f_hat is None:
+                self._t_f_hat = sample
+            else:
+                self._t_f_hat = (
+                    self._alpha * sample + (1 - self._alpha) * self._t_f_hat
+                )
+
+    def record_resize(self, rec: ResizeRecord) -> None:
+        self.resizes.append(rec)
+
+    def record_depth(self, depth: int) -> None:
+        self.depth_samples.append(depth)
+
+    # -- derived signals -----------------------------------------------------
+    @property
+    def t_f_hat(self) -> Optional[float]:
+        """EWMA per-item work estimate (seconds, or simulated units)."""
+        return self._t_f_hat
+
+    def _recent(self) -> List[ChunkRecord]:
+        return self.chunks[-self._window :]
+
+    def throughput(self) -> Optional[float]:
+        recent = self._recent()
+        if not recent:
+            return None
+        span = recent[-1].t_end - recent[0].t_start
+        if span <= 0:
+            return None
+        return sum(r.m for r in recent) / span
+
+    def mean_service_time(self) -> Optional[float]:
+        recent = self._recent()
+        if not recent:
+            return None
+        return sum(r.service_time for r in recent) / len(recent)
+
+    def utilization(self, arrival_rate: Optional[float] = None) -> Optional[float]:
+        """Offered load / capacity at the current degree.
+
+        With no explicit arrival rate, the executor's measured throughput is
+        used as a lower bound on the offered load (exact when the queue is
+        never empty).
+        """
+        recent = self._recent()
+        if not recent or self._t_f_hat is None:
+            return None
+        lam = arrival_rate if arrival_rate is not None else self.throughput()
+        if lam is None:
+            return None
+        n_w = recent[-1].n_workers
+        return lam * self._t_f_hat / n_w
+
+    def collector_pressure(self) -> Optional[float]:
+        """Collector commits per item over the window (paper's Fig. 4 knob:
+        high pressure means the flush period is too small for this degree)."""
+        recent = self._recent()
+        items = sum(r.m for r in recent)
+        if not items:
+            return None
+        return sum(r.collector_updates for r in recent) / items
+
+    def expected_service_time(self, n_w: int, t_a: float = 0.0) -> Optional[float]:
+        """Paper §2 ``T_s(n_w)`` with the measured ``t_f_hat``: the analytic
+        cross-check for what a resize to ``n_w`` should deliver."""
+        if self._t_f_hat is None:
+            return None
+        # t_f_hat is per-item work for ONE worker; a chunk of m items on n_w
+        # workers ideally takes m/n_w * t_f_hat.
+        return analytics.service_time(t_a, self._t_f_hat, n_w)
+
+    def summary(self) -> Dict[str, Any]:
+        recent = self._recent()
+        return {
+            "chunks": len(self.chunks),
+            "items": sum(r.m for r in self.chunks),
+            "degree": recent[-1].n_workers if recent else None,
+            "queue_depth": self.depth_samples[-1] if self.depth_samples else 0,
+            "throughput": self.throughput(),
+            "mean_service_time": self.mean_service_time(),
+            "t_f_hat": self._t_f_hat,
+            "utilization": self.utilization(),
+            "collector_pressure": self.collector_pressure(),
+            "resizes": len(self.resizes),
+        }

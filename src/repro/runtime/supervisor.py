@@ -1,0 +1,159 @@
+"""Failure supervisor: checkpoint-mediated shrink on failure, grow on
+recovery.
+
+Reuses the ft-layer contract (``repro.checkpoint``: atomic step directories,
+restore under new shardings IS the §4.2 repartitioning) at chunk
+granularity: the adapter state plus the stream cursor are checkpointed every
+``ckpt_every`` chunks, a worker failure rolls back to the newest complete
+checkpoint and re-runs at a degraded degree (failure => shrink, the
+farm lost capacity), and after ``recover_after`` healthy chunks the degree
+is restored (recovery => grow).  The deterministic chunk source makes replay
+bit-exact; outputs are keyed by chunk index so a replayed chunk overwrites
+rather than duplicates — the output stream is never dropped or reordered.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.runtime.executor import StreamExecutor
+
+
+class WorkerFailure(RuntimeError):
+    """A worker (or its host) died mid-chunk."""
+
+
+@dataclasses.dataclass
+class FailurePlan:
+    """Deterministic chaos drill: fail before chunk ``fail_at`` once, then
+    declare the capacity recovered after ``recover_after`` further chunks."""
+
+    fail_at: int
+    recover_after: int = 2
+
+
+@dataclasses.dataclass
+class SupervisorEvent:
+    chunk_index: int
+    kind: str          # "failure" | "restore" | "shrink" | "grow" | "ckpt"
+    detail: str
+
+
+class Supervisor:
+    def __init__(
+        self,
+        executor: StreamExecutor,
+        chunk_fn: Callable[[int], Any],
+        num_chunks: int,
+        *,
+        ckpt_dir: str,
+        ckpt_every: int = 1,
+        failure_plan: Optional[FailurePlan] = None,
+        degraded_degree: Optional[int] = None,
+    ):
+        """``chunk_fn(i)`` regenerates chunk ``i`` (the deterministic-stream
+        contract); ``degraded_degree`` is the post-failure degree (default:
+        the next-smaller compiled-or-valid power of the current degree)."""
+        self.executor = executor
+        self.chunk_fn = chunk_fn
+        self.num_chunks = num_chunks
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = max(1, ckpt_every)
+        self.failure_plan = failure_plan
+        self.degraded_degree = degraded_degree
+        self.events: List[SupervisorEvent] = []
+        self.outputs: Dict[int, Any] = {}
+
+    def _log(self, i: int, kind: str, detail: str) -> None:
+        self.events.append(SupervisorEvent(i, kind, detail))
+
+    def _checkpoint(self, i: int) -> None:
+        ckpt_lib.save(
+            self.ckpt_dir,
+            i,
+            self.executor.state,
+            metadata={"cursor": i, "degree": self.executor.degree},
+        )
+        self._log(i, "ckpt", f"state at chunk {i}")
+
+    def _restore_latest(self) -> int:
+        latest = ckpt_lib.latest_step(self.ckpt_dir)
+        if latest is None:
+            # no checkpoint yet: restart the stream from the initial state
+            self.executor.state = self.executor.adapter.place(
+                self.executor.adapter.init_state(),
+                self.executor._mesh(self.executor.degree),
+                self.executor.axis,
+            )
+            self._log(0, "restore", "no checkpoint; restarting stream")
+            return 0
+        state, meta = ckpt_lib.restore(
+            self.ckpt_dir, latest, self.executor.state
+        )
+        self.executor.state = self.executor.adapter.place(
+            state, self.executor._mesh(self.executor.degree), self.executor.axis
+        )
+        self._log(latest, "restore", f"restored checkpoint at chunk {latest}")
+        return int(meta["cursor"])
+
+    def _shrink_for_failure(self, healthy_degree: int) -> int:
+        if self.degraded_degree is not None:
+            return self.degraded_degree
+        downs = [
+            n for n in range(1, healthy_degree) if healthy_degree % n == 0
+        ]
+        return max(downs) if downs else 1
+
+    def run(self) -> Dict[int, Any]:
+        os.makedirs(self.ckpt_dir, exist_ok=True)
+        self._checkpoint(0)  # chunk-0 baseline so rollback is always defined
+        healthy = self.executor.degree
+        failed = False
+        degraded_since: Optional[int] = None
+        i = 0
+        while i < self.num_chunks:
+            try:
+                if (
+                    self.failure_plan is not None
+                    and not failed
+                    and i == self.failure_plan.fail_at
+                ):
+                    failed = True
+                    raise WorkerFailure(f"injected failure before chunk {i}")
+                recover_after = (
+                    self.failure_plan.recover_after
+                    if self.failure_plan is not None
+                    else 1
+                )
+                if (
+                    degraded_since is not None
+                    and i - degraded_since >= recover_after
+                ):
+                    # recovery: capacity is back — grow to the healthy degree
+                    rec = self.executor.set_degree(
+                        healthy, reason="recovery: capacity restored"
+                    )
+                    if rec:
+                        self._log(i, "grow", f"{rec.n_old}->{rec.n_new}")
+                    degraded_since = None
+                # keyed by chunk index: a replayed chunk overwrites its own
+                # slot, so failures never duplicate or reorder outputs
+                self.outputs[i] = self.executor.process(self.chunk_fn(i))
+                i += 1
+                if i % self.ckpt_every == 0:
+                    self._checkpoint(i)
+            except WorkerFailure as e:
+                self._log(i, "failure", str(e))
+                cursor = self._restore_latest()
+                target = self._shrink_for_failure(healthy)
+                rec = self.executor.set_degree(
+                    target, reason=f"failure: lost capacity at chunk {i}"
+                )
+                if rec:
+                    self._log(i, "shrink", f"{rec.n_old}->{rec.n_new}")
+                degraded_since = cursor
+                i = cursor
+        return self.outputs

@@ -12,8 +12,12 @@ state partitions; the slot-assignment policy is the hash ``h``:
   the beyond-paper default; also the straggler mitigation: a slow request
   never blocks admission to other slots).
 
-Elasticity (§4.2 adaptivity): `resize()` re-creates the engine with a new
-slot count; block-partitioned caches are re-admitted per session.
+Elasticity (§4.2 adaptivity): `resize()` changes the slot count ONLINE —
+active sessions' caches are relocated slot-to-slot (a bit-exact copy, the
+block-handoff protocol applied to the session store) instead of re-creating
+the engine and re-prefilling everything.  `repro.serving.app.ServingRuntime`
+wires the engine into the elastic runtime (request stream -> backpressure
+queue -> autoscaler deciding the slot count).
 
 All decode slots advance in ONE SPMD `serve_step` with per-slot cache
 positions (ragged continuous batching).
@@ -70,6 +74,13 @@ class ServingEngine:
         self.waiting: Deque[Request] = collections.deque()
         self.steps = 0
         self.tokens_out = 0
+        self.resize_events: List[dict] = []
+        # reusable single-slot prefill cache: admitting a request re-uses
+        # this buffer as the prefill input instead of allocating a fresh
+        # one-slot cache per admission (positions beyond the prompt hold
+        # stale values from earlier admissions, which attention masking by
+        # `lengths` never reads)
+        self._one_caches = T.init_caches(cfg, 1, s_max, cfg.cdtype)
 
         cfg_ = cfg
 
@@ -88,6 +99,7 @@ class ServingEngine:
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode, donate_argnums=(1,))
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._extract = jax.jit(self._extract_impl)
 
     # -- S2 slot assignment ----------------------------------------------------
     def _slot_for(self, req: Request) -> Optional[int]:
@@ -100,8 +112,10 @@ class ServingEngine:
         return None
 
     @staticmethod
-    def _insert_impl(caches, one_caches, slot):
-        """Write a prefilled [1, ...] cache into slot `slot`."""
+    def _walk_slot(big, one, leaf_op):
+        """Walk the (big cache, one-slot cache) pytrees in lockstep, applying
+        ``leaf_op(big_leaf, one_leaf, axis)`` with the slot axis detected per
+        leaf: stacked leaves are [n_units, B, ...] vs [n_units, 1, ...]."""
 
         def walk(b, s):
             if b is None:
@@ -110,13 +124,111 @@ class ServingEngine:
                 return {k: walk(b[k], s[k]) for k in b}
             if isinstance(b, tuple):
                 return tuple(walk(x, y) for x, y in zip(b, s))
-            # stacked leaves [n_units, B, ...] vs [n_units, 1, ...]
             axis = 1 if b.ndim >= 2 and s.shape[0] == b.shape[0] and s.shape[1] == 1 else 0
-            return jax.lax.dynamic_update_slice_in_dim(
-                b, s.astype(b.dtype), slot, axis=axis
-            )
+            return leaf_op(b, s, axis)
 
-        return walk(caches, one_caches)
+        return walk(big, one)
+
+    @staticmethod
+    def _insert_impl(caches, one_caches, slot):
+        """Write a prefilled [1, ...] cache into slot `slot`."""
+        return ServingEngine._walk_slot(
+            caches,
+            one_caches,
+            lambda b, s, axis: jax.lax.dynamic_update_slice_in_dim(
+                b, s.astype(b.dtype), slot, axis=axis
+            ),
+        )
+
+    @staticmethod
+    def _extract_impl(caches, one_template, slot):
+        """Slice slot ``slot`` out of the big cache as a [1, ...] cache.
+
+        ``one_template`` (a one-slot cache) supplies the structure; the slot
+        axis per leaf comes from the shared walk, so insert and extract can
+        never disagree on the layout."""
+        return ServingEngine._walk_slot(
+            caches,
+            one_template,
+            lambda b, s, axis: jax.lax.dynamic_slice_in_dim(b, slot, 1, axis=axis),
+        )
+
+    # -- §4.2 adaptivity: online session-store resize --------------------------
+    def resize(self, new_num_slots: int) -> int:
+        """Change the decode-slot count online; returns sessions relocated.
+
+        The S2 block-handoff protocol applied to the session store: a new
+        cache of ``new_num_slots`` partitions is allocated and every active
+        session's cache is copied slot-to-slot (bit-exact — no re-prefill,
+        no dropped or reordered requests).  ``ondemand`` keeps slot ids when
+        they still fit and compacts the rest into free low slots; ``hash``
+        re-hashes sessions to the new modulus, and a session whose new slot
+        collides with another active session is requeued (its continuation
+        is replayed exactly from prompt+generated at the next admit).
+
+        Shrinking below the number of active sessions requeues the overflow
+        the same way.  Raises for a non-positive slot count.
+        """
+        if new_num_slots <= 0:
+            raise ValueError(f"num_slots must be >= 1, got {new_num_slots}")
+        if new_num_slots == self.num_slots:
+            return 0
+
+        old_active = dict(self.active)
+        placements: Dict[int, int] = {}   # old slot -> new slot
+        requeued: list = []
+        if self.policy == "hash":
+            for old_slot, req in old_active.items():
+                want = (req.rid * 2654435761) % new_num_slots
+                if want in placements.values():
+                    requeued.append(req)
+                else:
+                    placements[old_slot] = want
+        else:
+            # keep slot ids that still fit; compact the rest into free slots
+            for old_slot in sorted(old_active):
+                if old_slot < new_num_slots:
+                    placements[old_slot] = old_slot
+            free_slots = iter(
+                s for s in range(new_num_slots) if s not in placements.values()
+            )
+            for old_slot in sorted(old_active):
+                if old_slot >= new_num_slots:
+                    tgt = next(free_slots, None)
+                    if tgt is None:
+                        requeued.append(old_active[old_slot])
+                    else:
+                        placements[old_slot] = tgt
+
+        new_caches = T.init_caches(self.cfg, new_num_slots, self.s_max,
+                                   self.cfg.cdtype)
+        new_lengths = np.zeros(new_num_slots, np.int32)
+        new_last = np.zeros(new_num_slots, np.int32)
+        new_active: Dict[int, Request] = {}
+        moved = 0
+        for old_slot, new_slot in placements.items():
+            one = self._extract(self.caches, self._one_caches, old_slot)
+            new_caches = self._insert(new_caches, one, new_slot)
+            req = old_active[old_slot]
+            req.slot = new_slot
+            new_active[new_slot] = req
+            new_lengths[new_slot] = self.lengths[old_slot]
+            new_last[new_slot] = self.last_token[old_slot]
+            moved += int(new_slot != old_slot)
+        for req in reversed(requeued):  # appendleft: reverse to keep order
+            req.slot = None
+            self.waiting.appendleft(req)  # ahead of new arrivals
+
+        self.resize_events.append({
+            "old": self.num_slots, "new": new_num_slots,
+            "relocated": moved, "requeued": len(requeued),
+        })
+        self.num_slots = new_num_slots
+        self.caches = new_caches
+        self.lengths = new_lengths
+        self.last_token = new_last
+        self.active = new_active
+        return moved
 
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
@@ -132,19 +244,30 @@ class ServingEngine:
                     still_waiting.extend(self.waiting)
                     break
                 continue
-            # prefill on a [1, prompt] batch, then splice into the big cache
-            plen = len(req.prompt)
-            one = T.init_caches(self.cfg, 1, self.s_max, self.cfg.cdtype)
+            # prefill on a [1, prefix] batch (reusing the preallocated
+            # one-slot cache — no per-admission allocation), then splice
+            # into the big cache.  The prefix includes any already-generated
+            # tokens so a session requeued by a resize replays exactly.
+            prefix = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.generated, np.int32)]
+            ) if req.generated else np.asarray(req.prompt, np.int32)
+            plen = len(prefix)
             tok, one = self._prefill(
-                self.params, one, jnp.asarray(req.prompt, jnp.int32)[None, :]
+                self.params, self._one_caches, jnp.asarray(prefix)[None, :]
             )
+            req.generated.append(int(tok[0]))
+            self.tokens_out += 1
+            if req.done:
+                # a requeued session can complete at the replay prefill
+                # itself — it must not occupy (and keep decoding in) a slot
+                req.slot = None
+                continue
             self.caches = self._insert(self.caches, one, slot)
             req.slot = slot
-            req.generated.append(int(tok[0]))
             self.active[slot] = req
             self.lengths[slot] = plen
             self.last_token[slot] = int(tok[0])
-            self.tokens_out += 1
         self.waiting = still_waiting
 
     def step(self) -> None:

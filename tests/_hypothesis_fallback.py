@@ -1,0 +1,118 @@
+"""Minimal, deterministic stand-in for `hypothesis` when it isn't installed.
+
+The container image bakes the JAX toolchain but not hypothesis; rather than
+skip the property tests entirely, this shim re-implements the tiny API
+surface the suite uses (``given``, ``settings``, and the ``integers`` /
+``floats`` / ``lists`` / ``sampled_from`` strategies with ``.map``) as a
+fixed-seed random-example engine.  ``tests/conftest.py`` installs it into
+``sys.modules`` only when the real package is absent, so environments with
+hypothesis available are unaffected.
+
+Not a shrinker — a failing example is reported verbatim.  Determinism (seed
+fixed per test) keeps CI runs reproducible.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, List
+
+
+class Strategy:
+    """A draw function over a `random.Random`; supports `.map`."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "Strategy":
+        def draw(rng: random.Random):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate too restrictive")
+
+        return Strategy(draw)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 16) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(
+    min_value: float = 0.0,
+    max_value: float = 1.0,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+    **_: Any,
+) -> Strategy:
+    del allow_nan, allow_infinity  # bounded draws are always finite
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(seq) -> Strategy:
+    pool = list(seq)
+    return Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+
+    return Strategy(draw)
+
+
+class settings:
+    """Accepts (and mostly ignores) hypothesis settings kwargs."""
+
+    def __init__(self, max_examples: int = 20, deadline=None, **_: Any):
+        del deadline
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._max_examples = self.max_examples  # read by `given`'s wrapper
+        return fn
+
+
+def given(*strategies: Strategy):
+    """Run the test with `max_examples` fixed-seed random draws.
+
+    Handles either decorator order with `settings` (attribute is read at
+    call time from the outermost wrapper, falling back to the wrapped fn).
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", None)
+            if n is None:
+                n = getattr(fn, "_max_examples", 20)
+            rng = random.Random(0xC0FFEE)
+            for i in range(n):
+                drawn = [s.draw(rng) for s in strategies]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:  # report the failing example
+                    raise AssertionError(
+                        f"falsifying example #{i}: {drawn!r}"
+                    ) from e
+
+        wrapper._max_examples = getattr(fn, "_max_examples", None)
+        # hide the strategy-bound (trailing) parameters from pytest, which
+        # would otherwise treat them as fixtures
+        params = list(inspect.signature(fn).parameters.values())
+        kept = params[: len(params) - len(strategies)]
+        wrapper.__signature__ = inspect.Signature(kept)
+        del wrapper.__wrapped__  # stop inspect from following to `fn`
+        return wrapper
+
+    return deco

@@ -79,8 +79,10 @@ class TestParser:
         s = H.analyze(c.as_text())
         assert s.dot_flops == 7 * 2 * 32 * 64 * 64
         # XLA's own count confirms the undercount we correct for
-        xla = c.cost_analysis()["flops"]
-        assert xla < s.dot_flops
+        cost = c.cost_analysis()
+        if isinstance(cost, list):  # older JAX: one dict per partition
+            cost = cost[0]
+        assert cost["flops"] < s.dot_flops
 
 
 class TestRooflineIntegration:

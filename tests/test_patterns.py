@@ -107,12 +107,34 @@ class TestPartitioned:
     @settings(max_examples=40, deadline=None)
     def test_handoff_volume_props(self, num_slots, n_old, n_new):
         if num_slots % n_old or num_slots % n_new:
+            with pytest.raises(ValueError, match="num_slots"):
+                patterns.PartitionedState.handoff_volume(num_slots, n_old, n_new)
             return
         v = patterns.PartitionedState.handoff_volume(num_slots, n_old, n_new)
         assert 0 <= v <= num_slots
         assert v == patterns.PartitionedState.handoff_volume(num_slots, n_new, n_old)
         if n_old == n_new:
             assert v == 0
+
+    def test_adaptivity_math_validates(self):
+        """§4.x hardening: ragged block sizes are an error, not a silent
+        mis-count, in both ownership and handoff accounting."""
+        pat = patterns.PartitionedState(
+            f=lambda x, s: s, ns=lambda x, s: s, h=lambda x: x, num_slots=12
+        )
+        with pytest.raises(ValueError, match="does not divide"):
+            pat.slots_per_worker(5)
+        with pytest.raises(ValueError, match=">= 1"):
+            pat.slots_per_worker(0)
+        with pytest.raises(ValueError, match="n_old"):
+            patterns.PartitionedState.handoff_volume(12, 5, 4)
+        with pytest.raises(ValueError, match="n_new"):
+            patterns.PartitionedState.handoff_volume(12, 4, 5)
+        with pytest.raises(ValueError, match=">= 1"):
+            patterns.PartitionedState.handoff_volume(12, 0, 4)
+        # the valid cases still work
+        assert patterns.PartitionedState.handoff_volume(12, 4, 4) == 0
+        assert patterns.PartitionedState.handoff_volume(12, 2, 6) > 0
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +186,29 @@ class TestAccumulator:
         assert int(pat.merge_workers(jnp.int32(5), jnp.int32(7))) == 12
         assert int(pat.new_worker_state()) == 0
 
+    @given(
+        st.integers(min_value=-1000, max_value=1000),
+        st.integers(min_value=-1000, max_value=1000),
+        st.integers(min_value=-1000, max_value=1000),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_merge_associativity_with_zero(self, a, b, c):
+        """§4.3 adaptivity soundness: merge is associative and `zero()` is
+        its identity — merging workers in any grouping (and merging in a
+        fresh worker) cannot change the accumulated state."""
+        pat = patterns.AccumulatorState(
+            f=lambda x, s: s,
+            g=lambda x: x,
+            combine=lambda x, y: x + y,
+            zero=lambda: jnp.int32(0),
+        )
+        sa, sb, sc = jnp.int32(a), jnp.int32(b), jnp.int32(c)
+        lhs = pat.merge_workers(pat.merge_workers(sa, sb), sc)
+        rhs = pat.merge_workers(sa, pat.merge_workers(sb, sc))
+        assert int(lhs) == int(rhs)
+        assert int(pat.merge_workers(sa, pat.new_worker_state())) == a
+        assert int(pat.merge_workers(pat.new_worker_state(), sa)) == a
+
 
 # ---------------------------------------------------------------------------
 # §4.4 successive approximation
@@ -189,6 +234,24 @@ class TestSuccessiveApproximation:
         tr = np.asarray(trace)
         assert (np.diff(tr) <= 1e-9).all()
         assert float(s) == pytest.approx(float(np.min(np.float32(data))))
+
+    def test_new_worker_state_joins_with_global(self):
+        """§4.4 adaptivity: a worker added mid-run receives the committed
+        global value (not s_init), so it can never propose a regression and
+        never re-walks already-converged ground."""
+        pat = patterns.SuccessiveApproximationState(
+            c=lambda x, s: x < s,
+            s_prime=lambda x, s: jnp.minimum(x, s),
+            direction="min",
+        )
+        s_global = jnp.float32(0.25)
+        joined = pat.new_worker_state(s_global)
+        assert float(joined) == 0.25
+        # pytree global state is handed over structurally intact
+        tree = {"best": jnp.float32(0.5), "arg": jnp.int32(7)}
+        joined_tree = pat.new_worker_state(tree)
+        assert float(joined_tree["best"]) == 0.5
+        assert int(joined_tree["arg"]) == 7
 
     def test_non_monotone_updates_discarded(self):
         # an "update" that would raise the state must be rejected by c

@@ -1,0 +1,429 @@
+"""Tests for the elastic streaming runtime (`repro.runtime`).
+
+Two layers:
+
+* SPMD resize correctness (the acceptance criterion: mid-stream grow+shrink
+  == fixed-degree reference, bit-exact, for S2/S3/S4 plus S5) runs in a
+  subprocess with 8 placeholder host devices — see tests/runtime_checks.py.
+* Everything host-side — arrival models, backpressure queue, chunker,
+  metrics bus, autoscaler policies/cooldown/hysteresis, and the serving
+  runtime's ONLINE session-store resize — runs in-process on 1 device.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    Autoscaler,
+    BackpressureQueue,
+    BoundedSource,
+    BurstyRate,
+    Chunker,
+    ConstantRate,
+    LogicalClock,
+    MetricsBus,
+    PoissonRate,
+    QueueDepthPolicy,
+    SinusoidRate,
+    SyntheticSource,
+    ThroughputTargetPolicy,
+    UtilizationPolicy,
+    pump,
+)
+from repro.runtime.metrics import ChunkRecord
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_REPO = os.path.dirname(_HERE)
+
+
+# ---------------------------------------------------------------------------
+# SPMD resize equivalence (subprocess, 8 devices)
+# ---------------------------------------------------------------------------
+
+def test_runtime_resize_equivalence_spmd():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_HERE, "runtime_checks.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "ALL RUNTIME CHECKS PASSED" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# stream front-end
+# ---------------------------------------------------------------------------
+
+class TestArrivalModels:
+    def test_constant_and_bursty(self):
+        assert [ConstantRate(3).arrivals(t) for t in range(4)] == [3, 3, 3, 3]
+        b = BurstyRate(base=1, burst=9, period=4, duty=2)
+        assert [b.arrivals(t) for t in range(8)] == [9, 9, 1, 1, 9, 9, 1, 1]
+
+    def test_poisson_deterministic(self):
+        p = PoissonRate(lam=4.0, seed=3)
+        a = [p.arrivals(t) for t in range(32)]
+        assert a == [p.arrivals(t) for t in range(32)]  # reproducible
+        assert 2.0 < np.mean(a) < 6.0
+
+    def test_sinusoid_nonnegative_and_periodic(self):
+        s = SinusoidRate(mean=4, amplitude=6, period=8)
+        vals = [s.arrivals(t) for t in range(16)]
+        assert min(vals) >= 0
+        assert vals[:8] == vals[8:]
+
+
+class TestSources:
+    def test_bounded_source_cursor(self):
+        src = BoundedSource(np.arange(10))
+        assert src.take(4).tolist() == [0, 1, 2, 3]
+        assert src.position == 4
+        src.seek(2)
+        assert src.take(3).tolist() == [2, 3, 4]
+        src.take(100)
+        assert src.exhausted
+
+    def test_synthetic_source_regenerable(self):
+        src = SyntheticSource(lambda i: np.int32(i * i), total=6)
+        a = src.take(6)
+        src.seek(0)
+        b = src.take(6)
+        np.testing.assert_array_equal(a, b)
+        assert src.exhausted
+
+
+class TestBackpressureQueue:
+    def test_offer_respects_capacity(self):
+        q = BackpressureQueue(capacity=4, high_watermark=3, low_watermark=1)
+        accepted = q.offer(np.arange(6))
+        assert accepted == 4 and q.depth == 4
+        assert q.stats.offered == 6 and q.stats.accepted == 4
+
+    def test_fifo_order_under_backpressure(self):
+        q = BackpressureQueue(capacity=3)
+        src = BoundedSource(np.arange(8))
+        taken = []
+        pend = None
+        t = 0
+        while not (src.exhausted and q.depth == 0 and pend is None):
+            pend = pump(src, ConstantRate(5), q, t, pending=pend)
+            taken.extend(q.take(2))
+            t += 1
+        assert [int(x) for x in taken] == list(range(8))  # no loss, no reorder
+
+    def test_watermark_accounting(self):
+        q = BackpressureQueue(capacity=8, high_watermark=6, low_watermark=1)
+        q.offer(np.arange(7))
+        q.observe()
+        assert q.stats.ticks_above_high == 1
+        q.take(7)
+        q.observe()
+        assert q.stats.ticks_below_low == 1
+
+    def test_chunker_shapes_and_tail(self):
+        q = BackpressureQueue(capacity=16)
+        ck = Chunker(4)
+        q.offer(np.arange(10))
+        c1 = ck.next_chunk(q)
+        c2 = ck.next_chunk(q)
+        assert c1.tolist() == [0, 1, 2, 3] and c2.tolist() == [4, 5, 6, 7]
+        assert ck.next_chunk(q) is None  # only 2 left
+        tail = ck.drain_tail(q)
+        assert tail.tolist() == [8, 9]
+        assert ck.drain_tail(q) is None
+
+
+# ---------------------------------------------------------------------------
+# metrics bus
+# ---------------------------------------------------------------------------
+
+def _feed(bus, n_chunks=8, m=16, n_w=4, dt=2.0):
+    t = 0.0
+    for _ in range(n_chunks):
+        bus.record_chunk(ChunkRecord(t_start=t, t_end=t + dt, m=m,
+                                     n_workers=n_w, queue_depth=0,
+                                     collector_updates=m // 4))
+        t += dt
+    return bus
+
+
+class TestMetricsBus:
+    def test_t_f_hat_recovers_per_item_work(self):
+        bus = _feed(MetricsBus(clock=LogicalClock()))
+        # service 2.0 for 16 items on 4 workers -> t_f = 2*4/16 = 0.5
+        assert bus.t_f_hat == pytest.approx(0.5)
+
+    def test_throughput_and_utilization(self):
+        bus = _feed(MetricsBus(clock=LogicalClock()))
+        assert bus.throughput() == pytest.approx(16 / 2.0)
+        # throughput-as-offered-load: 8 items/s * 0.5s / 4 workers = 1.0
+        assert bus.utilization() == pytest.approx(1.0)
+        assert bus.collector_pressure() == pytest.approx(0.25)
+
+    def test_expected_service_time_is_paper_model(self):
+        bus = _feed(MetricsBus(clock=LogicalClock()))
+        # T_s(n) = max(t_a, t_f/n) with measured t_f_hat = 0.5
+        assert bus.expected_service_time(2) == pytest.approx(0.25)
+        assert bus.expected_service_time(8, t_a=0.2) == pytest.approx(0.2)
+
+    def test_summary_fields(self):
+        s = _feed(MetricsBus(clock=LogicalClock())).summary()
+        assert s["chunks"] == 8 and s["items"] == 8 * 16 and s["degree"] == 4
+
+
+# ---------------------------------------------------------------------------
+# autoscaler policies + guardrails
+# ---------------------------------------------------------------------------
+
+class _FakeQueue:
+    def __init__(self, depth, high=8, low=1):
+        self.depth = depth
+        self.high_watermark = high
+        self.low_watermark = low
+
+
+class TestAutoscalerPolicies:
+    def test_queue_depth_policy_steps_one_rung(self):
+        pol = QueueDepthPolicy()
+        bus = MetricsBus(clock=LogicalClock())
+        assert pol.target(bus, 2, [1, 2, 4, 8], queue=_FakeQueue(9)) == 4
+        assert pol.target(bus, 2, [1, 2, 4, 8], queue=_FakeQueue(0)) == 1
+        assert pol.target(bus, 2, [1, 2, 4, 8], queue=_FakeQueue(4)) == 2
+        assert pol.target(bus, 8, [1, 2, 4, 8], queue=_FakeQueue(99)) == 8  # top
+
+    def test_utilization_policy(self):
+        pol = UtilizationPolicy(low=0.4, high=0.9)
+        bus = _feed(MetricsBus(clock=LogicalClock()))  # utilization == 1.0
+        assert pol.target(bus, 4, [2, 4, 8]) == 8
+        empty = MetricsBus(clock=LogicalClock())       # no data -> hold
+        assert pol.target(empty, 4, [2, 4, 8]) == 4
+
+    def test_throughput_target_policy_uses_analytic_model(self):
+        bus = _feed(MetricsBus(clock=LogicalClock()))  # t_f_hat = 0.5
+        # need 10 items/s: T_s(n) = 0.5/n <= 0.1 -> n >= 5 -> smallest is 8
+        pol = ThroughputTargetPolicy(target_throughput=10.0)
+        assert pol.target(bus, 2, [1, 2, 4, 8]) == 8
+        # need 3 items/s -> n = 2 suffices (1/(0.5/2) = 4 >= 3)
+        assert ThroughputTargetPolicy(3.0).target(bus, 8, [1, 2, 4, 8]) == 2
+
+    def test_hysteresis_requires_consecutive_confirmation(self):
+        bus = MetricsBus(clock=LogicalClock())
+        sc = Autoscaler(QueueDepthPolicy(), [1, 2, 4], cooldown_chunks=0,
+                        confirm=2)
+        deep, calm = _FakeQueue(99), _FakeQueue(4)
+        assert sc.propose(bus, 2, queue=deep) is None   # confirm 1/2
+        assert sc.propose(bus, 2, queue=calm) is None   # streak broken
+        assert sc.propose(bus, 2, queue=deep) is None   # confirm 1/2 again
+        assert sc.propose(bus, 2, queue=deep) == 4      # confirm 2/2
+
+    def test_cooldown_blocks_back_to_back_resizes(self):
+        bus = MetricsBus(clock=LogicalClock())
+        sc = Autoscaler(QueueDepthPolicy(), [1, 2, 4], cooldown_chunks=2,
+                        confirm=1)
+        empty = _FakeQueue(0)
+        assert sc.propose(bus, 4, queue=empty) == 2     # first move is free
+        sc.notify_resized()
+        assert sc.propose(bus, 2, queue=empty) is None  # cooldown 0/2
+        sc.tick()
+        assert sc.propose(bus, 2, queue=empty) is None  # cooldown 1/2
+        sc.tick()
+        assert sc.propose(bus, 2, queue=empty) == 1     # cooldown expired
+
+    def test_policy_outside_candidates_rejected(self):
+        class Bad:
+            def target(self, bus, cur, cands, queue=None):
+                return 3
+
+        sc = Autoscaler(Bad(), [1, 2, 4], cooldown_chunks=0)
+        with pytest.raises(ValueError, match="outside candidates"):
+            sc.propose(MetricsBus(clock=LogicalClock()), 2)
+
+
+# ---------------------------------------------------------------------------
+# serving: online S2 session-store resize under the runtime
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serving_setup():
+    import jax
+    import repro.configs as configs
+    from repro.models import transformer as T
+
+    cfg = configs.get("paper-synthetic").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+class TestServingRuntime:
+    def test_online_resize_is_exact_and_triggered(self, serving_setup):
+        """Burst arrivals force the autoscaler to grow the slot count online
+        mid-decode; every request must still match the sequential oracle
+        (the S2 handoff relocates caches bit-exactly / replays requeues)."""
+        import jax.numpy as jnp
+        from repro.models import transformer as T
+        from repro.serving.app import ServingRuntime, request_source
+        from repro.serving.engine import ServingEngine
+
+        cfg, params = serving_setup
+        n_new = 5
+        total = 10
+        engine = ServingEngine(cfg, params, num_slots=2, s_max=64)
+        src = request_source(vocab=cfg.vocab_size, total=total,
+                             max_new_tokens=n_new, seed=2)
+        rt = ServingRuntime(
+            engine,
+            src,
+            BurstyRate(base=0, burst=total, period=64, duty=1),  # one big burst
+            slot_candidates=[2, 4, 8],
+            queue_capacity=total + 2,
+            cooldown_ticks=1,
+        )
+        rt.run()
+        assert engine.resize_events, "burst never triggered an online resize"
+        assert any(e["new"] > e["old"] for e in engine.resize_events)
+        assert len(rt.requests) == total
+        assert engine.tokens_out == total * n_new
+
+        def sequential(prompt):
+            caches = T.init_caches(cfg, 1, 64, cfg.cdtype)
+            logits, caches = T.prefill_forward(
+                params, {"tokens": jnp.asarray(prompt, jnp.int32)[None, :]},
+                cfg, caches,
+            )
+            out = [int(jnp.argmax(logits[:, -1], -1)[0])]
+            pos = len(prompt)
+            for _ in range(n_new - 1):
+                logits, caches = T.decode_forward(
+                    params, {"tokens": jnp.asarray([[out[-1]]], jnp.int32)},
+                    cfg, caches, jnp.int32(pos),
+                )
+                out.append(int(jnp.argmax(logits[:, -1], -1)[0]))
+                pos += 1
+            return out
+
+        for req in rt.requests:
+            assert req.generated == sequential(req.prompt), req.rid
+
+    def test_train_loop_delegates_degree_to_autoscaler(self, tmp_path):
+        """ft/driver's elastic path: at checkpoint boundaries the loop asks
+        the runtime autoscaler for a degree and hands the transition to the
+        caller's on_resize (checkpoint-mediated)."""
+        import jax
+        from repro.ft.driver import TrainLoop, elastic_resize
+        from repro.launch.steps import build_train_step
+        from repro.launch.cells import CellKnobs
+        from repro.launch.sharding import ShardingRules
+        from repro.data.pipeline import SyntheticLM
+        from repro.optim import adamw
+        import repro.configs as configs
+        from repro.models import transformer as T
+
+        class GrowOncePolicy:
+            def target(self, bus, current, candidates, queue=None):
+                return max(candidates) if current == min(candidates) else current
+
+        cfg = configs.get("paper-synthetic").reduced()
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        opt_state = adamw.init_state(params)
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        knobs = CellKnobs(microbatches=2, remat=False, fsdp=False)
+        rules = ShardingRules(mesh=mesh, dp_axes=("data",), fsdp_axis=None)
+        opt_cfg = adamw.AdamWConfig(peak_lr=3e-3, warmup_steps=2,
+                                    total_steps=1000, schedule="constant")
+        step = jax.jit(build_train_step(cfg, rules, knobs, opt_cfg=opt_cfg))
+        data = SyntheticLM(vocab=cfg.padded_vocab, seq_len=16, batch=4,
+                           microbatches=2, seed=0)
+        resized_to = []
+        loop = TrainLoop(
+            train_step=step, data=data, ckpt_dir=str(tmp_path), ckpt_every=3,
+            autoscaler=Autoscaler(GrowOncePolicy(), [1, 2],
+                                  cooldown_chunks=0),
+            degree=1,
+            on_resize=lambda n: resized_to.append(n),
+            metrics_bus=MetricsBus(),
+        )
+        loop.run(params, opt_state, 6, log=lambda *_: None)
+        assert resized_to == [2] and loop.degree == 2
+        # the state transition itself: restore the checkpoint it left behind
+        state, meta = elastic_resize(str(tmp_path), (params, opt_state), None)
+        assert meta["stream"]["position"] >= 3
+
+    def test_tail_chunk_falls_back_to_fitting_degree(self):
+        """A final partial chunk smaller than chunk_size must shrink the
+        degree to one that fits instead of crashing on stale validation."""
+        import jax.numpy as jnp
+        from repro.core import patterns
+        from repro.runtime import SeparateAdapter, StreamExecutor
+
+        pat = patterns.SeparateTaskState(f=lambda x: x * x, s=lambda y, s: s + y)
+        ex = StreamExecutor(SeparateAdapter(pat, jnp.int32(0)), degree=1,
+                            chunk_size=16)
+        ex.process(np.arange(16, dtype=np.int32))
+        out = ex.process(np.arange(16, 22, dtype=np.int32))  # 6-item tail
+        assert ex.chunk_size == 16  # a short chunk is an event, not a reconfig
+        assert int(ex.state) == int(sum(i * i for i in range(22)))
+
+    def test_autoscaler_holds_when_start_degree_off_ladder(self):
+        """Policies signal no-change by returning `current`; that must be a
+        benign no-op even when the farm started off the candidate ladder."""
+        bus = MetricsBus(clock=LogicalClock())
+        sc = Autoscaler(QueueDepthPolicy(), [4, 8], cooldown_chunks=0)
+        assert sc.propose(bus, 2, queue=_FakeQueue(4)) is None  # mid-band hold
+        assert sc.propose(bus, 2, queue=_FakeQueue(99)) == 4    # grow onto it
+
+    def test_replay_completing_at_prefill_does_not_overrun(self, serving_setup):
+        """A requeued session one token short of max_new_tokens completes at
+        the replay prefill and must not keep decoding past its budget."""
+        from repro.serving.engine import Request, ServingEngine
+
+        cfg, params = serving_setup
+        rng = np.random.default_rng(9)
+        engine = ServingEngine(cfg, params, num_slots=4, s_max=64)
+        reqs = [
+            Request(rid=i, prompt=rng.integers(0, 200, size=5).astype(np.int32),
+                    max_new_tokens=3)
+            for i in range(4)
+        ]
+        for r in reqs:
+            engine.submit(r)
+        engine.step()  # admit (prefill token) + decode: 2 tokens each
+        assert all(len(r.generated) == 2 for r in reqs)
+        engine.resize(2)  # requeues two sessions with 2 of 3 tokens
+        assert engine.resize_events[-1]["requeued"] == 2
+        engine.run_to_completion()
+        assert all(len(r.generated) == 3 for r in reqs), [
+            len(r.generated) for r in reqs
+        ]
+        assert engine.tokens_out == 12
+
+    def test_shrink_requeues_and_completes(self, serving_setup):
+        from repro.serving.engine import Request, ServingEngine
+
+        cfg, params = serving_setup
+        rng = np.random.default_rng(5)
+        engine = ServingEngine(cfg, params, num_slots=4, s_max=64)
+        reqs = [
+            Request(rid=i, prompt=rng.integers(0, 200, size=6).astype(np.int32),
+                    max_new_tokens=6)
+            for i in range(4)
+        ]
+        for r in reqs:
+            engine.submit(r)
+        engine.step()  # all 4 admitted
+        assert len(engine.active) == 4
+        moved = engine.resize(2)  # shrink below active count
+        ev = engine.resize_events[-1]
+        assert ev["requeued"] == 2 and engine.num_slots == 2
+        engine.run_to_completion()
+        assert all(len(r.generated) == 6 for r in reqs)
