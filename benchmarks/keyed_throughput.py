@@ -1,0 +1,212 @@
+"""Keyed windowed-state benchmark: hot-path speedup + elastic throughput.
+
+Two measurements, one JSON report (``results/keyed_throughput.json``):
+
+* **Hot path** — per-chunk cell reduction, Pallas-dispatched sort+segment-
+  reduce (`repro.keyed.kernels.reduce_by_cell(impl="segment")`) vs the
+  masked full-scan baseline it replaces (``impl="masked"``, the
+  ``PartitionedState``-style per-cell scan, O(cells * m)).  The gate the CI
+  asserts: ``segment_beats_masked``.  The Pallas kernel is additionally
+  cross-checked against its jnp reference in interpret mode
+  (``pallas_interpret_matches_ref``).
+* **Elastic throughput** — a `StreamExecutor` drives the keyed window
+  engine over a live chunk stream with mid-stream grow/shrink at worker
+  counts that do NOT divide ``num_slots``; per-phase items/s and the
+  slot-map handoff accounting land in the report.
+
+Run:  PYTHONPATH=src python -m benchmarks.keyed_throughput
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import Row, derived, time_fn
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+HOT_ROWS = 16384
+HOT_CELLS = (32, 128, 512)
+CHUNK = 1024
+NUM_CHUNKS = 12
+NUM_SLOTS = 20
+SCHEDULE = {4: 3, 8: 7}     # degrees 3 and 7 do not divide 20 slots
+
+
+def _hot_path_rows():
+    import jax
+
+    from repro.keyed import kernels as kk
+
+    rng = np.random.default_rng(0)
+    rows, bench = [], []
+    for cells in HOT_CELLS:
+        ids = rng.integers(0, cells, size=HOT_ROWS).astype(np.int32)
+        vals = rng.integers(0, 100, size=(HOT_ROWS, 2)).astype(np.int32)
+
+        def run(impl):
+            return jax.block_until_ready(
+                kk.reduce_by_cell(ids, vals, cells, impl=impl)
+            )
+
+        np.testing.assert_array_equal(
+            np.asarray(run("segment")), np.asarray(run("masked"))
+        )
+        seg_us = time_fn(run, "segment")
+        msk_us = time_fn(run, "masked")
+        speedup = msk_us / seg_us if seg_us > 0 else float("inf")
+        bench.append(
+            {
+                "rows": HOT_ROWS, "cells": cells,
+                "segment_us": seg_us, "masked_us": msk_us,
+                "speedup": speedup,
+            }
+        )
+        rows.append(
+            Row(
+                f"keyed/hot_path/cells{cells}",
+                seg_us,
+                derived(rows=HOT_ROWS, masked_us=msk_us, speedup=speedup),
+            )
+        )
+    return rows, bench
+
+
+def _pallas_cross_check() -> bool:
+    import jax.numpy as jnp
+
+    from repro.kernels import ref as kref
+    from repro.kernels import segment_reduce as sr
+
+    rng = np.random.default_rng(1)
+    ids = np.sort(rng.integers(0, 13, size=201)).astype(np.int32)
+    vals = rng.integers(0, 100, size=(201, 2)).astype(np.int32)
+    a = np.asarray(
+        sr.segment_sum(jnp.asarray(vals), jnp.asarray(ids), 13,
+                       interpret=True, block_rows=32)
+    )
+    b = np.asarray(
+        kref.segment_sum_ref(jnp.asarray(vals), jnp.asarray(ids), 13)
+    )
+    table = rng.integers(0, 10, size=(13, 2)).astype(np.int32)
+    c = np.asarray(
+        sr.scatter_add(jnp.asarray(table), jnp.asarray(ids),
+                       jnp.asarray(vals), interpret=True, block_rows=32)
+    )
+    d = np.asarray(
+        kref.scatter_add_ref(jnp.asarray(table), jnp.asarray(ids),
+                             jnp.asarray(vals))
+    )
+    return bool(np.array_equal(a, b) and np.array_equal(c, d))
+
+
+def _elastic_phases():
+    from repro.core import semantics
+    from repro.keyed import (
+        KeyedWindowAdapter,
+        WindowSpec,
+        synthetic_keyed_items,
+    )
+    from repro.runtime import StreamExecutor
+
+    spec = WindowSpec("tumbling", size=64, lateness=16, late_policy="drop")
+    items = synthetic_keyed_items(
+        CHUNK * NUM_CHUNKS, num_keys=256, disorder=8, seed=0
+    )
+    ad = KeyedWindowAdapter(spec, num_slots=NUM_SLOTS, impl="segment")
+    ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+    chunks = [items[i: i + CHUNK] for i in range(0, len(items), CHUNK)]
+    outs = ex.run(chunks, schedule=SCHEDULE)
+
+    # correctness gate rides along: the resized run matches the oracle
+    triples = [(int(r["key"]), int(r["value"]), int(r["ts"])) for r in items]
+    o_em, _, _ = semantics.keyed_windows(
+        "tumbling", triples, **spec.oracle_kwargs(CHUNK)
+    )
+    got = [
+        tuple(int(x) for x in row)
+        for o in outs
+        for row in zip(*(o["emissions"][k]
+                         for k in ("key", "start", "end", "value", "count")))
+    ]
+    exact = got == o_em
+
+    boundaries = sorted(SCHEDULE) + [NUM_CHUNKS]
+    phases, lo = [], 0
+    recs = ex.metrics.chunks
+    for hi in boundaries:
+        span = recs[lo:hi]
+        if not span:
+            continue
+        secs = sum(r.service_time for r in span)
+        items_done = sum(r.m for r in span)
+        phases.append(
+            {
+                "degree": span[0].n_workers,
+                "chunks": len(span),
+                "items_per_s": items_done / secs if secs > 0 else 0.0,
+            }
+        )
+        lo = hi
+    resizes = [
+        {
+            "n_old": r.n_old, "n_new": r.n_new, "protocol": r.protocol,
+            "handoff_slots": r.handoff_items,
+        }
+        for r in ex.metrics.resizes
+    ]
+    return phases, resizes, exact
+
+
+def run() -> list[Row]:
+    rows, hot = _hot_path_rows()
+    pallas_ok = _pallas_cross_check()
+    phases, resizes, exact = _elastic_phases()
+    beats = all(h["speedup"] > 1.0 for h in hot)
+    report = {
+        "hot_path": hot,
+        "segment_beats_masked": beats,
+        "pallas_interpret_matches_ref": pallas_ok,
+        "workload": {
+            "chunk": CHUNK, "num_chunks": NUM_CHUNKS,
+            "num_slots": NUM_SLOTS,
+            "schedule": {str(k): v for k, v in SCHEDULE.items()},
+        },
+        "phases": phases,
+        "resizes": resizes,
+        "resized_run_matches_oracle": exact,
+    }
+    os.makedirs(os.path.join(_REPO, "results"), exist_ok=True)
+    with open(os.path.join(_REPO, "results", "keyed_throughput.json"),
+              "w") as f:
+        json.dump(report, f, indent=2)
+    for k, p in enumerate(phases):
+        rows.append(
+            Row(
+                f"keyed/elastic/phase{k}_n{p['degree']}",
+                1e6 / p["items_per_s"] if p["items_per_s"] else 0.0,
+                derived(n_w=p["degree"], items_per_s=p["items_per_s"]),
+            )
+        )
+    rows.append(
+        Row(
+            "keyed/report",
+            0.0,
+            derived(
+                segment_beats_masked=int(beats),
+                pallas_ok=int(pallas_ok),
+                oracle_exact=int(exact),
+                path="results/keyed_throughput.json",
+            ),
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

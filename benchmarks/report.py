@@ -82,8 +82,52 @@ def elastic_runtime_table(path: str) -> None:
     print(f"wrote {path}")
 
 
+def keyed_throughput_table(path: str) -> None:
+    """Markdown view of results/keyed_throughput.json (produced by
+    benchmarks/keyed_throughput.py): segment-reduce vs masked-scan hot
+    path, and keyed-window throughput across slot-map resizes."""
+    src = "results/keyed_throughput.json"
+    if not os.path.exists(src):
+        print(f"skip {path}: run benchmarks/keyed_throughput.py first")
+        return
+    with open(src) as f:
+        rep = json.load(f)
+    lines = [
+        "| cells | rows | masked-scan us | segment-reduce us | speedup |",
+        "|---|---|---|---|---|",
+    ]
+    for h in rep["hot_path"]:
+        lines.append(
+            f"| {h['cells']} | {h['rows']} | {h['masked_us']:.0f} | "
+            f"{h['segment_us']:.0f} | {h['speedup']:.2f}x |"
+        )
+    lines.append("")
+    lines.append("| phase | degree | items/s |")
+    lines.append("|---|---|---|")
+    for k, p in enumerate(rep["phases"]):
+        lines.append(f"| {k} | {p['degree']} | {p['items_per_s']:.4g} |")
+    lines.append("")
+    lines.append("| resize | protocol | handoff slots |")
+    lines.append("|---|---|---|")
+    for r in rep["resizes"]:
+        lines.append(
+            f"| {r['n_old']} -> {r['n_new']} | {r['protocol']} | "
+            f"{r['handoff_slots']} |"
+        )
+    lines.append("")
+    lines.append(
+        f"segment beats masked: **{rep['segment_beats_masked']}** · "
+        f"Pallas == ref (interpret): **{rep['pallas_interpret_matches_ref']}**"
+        f" · resized run == oracle: **{rep['resized_run_matches_oracle']}**"
+    )
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path}")
+
+
 if __name__ == "__main__":
     os.makedirs("results", exist_ok=True)
     dryrun_table("results/dryrun_table.md")
     write_md("results/roofline_pod1.md")
     elastic_runtime_table("results/elastic_runtime.md")
+    keyed_throughput_table("results/keyed_throughput.md")

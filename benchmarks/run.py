@@ -26,6 +26,7 @@ def main() -> None:
         "benchmarks.partitioned_scaling",
         "benchmarks.shardmap_farm",
         "benchmarks.elastic_runtime",
+        "benchmarks.keyed_throughput",
         "benchmarks.kernel_bench",
         "benchmarks.roofline",
     ]

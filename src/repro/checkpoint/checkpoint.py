@@ -109,6 +109,10 @@ def restore(
             loaded[k] = jax.make_array_from_callback(
                 arr.shape, sh, lambda idx, arr=arr: arr[idx]
             )
+        elif isinstance(flat_target[k], (np.ndarray, np.generic)):
+            # host-state pytree (e.g. the keyed store): keep numpy, and the
+            # saved dtype — jnp would silently narrow int64 under x64-off
+            loaded[k] = arr
         else:
             loaded[k] = jax.numpy.asarray(arr)
 

@@ -86,22 +86,39 @@ class SerialState:
 
 @dataclasses.dataclass(frozen=True)
 class PartitionedState:
-    """State is a vector ``v[0..N)``; ``h`` maps tasks to slots; slot ``p`` is
-    owned by worker ``p // (N // n_w)`` (block distribution, paper §4.2).
+    """State is a vector ``v[0..N)``; ``h`` maps tasks to slots; every slot
+    has exactly one owning worker (paper §4.2).
+
+    Two ownership modes:
+
+    * ``ownership="block"`` (the paper's distribution): slot ``p`` is owned
+      by ``p // (N // n_w)``; only divisors of ``num_slots`` are feasible
+      degrees, and the state vector is sharded over the worker axis.
+    * ``ownership="slotmap"`` (generalized, `repro.keyed`-style): ownership
+      is an explicit balanced slot -> owner table
+      (``owner(p) = (p * n_w) // N``), so **any** degree in
+      ``[1, num_slots]`` is feasible; the state vector is replicated and
+      each worker commits only its owned slots (reassembled by `psum`).
 
     ``run`` routes every task to its owner: each worker scans the *whole*
     stream chunk in order, masking in the tasks it owns.  Per-slot update
     order equals stream order (the paper's guarantee), outputs are exchanged
     with a `psum` (each task is computed by exactly one worker).  This is the
     semantically-exact farm; the high-throughput realizations (MoE
-    ``all_to_all`` dispatch, KV-session routing) live in the upper layers and
-    are tested against this.
+    ``all_to_all`` dispatch, KV-session routing, the `repro.keyed`
+    sort+segment-reduce engine) live in the upper layers and are tested
+    against this.
     """
 
     f: Callable
     ns: Callable
     h: Callable
     num_slots: int
+    ownership: str = "block"   # "block" | "slotmap"
+
+    def __post_init__(self):
+        if self.ownership not in ("block", "slotmap"):
+            raise ValueError(f"unknown ownership mode {self.ownership!r}")
 
     def reference(self, xs, v0):
         return semantics.partitioned(self.f, self.ns, self.h, xs, v0)
@@ -119,15 +136,50 @@ class PartitionedState:
             )
         return self.num_slots // n_w
 
+    def owner_table(self, n_w: int) -> np.ndarray:
+        """slot -> owner, length ``num_slots``.  Balanced-contiguous in
+        slotmap mode (reduces to the block rule when ``n_w`` divides);
+        the block rule (validated) otherwise."""
+        if self.ownership == "slotmap":
+            if not 1 <= n_w <= self.num_slots:
+                raise ValueError(
+                    f"worker count must be in [1, {self.num_slots}], got {n_w}"
+                )
+            return ((np.arange(self.num_slots, dtype=np.int64) * n_w)
+                    // self.num_slots).astype(np.int32)
+        return (np.arange(self.num_slots) // self.slots_per_worker(n_w)
+                ).astype(np.int32)
+
     def owner(self, slot, n_w: int):
+        if self.ownership == "slotmap":
+            return (slot * n_w) // self.num_slots
         return slot // self.slots_per_worker(n_w)
+
+    def validate_degree(self, n_w: int) -> None:
+        self.owner_table(n_w)  # raises on an infeasible degree
+
+    def feasible_degrees(self, max_degree: int) -> list:
+        """Degrees this ownership mode admits — the autoscaler's clamp.
+        Derived from :meth:`validate_degree` so the feasibility rule has a
+        single source of truth."""
+        out = []
+        for n in range(1, min(max_degree, self.num_slots) + 1):
+            try:
+                self.validate_degree(n)
+            except ValueError:
+                continue
+            out.append(n)
+        return out
 
     # -- SPMD execution -------------------------------------------------------
     def run(self, mesh: Mesh, axis: str, xs, v0):
-        """xs sharded over ``axis`` (emitter), v0 sharded over ``axis`` (slots).
+        """xs sharded over ``axis`` (emitter); v0 sharded over ``axis`` in
+        block mode, replicated in slotmap mode.
 
-        Returns ``(ys, v_final)`` with the same shardings.
+        Returns ``(ys, v_final)`` with matching shardings.
         """
+        if self.ownership == "slotmap":
+            return self._run_slotmap(mesh, axis, xs, v0)
         n_w = _axis_size(mesh, axis)
         spw = self.slots_per_worker(n_w)
         f, ns, h = self.f, self.ns, self.h
@@ -174,6 +226,67 @@ class PartitionedState:
             out_specs=(P(axis), P(axis)),
         )(v0, xs)
 
+    def _run_slotmap(self, mesh: Mesh, axis: str, xs, v0):
+        """Slot-map ownership run: the state vector is replicated, each
+        worker scans the chunk committing only its owned slots, and the
+        final vector is reassembled slot-by-slot from the owners (exactly
+        one worker contributes each slot, so `psum` of the masked vectors
+        is exact)."""
+        n_w = _axis_size(mesh, axis)
+        table = jnp.asarray(self.owner_table(n_w), jnp.int32)
+        f, ns, h = self.f, self.ns, self.h
+
+        def worker(v_rep, xs_local):
+            w = lax.axis_index(axis)
+            xs_all = jax.tree.map(
+                lambda leaf: lax.all_gather(leaf, axis, tiled=True), xs_local
+            )
+
+            def step(v, x):
+                slot = h(x)
+                mine = table[slot] == w
+                sp = jax.tree.map(lambda leaf: leaf[slot], v)
+                y = f(x, sp)
+                new_sp = ns(x, sp)
+                v = jax.tree.map(
+                    lambda leaf, nl: leaf.at[slot].set(
+                        jnp.where(mine, nl, leaf[slot])
+                    ),
+                    v,
+                    new_sp,
+                )
+                y = jax.tree.map(lambda leaf: jnp.where(mine, leaf, 0), y)
+                return v, y
+
+            v_scanned, ys_all = lax.scan(step, _pvary(v_rep, axis), xs_all)
+            ys_all = jax.tree.map(lambda leaf: lax.psum(leaf, axis), ys_all)
+            chunk = jax.tree.map(lambda leaf: leaf.shape[0] // n_w, ys_all)
+            ys_local = jax.tree.map(
+                lambda leaf, c: lax.dynamic_slice_in_dim(leaf, w * c, c, axis=0),
+                ys_all,
+                chunk,
+            )
+            own = table == w
+            v_final = jax.tree.map(
+                lambda leaf: lax.psum(
+                    jnp.where(
+                        own.reshape(own.shape + (1,) * (leaf.ndim - 1)),
+                        leaf,
+                        0,
+                    ),
+                    axis,
+                ),
+                v_scanned,
+            )
+            return ys_local, v_final
+
+        return shard_map(
+            worker,
+            mesh=mesh,
+            in_specs=(P(), P(axis)),
+            out_specs=(P(axis), P()),
+        )(v0, xs)
+
     # -- adaptivity (paper §4.2): repartition slots over a new worker count ---
     @staticmethod
     def reshard(v: Any, n_old: int, n_new: int) -> Any:
@@ -209,6 +322,23 @@ class PartitionedState:
         old_owner = np.arange(num_slots) // (num_slots // n_old)
         new_owner = np.arange(num_slots) // (num_slots // n_new)
         return int(np.sum(old_owner != new_owner))
+
+    def transition_volume(self, n_old: int, n_new: int) -> int:
+        """Slots changing owner for *this* pattern's ownership mode.
+
+        Block mode delegates to :meth:`handoff_volume` (divisor degrees
+        only); slotmap mode diffs the canonical balanced tables — the
+        compiled step bakes the canonical table per degree, so a transition
+        moves exactly the slots on which the two tables disagree.  (The
+        keyed store's :class:`repro.keyed.store.SlotMap` instead migrates a
+        *minimal* set, which host-driven steps can afford because ownership
+        is read from state rather than baked into compiled code.)
+        """
+        if self.ownership == "slotmap":
+            return int(
+                np.sum(self.owner_table(n_old) != self.owner_table(n_new))
+            )
+        return self.handoff_volume(self.num_slots, n_old, n_new)
 
 
 # ---------------------------------------------------------------------------

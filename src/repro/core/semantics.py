@@ -126,6 +126,135 @@ def successive_approximation(
 # §4.5 Separate task/state function state access pattern
 # ---------------------------------------------------------------------------
 
+def keyed_windows(
+    kind: str,            # "tumbling" | "sliding" | "session"
+    items,                # iterable of (key, value, ts) — stream order
+    *,
+    size: int = 0,        # tumbling/sliding window length
+    slide: int = 0,       # sliding hop
+    gap: int = 0,         # session inactivity gap
+    watermark_every: int = 1,
+    lateness: int = 0,    # bounded out-of-orderness: wm = max_ts - lateness
+    late_policy: str = "drop",  # "drop" | "side"
+):
+    """Serial oracle for keyed windowed aggregation (sum + count per window).
+
+    The keyed-window semantics layered on §4.2: each item ``(key, value,
+    ts)`` updates the windows it falls in for its key; per-key update order
+    is stream order.  A bounded-out-of-orderness **watermark** ``wm =
+    max(ts seen) - lateness`` advances after every ``watermark_every`` items
+    (and once more at end-of-stream if a partial group remains) — parallel
+    implementations advance it at chunk boundaries, so set
+    ``watermark_every`` to the chunk size when comparing.  At each advance,
+    every window with ``end <= wm`` fires, emitted in ``(end, start, key)``
+    order and removed from the store.
+
+    An item assignment whose window has already fired (``end <= wm`` at
+    processing time) is **late**: it never reaches the store, and is
+    recorded as ``(key, value, ts, start)`` — returned to the caller under
+    both policies (``"drop"`` merely means parallel engines do not ship the
+    records downstream; the oracle always accounts for them).  For sliding
+    windows lateness is per-assignment: one item can be late for an expired
+    pane yet live for a newer one.  A session item is late iff even a
+    singleton session at its timestamp would already have fired
+    (``ts + gap <= wm``); otherwise it merges into (possibly several)
+    existing sessions by interval overlap within ``gap``.
+
+    Returns ``(emissions, open_windows, late)`` where ``emissions`` is a
+    list of ``(key, start, end, value_sum, count)`` in emission order,
+    ``open_windows`` the same 5-tuples for still-open windows (sorted by
+    ``(key, start)``), and ``late`` the late-assignment records in stream
+    order.  Everything is integer arithmetic — parallel engines must match
+    bit-exactly.
+    """
+    if kind not in ("tumbling", "sliding", "session"):
+        raise ValueError(f"unknown window kind {kind!r}")
+    if late_policy not in ("drop", "side"):
+        raise ValueError(f"unknown late policy {late_policy!r}")
+    open_wins = {}   # key -> list of [start, end, value, count]
+    emissions, late = [], []
+    wm = None
+    max_ts = None
+
+    def assignments(ts):
+        if kind == "tumbling":
+            start = (ts // size) * size
+            return [(start, start + size)]
+        hi = (ts // slide) * slide
+        starts = []
+        s = hi
+        while s > ts - size:
+            starts.append(s)
+            s -= slide
+        return [(s, s + size) for s in starts]
+
+    def fire(watermark):
+        due = []
+        for key, wins in open_wins.items():
+            for w in wins:
+                if w[1] <= watermark:
+                    due.append((w[1], w[0], key, w))
+        due.sort(key=lambda r: r[:3])
+        for end, start, key, w in due:
+            emissions.append((key, start, end, w[2], w[3]))
+            open_wins[key].remove(w)
+            if not open_wins[key]:
+                del open_wins[key]
+
+    count = 0
+    for key, value, ts in items:
+        key, value, ts = int(key), int(value), int(ts)
+        max_ts = ts if max_ts is None else max(max_ts, ts)
+        if kind == "session":
+            if wm is not None and ts + gap <= wm:
+                late.append((key, value, ts, ts))
+            else:
+                lo, hi = ts, ts + gap
+                merged = [lo, hi, value, 1]
+                keep = []
+                for w in open_wins.get(key, []):
+                    # strict overlap of half-open [start, end) intervals:
+                    # an item exactly `gap` after a session opens a new one
+                    if w[0] < hi and lo < w[1]:
+                        merged[0] = min(merged[0], w[0])
+                        merged[1] = max(merged[1], w[1])
+                        merged[2] += w[2]
+                        merged[3] += w[3]
+                    else:
+                        keep.append(w)
+                keep.append(merged)
+                keep.sort(key=lambda w: w[0])
+                open_wins[key] = keep
+        else:
+            for start, end in assignments(ts):
+                if wm is not None and end <= wm:
+                    late.append((key, value, ts, start))
+                    continue
+                wins = open_wins.setdefault(key, [])
+                for w in wins:
+                    if w[0] == start:
+                        w[2] += value
+                        w[3] += 1
+                        break
+                else:
+                    wins.append([start, end, value, 1])
+                    wins.sort(key=lambda w: w[0])
+        count += 1
+        if count % watermark_every == 0:
+            wm = max_ts - lateness if wm is None else max(wm, max_ts - lateness)
+            fire(wm)
+    if count % watermark_every and max_ts is not None:
+        wm = max_ts - lateness if wm is None else max(wm, max_ts - lateness)
+        fire(wm)
+
+    open_out = sorted(
+        (key, w[0], w[1], w[2], w[3])
+        for key, wins in open_wins.items()
+        for w in wins
+    )
+    return emissions, open_out, late
+
+
 def separate_task_state(
     f: Callable,  # f : alpha -> beta           (state-independent)
     s: Callable,  # s : beta x gamma -> gamma   (serialized state update)

@@ -17,6 +17,7 @@ from repro.kernels import decode_attention as _dk
 from repro.kernels import flash_attention as _fk
 from repro.kernels import moe_dispatch as _mk
 from repro.kernels import ref as _ref
+from repro.kernels import segment_reduce as _sr
 from repro.kernels import ssd_scan as _sk
 
 _MODE = "auto"  # "auto" | "kernel" | "ref" | "interpret"
@@ -37,6 +38,13 @@ def _kernel_enabled() -> Optional[bool]:
     if _MODE == "interpret":
         return None
     return True if jax.default_backend() == "tpu" else False
+
+
+def kernels_active() -> bool:
+    """True when the Pallas kernels (compiled or interpret) are selected —
+    callers with a host-side fallback (e.g. the keyed cell reduction) use
+    this to pick their realization per backend."""
+    return _kernel_enabled() is not False
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
@@ -71,6 +79,41 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128):
     if mode is False:
         return _ref.ssd_scan_ref(x, dt, A, Bm, Cm)
     return _sk.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=mode is None)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def segment_sum(values, seg_ids, num_segments: int):
+    """Per-segment sums, order-blind in every mode (like the other ops
+    wrappers: identical semantics whichever implementation dispatches)."""
+    mode = _kernel_enabled()
+    if mode is False:
+        return _ref.segment_sum_ref(values, seg_ids, num_segments)
+    return _sr.segment_sum(
+        values, seg_ids, num_segments, interpret=mode is None
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def segment_sum_sorted(values, seg_ids, num_segments: int):
+    """Fast path for ``seg_ids`` already sorted ascending (the keyed
+    algorithm layer sorts first — that is the point of sort+reduce).
+    PRECONDITION, not checked: unsorted ids give wrong sums on the
+    non-kernel path.  Off-TPU the sorted layout is exploited with the
+    scatter-free prefix-sum realization."""
+    mode = _kernel_enabled()
+    if mode is False:
+        return _sr.segment_sum_sorted(values, seg_ids, num_segments)
+    return _sr.segment_sum(
+        values, seg_ids, num_segments, interpret=mode is None
+    )
+
+
+@jax.jit
+def scatter_add(table, ids, rows):
+    mode = _kernel_enabled()
+    if mode is False:
+        return _ref.scatter_add_ref(table, ids, rows)
+    return _sr.scatter_add(table, ids, rows, interpret=mode is None)
 
 
 @jax.jit

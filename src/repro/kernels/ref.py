@@ -79,6 +79,29 @@ def ssd_scan_ref(x, dt, A, Bm, Cm):
     return ys.transpose(1, 2, 0, 3).astype(x.dtype), h
 
 
+def segment_sum_ref(values, seg_ids, num_segments):
+    """values [R, d]; seg_ids [R] int32 in [0, S] (>= S drops the row).
+
+    Integer inputs accumulate in int32, floats in float32 — matching the
+    Pallas kernel's accumulator so the keyed engine is bit-exact on either
+    implementation."""
+    acc = jnp.int32 if jnp.issubdtype(values.dtype, jnp.integer) else jnp.float32
+    out = jnp.zeros((num_segments + 1, values.shape[1]), acc)
+    ids = jnp.minimum(seg_ids.astype(jnp.int32), num_segments)
+    return out.at[ids].add(values.astype(acc))[:num_segments]
+
+
+def scatter_add_ref(table, ids, rows):
+    """table [C, d]; ids [R] int32 in [0, C] (>= C drops the row); rows [R, d]."""
+    acc = jnp.int32 if jnp.issubdtype(table.dtype, jnp.integer) else jnp.float32
+    C = table.shape[0]
+    padded = jnp.concatenate(
+        [table.astype(acc), jnp.zeros((1, table.shape[1]), acc)], axis=0
+    )
+    ids = jnp.minimum(ids.astype(jnp.int32), C)
+    return padded.at[ids].add(rows.astype(acc))[:C]
+
+
 def moe_gather_ref(x, row_token):
     """x [T, d]; row_token [R] int32 in [0, T] (T = dummy row -> zeros)."""
     x_pad = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)

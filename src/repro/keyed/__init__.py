@@ -1,0 +1,49 @@
+"""repro.keyed — keyed windowed-state subsystem over the §4.2 pattern.
+
+Layers (see README.md "Keyed windowed state"):
+
+* :mod:`repro.keyed.store` — slot-mapped keyed state store: explicit
+  slot -> owner table, any worker count, minimal-migration rebalance, and
+  the session-store relocation planner the serving engine routes through.
+* :mod:`repro.keyed.windows` — tumbling / sliding / session window
+  operators with watermarks and a late-data policy, chunk-exact against the
+  serial oracle :func:`repro.core.semantics.keyed_windows`.
+* :mod:`repro.keyed.kernels` — the per-chunk cell-reduction hot path:
+  sort-by-key + Pallas segment-reduce, with the masked full-scan baseline
+  it replaces.
+* :mod:`repro.keyed.runtime` — the StreamExecutor adapter: elastic degree
+  changes rebalance the slot map mid-stream; state checkpoints through
+  ``repro.checkpoint``.
+"""
+
+from repro.keyed.kernels import reduce_by_cell, sort_by_cell
+from repro.keyed.runtime import (
+    ITEM_DTYPE,
+    KeyedWindowAdapter,
+    keyed_stream,
+    synthetic_keyed_items,
+)
+from repro.keyed.store import (
+    KeyedStore,
+    SlotMap,
+    WindowState,
+    hash_to_slot,
+    plan_relocation,
+)
+from repro.keyed.windows import KeyedWindowEngine, WindowSpec
+
+__all__ = [
+    "ITEM_DTYPE",
+    "KeyedStore",
+    "KeyedWindowAdapter",
+    "KeyedWindowEngine",
+    "SlotMap",
+    "WindowSpec",
+    "WindowState",
+    "hash_to_slot",
+    "keyed_stream",
+    "plan_relocation",
+    "reduce_by_cell",
+    "sort_by_cell",
+    "synthetic_keyed_items",
+]

@@ -1,0 +1,106 @@
+"""Per-chunk cell reduction: the keyed engine's hot path and its baseline.
+
+A chunk of keyed window assignments is reduced to one partial aggregate per
+**cell** (a distinct ``(key, window)`` pair, numbered ``0..num_cells``).
+Two interchangeable implementations:
+
+* ``"segment"`` — the hot path, O(m log m + cells) work: stable
+  sort-by-cell followed by a segment reduce.  When the Pallas kernels are
+  active (TPU, or forced via ``use_kernels``) this is the device sort
+  feeding :func:`repro.kernels.segment_reduce.segment_sum`; otherwise it is
+  the same algorithm in numpy's C kernels (radix sort + prefix-sum
+  difference), the honest CPU realization.
+* ``"masked"`` — the S2 masked full-scan baseline, shaped exactly like
+  ``PartitionedState.run``'s per-slot scan: a sequential ``lax.scan`` over
+  the chunk in which every cell inspects every item through a mask,
+  O(num_cells * m) work.  This is what the keyed subsystem replaces;
+  ``benchmarks/keyed_throughput.py`` measures the gap.
+
+Both produce bit-identical int32 partials (sums and counts), so the engine's
+exactness contract is implementation-independent.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+IMPLS = ("segment", "masked")
+
+
+def sort_by_cell(cell_ids, values):
+    """Stable sort of (cell_ids, values) by cell id — the 'sort-by-key' half
+    of the hot path; stability keeps equal-cell rows in stream order."""
+    order = jnp.argsort(cell_ids, stable=True)
+    return cell_ids[order], values[order]
+
+
+@functools.partial(jax.jit, static_argnames=("num_cells",))
+def _device_segment_path(cell_ids, values, num_cells: int):
+    # TPU shape of the hot path: device sort feeding the Pallas kernel
+    ids_sorted, vals_sorted = sort_by_cell(cell_ids, values)
+    return ops.segment_sum_sorted(vals_sorted, ids_sorted, num_cells)
+
+
+def _host_segment_path(cell_ids, values, num_cells: int):
+    # CPU shape of the same algorithm: numpy radix sort + prefix-sum
+    # difference (XLA's CPU sort/cumsum are comparator/loop lowering — an
+    # order of magnitude slower than numpy's C kernels here)
+    ids = np.asarray(cell_ids)
+    order = np.argsort(ids, kind="stable")
+    ids_s = ids[order]
+    vals_s = np.asarray(values, np.int64)[order]
+    prefix = np.concatenate(
+        [np.zeros((1, vals_s.shape[1]), np.int64),
+         np.cumsum(vals_s, axis=0)],
+    )
+    ends = np.searchsorted(ids_s, np.arange(num_cells), side="right")
+    totals = prefix[ends]
+    out = np.diff(
+        np.concatenate([np.zeros((1, vals_s.shape[1]), np.int64), totals]),
+        axis=0,
+    )
+    return out.astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_cells",))
+def _masked_path(cell_ids, values, num_cells: int):
+    cells = jnp.arange(num_cells, dtype=jnp.int32)[:, None]
+
+    def step(acc, row):
+        cid, val = row
+        return acc + jnp.where(cells == cid, val[None, :], 0), None
+
+    acc0 = jnp.zeros((num_cells, values.shape[1]), jnp.int32)
+    acc, _ = jax.lax.scan(step, acc0, (cell_ids, values.astype(jnp.int32)))
+    return acc
+
+
+def reduce_by_cell(cell_ids, values, num_cells: int, *, impl: str = "segment"):
+    """Per-cell sums of ``values [m, d]`` grouped by ``cell_ids [m]``.
+
+    Returns an int32 ``[num_cells, d]`` table.  ``impl`` selects the sorted
+    segment-reduce hot path or the masked full-scan baseline (see module
+    docstring); both are exact for int32-range data.
+    """
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if num_cells == 0 or cell_ids.shape[0] == 0:
+        return jnp.zeros((num_cells, values.shape[1]), jnp.int32)
+    if impl == "segment":
+        if ops.kernels_active():
+            return _device_segment_path(
+                jnp.asarray(cell_ids, jnp.int32),
+                jnp.asarray(values, jnp.int32),
+                num_cells,
+            )
+        return _host_segment_path(cell_ids, values, num_cells)
+    return _masked_path(
+        jnp.asarray(cell_ids, jnp.int32), jnp.asarray(values, jnp.int32),
+        num_cells,
+    )

@@ -1,0 +1,113 @@
+"""Runtime integration: keyed windows as a StreamExecutor pattern adapter.
+
+:class:`KeyedWindowAdapter` is a **host-driven** adapter (``is_host``): its
+state is the engine's checkpoint pytree (numpy arrays with fixed keys), its
+step rehydrates the engine, processes one chunk, and snapshots back.  That
+makes three runtime features fall out for free:
+
+* ``StreamExecutor.set_degree`` / the autoscaler rebalance the slot map
+  mid-stream through :meth:`resize` — the §4.2 protocol with **slot-map
+  minimal migration**, valid at every worker count (``feasible_degrees``
+  reports all of them, unlike block ownership's divisors);
+* the failure supervisor checkpoints/restores executor state through
+  ``repro.checkpoint`` unchanged — the keyed store round-trips because the
+  state *is* its canonical serialized form;
+* replay after rollback is bit-exact: the engine is deterministic and the
+  snapshot is canonical, so a re-processed chunk emits identical windows.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import numpy as np
+
+from repro.keyed.store import SlotMap
+from repro.keyed.windows import KeyedWindowEngine, WindowSpec
+from repro.runtime.executor import PatternAdapter, ResizeInfo
+
+#: structured dtype of one keyed stream item
+ITEM_DTYPE = np.dtype(
+    [("key", np.int64), ("value", np.int64), ("ts", np.int64)]
+)
+
+
+def keyed_stream(keys, values, ts) -> np.ndarray:
+    """Pack columns into the keyed item record array sources/queues carry."""
+    out = np.empty(len(keys), ITEM_DTYPE)
+    out["key"], out["value"], out["ts"] = keys, values, ts
+    return out
+
+
+def synthetic_keyed_items(
+    n: int, *, num_keys: int, max_value: int = 100, disorder: int = 0,
+    seed: int = 0,
+) -> np.ndarray:
+    """Deterministic keyed stream: timestamps advance one per item with a
+    bounded out-of-order jitter of ``disorder`` — exactly the bounded
+    out-of-orderness the watermark's ``lateness`` knob models."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, num_keys, size=n)
+    values = rng.integers(0, max_value, size=n)
+    ts = np.arange(n, dtype=np.int64)
+    if disorder:
+        ts = ts + rng.integers(-disorder, disorder + 1, size=n)
+    return keyed_stream(keys, values, ts)
+
+
+class KeyedWindowAdapter(PatternAdapter):
+    """Keyed windowed state under the elastic executor (host-driven)."""
+
+    is_host = True
+
+    def __init__(self, spec: WindowSpec, *, num_slots: int,
+                 impl: str = "segment"):
+        self.spec = spec
+        self.num_slots = num_slots
+        self.impl = impl
+
+    def init_state(self):
+        return KeyedWindowEngine(
+            self.spec, num_slots=self.num_slots, impl=self.impl
+        ).snapshot()
+
+    def validate_degree(self, chunk_size: int, n_w: int) -> None:
+        # host engine shards by ownership, not array layout: any worker
+        # count in [1, num_slots] is feasible, for any chunk size
+        if not 1 <= n_w <= self.num_slots:
+            raise ValueError(
+                f"worker count must be in [1, num_slots={self.num_slots}], "
+                f"got {n_w}"
+            )
+
+    def make_host_step(self, n_w: int) -> Callable:
+        def step(state, chunk):
+            eng = KeyedWindowEngine.restore(self.spec, state, impl=self.impl)
+            if eng.store.n_workers != n_w:
+                # initial placement (not a resize): align ownership with the
+                # executor's current degree before the first chunk
+                eng.store.resize(n_w)
+                eng.worker_items = np.zeros(n_w, np.int64)
+            out = eng.process_chunk(chunk)
+            return eng.snapshot(), out
+
+        return step
+
+    def resize(self, state, n_old: int, n_new: int) -> Tuple[Any, ResizeInfo]:
+        table = np.asarray(state["slot_table"], np.int32)
+        n_cur = int(state["n_workers"])
+        sm, moved = SlotMap(len(table), n_cur, table=table).rebalance(n_new)
+        items = np.zeros(n_new, np.int64)
+        old_items = np.asarray(state["worker_items"], np.int64)
+        keep = min(n_new, len(old_items))
+        items[:keep] = old_items[:keep]  # surviving workers keep their tallies
+        state = dict(
+            state, slot_table=sm.table, n_workers=np.int64(n_new),
+            worker_items=items,
+        )
+        return state, ResizeInfo(
+            protocol="S2-slotmap-handoff",
+            handoff_items=int(len(moved)),
+            detail=f"{len(moved)}/{len(table)} slots migrate "
+                   f"(minimal rebalance {n_cur}->{n_new})",
+        )

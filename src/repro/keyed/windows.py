@@ -1,0 +1,331 @@
+"""Keyed window operators: tumbling / sliding / session with watermarks.
+
+The engine realizes the serial semantics of
+:func:`repro.core.semantics.keyed_windows` chunk-at-a-time:
+
+* every item ``(key, value, ts)`` is expanded to its window assignments
+  (tumbling is sliding with ``slide == size``; session items become per-key
+  fragments under the gap rule);
+* assignments whose window already fired against the current watermark are
+  **late** — recorded, and shipped as a side output under
+  ``late_policy="side"``;
+* live assignments are reduced to per-cell partials (a cell is a distinct
+  ``(key, window)`` pair) through :func:`repro.keyed.kernels.reduce_by_cell`
+  — the sorted Pallas segment-reduce hot path, or the masked full-scan
+  baseline — then merged into the :class:`~repro.keyed.store.KeyedStore`;
+* the watermark ``max(ts) - lateness`` advances at the chunk boundary and
+  fires every window with ``end <= wm`` in ``(end, start, key)`` order.
+
+Aggregation (sum + count) is associative and integer, and window/session
+merging is order-independent, so chunked execution — at ANY worker count,
+including counts that do not divide ``num_slots``, and across mid-stream
+rebalances — is bit-exact against the serial oracle whenever the oracle's
+``watermark_every`` equals the chunk size.  ``tests/test_keyed.py`` proves
+this property-style for all three kinds.
+
+Engine state round-trips through fixed-key numpy pytrees
+(:meth:`snapshot` / :meth:`restore`), which is what lets
+``repro.checkpoint`` and the failure supervisor cover the keyed store.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.keyed import kernels as kk
+from repro.keyed.store import KeyedStore, WindowState, hash_to_slot
+
+_EMPTY = dict(
+    key=np.zeros(0, np.int64), start=np.zeros(0, np.int64),
+    end=np.zeros(0, np.int64), value=np.zeros(0, np.int64),
+    count=np.zeros(0, np.int64),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSpec:
+    """Window kind + parameters + late-data policy (all event-time ints)."""
+
+    kind: str                  # "tumbling" | "sliding" | "session"
+    size: int = 0
+    slide: int = 0
+    gap: int = 0
+    lateness: int = 0          # out-of-orderness bound: wm = max_ts - lateness
+    late_policy: str = "drop"  # "drop" | "side"
+
+    def __post_init__(self):
+        if self.kind not in ("tumbling", "sliding", "session"):
+            raise ValueError(f"unknown window kind {self.kind!r}")
+        if self.late_policy not in ("drop", "side"):
+            raise ValueError(f"unknown late policy {self.late_policy!r}")
+        if self.kind == "session":
+            if self.gap <= 0:
+                raise ValueError("session windows need gap > 0")
+        else:
+            if self.size <= 0:
+                raise ValueError(f"{self.kind} windows need size > 0")
+            if self.kind == "sliding" and not 0 < self.slide <= self.size:
+                raise ValueError("sliding windows need 0 < slide <= size")
+        if self.lateness < 0:
+            raise ValueError("lateness must be >= 0")
+
+    @property
+    def effective_slide(self) -> int:
+        return self.size if self.kind == "tumbling" else self.slide
+
+    def oracle_kwargs(self, watermark_every: int) -> dict:
+        """kwargs for :func:`repro.core.semantics.keyed_windows`."""
+        return dict(
+            size=self.size, slide=self.slide, gap=self.gap,
+            watermark_every=watermark_every, lateness=self.lateness,
+            late_policy=self.late_policy,
+        )
+
+
+def _emission_dict(rows: List[Tuple[int, int, int, int, int]]) -> Dict:
+    if not rows:
+        return {k: v.copy() for k, v in _EMPTY.items()}
+    cols = np.asarray(rows, np.int64).T
+    return dict(key=cols[0], start=cols[1], end=cols[2], value=cols[3],
+                count=cols[4])
+
+
+class KeyedWindowEngine:
+    """Chunked keyed-window executor over a slot-mapped keyed store."""
+
+    def __init__(
+        self,
+        spec: WindowSpec,
+        *,
+        num_slots: int,
+        n_workers: int = 1,
+        impl: str = "segment",
+        store: Optional[KeyedStore] = None,
+    ):
+        self.spec = spec
+        self.store = store or KeyedStore(num_slots, n_workers)
+        self.impl = impl
+        self.wm: Optional[int] = None
+        self.max_ts: Optional[int] = None
+        # late assignments of the chunk being processed, stream order; the
+        # records are SHIPPED per chunk (under late_policy="side") rather
+        # than accumulated in state, so state stays bounded by the open
+        # windows — only the running count is part of the snapshot
+        self._chunk_late: List[Tuple[int, int, int, int]] = []
+        self.late_count = 0
+        # per-owner live-assignment counts (the §4.2 work distribution)
+        self.worker_items = np.zeros(self.store.n_workers, np.int64)
+
+    # -- chunk processing ------------------------------------------------------
+    def process_chunk(self, chunk) -> Dict[str, Dict[str, np.ndarray]]:
+        """Process one chunk (dict or structured array with ``key`` /
+        ``value`` / ``ts`` fields); returns ``{"emissions": ..., "late":
+        ...}`` as fixed-key column dicts."""
+        keys = np.asarray(chunk["key"], np.int64)
+        values = np.asarray(chunk["value"], np.int64)
+        ts = np.asarray(chunk["ts"], np.int64)
+        self._chunk_late = []
+        if len(keys):
+            if self.spec.kind == "session":
+                self._process_sessions(keys, values, ts)
+            else:
+                self._process_panes(keys, values, ts)
+            chunk_max = int(ts.max())
+            self.max_ts = (
+                chunk_max if self.max_ts is None else max(self.max_ts, chunk_max)
+            )
+        emissions = self._advance_watermark()
+        self.late_count += len(self._chunk_late)
+        if self.spec.late_policy == "side" and self._chunk_late:
+            cols = np.asarray(self._chunk_late, np.int64).T
+            late_out = dict(key=cols[0], value=cols[1], ts=cols[2],
+                            start=cols[3])
+        else:
+            late_out = dict(
+                key=np.zeros(0, np.int64), value=np.zeros(0, np.int64),
+                ts=np.zeros(0, np.int64), start=np.zeros(0, np.int64),
+            )
+        return {"emissions": emissions, "late": late_out}
+
+    # -- tumbling / sliding ----------------------------------------------------
+    def _process_panes(self, keys, values, ts) -> None:
+        size, slide = self.spec.size, self.spec.effective_slide
+        panes = -(-size // slide)
+        hi = (ts // slide) * slide
+        starts = hi[:, None] - np.arange(panes, dtype=np.int64)[None, :] * slide
+        valid = starts > (ts - size)[:, None]
+        late = (
+            (starts + size) <= self.wm if self.wm is not None
+            else np.zeros_like(valid)
+        )
+        # flatten item-major, newest pane first — the oracle's per-item order
+        k_e = np.repeat(keys, panes).reshape(len(keys), panes)
+        v_e = np.repeat(values, panes).reshape(len(keys), panes)
+        t_e = np.repeat(ts, panes).reshape(len(keys), panes)
+        late_sel = (valid & late).reshape(-1)
+        flat = lambda a: a.reshape(-1)[late_sel]
+        self._chunk_late.extend(
+            zip(flat(k_e).tolist(), flat(v_e).tolist(), flat(t_e).tolist(),
+                starts.reshape(-1)[late_sel].tolist())
+        )
+        live = (valid & ~late).reshape(-1)
+        k_l = k_e.reshape(-1)[live]
+        v_l = v_e.reshape(-1)[live]
+        s_l = starts.reshape(-1)[live]
+        if not len(k_l):
+            return
+        cells, inv = np.unique(
+            np.stack([k_l, s_l], axis=1), axis=0, return_inverse=True
+        )
+        partial = np.asarray(
+            kk.reduce_by_cell(
+                inv.reshape(-1).astype(np.int32),
+                np.stack([v_l, np.ones_like(v_l)], axis=1),
+                len(cells),
+                impl=self.impl,
+            ),
+            np.int64,
+        )
+        self._account_work(cells[:, 0], partial[:, 1])
+        for (key, start), (vsum, cnt) in zip(cells.tolist(), partial.tolist()):
+            wins = self.store.windows_of(key)
+            for w in wins:
+                if w.start == start:
+                    w.value += vsum
+                    w.count += cnt
+                    break
+            else:
+                wins.append(WindowState(start, start + size, vsum, cnt))
+                wins.sort(key=lambda w: w.start)
+
+    # -- session ---------------------------------------------------------------
+    def _process_sessions(self, keys, values, ts) -> None:
+        gap = self.spec.gap
+        if self.wm is not None:
+            late_mask = (ts + gap) <= self.wm
+        else:
+            late_mask = np.zeros(len(ts), bool)
+        self._chunk_late.extend(
+            zip(keys[late_mask].tolist(), values[late_mask].tolist(),
+                ts[late_mask].tolist(), ts[late_mask].tolist())
+        )
+        live = ~late_mask
+        k, v, t = keys[live], values[live], ts[live]
+        if not len(k):
+            return
+        order = np.lexsort((t, k))
+        ks, vs, ts_s = k[order], v[order], t[order]
+        new_frag = np.ones(len(ks), bool)
+        chain = (ks[1:] == ks[:-1]) & ((ts_s[1:] - ts_s[:-1]) < gap)
+        new_frag[1:] = ~chain
+        frag_ids = np.cumsum(new_frag) - 1
+        nfrag = int(frag_ids[-1]) + 1
+        sums = np.asarray(
+            kk.reduce_by_cell(
+                frag_ids.astype(np.int32),
+                np.stack([vs, np.ones_like(vs)], axis=1),
+                nfrag,
+                impl=self.impl,
+            ),
+            np.int64,
+        )
+        first = np.flatnonzero(new_frag)
+        last = np.append(first[1:], len(ks)) - 1
+        frag_keys = ks[first]
+        frag_lo = ts_s[first]
+        frag_hi = ts_s[last] + gap
+        self._account_work(frag_keys, sums[:, 1])
+        for key, lo, hi, (vsum, cnt) in zip(
+            frag_keys.tolist(), frag_lo.tolist(), frag_hi.tolist(),
+            sums.tolist(),
+        ):
+            wins = self.store.windows_of(key)
+            merged = WindowState(lo, hi, vsum, cnt)
+            keep = []
+            for w in wins:
+                # strict overlap of half-open [start, end) intervals
+                if w.start < merged.end and merged.start < w.end:
+                    merged.start = min(merged.start, w.start)
+                    merged.end = max(merged.end, w.end)
+                    merged.value += w.value
+                    merged.count += w.count
+                else:
+                    keep.append(w)
+            keep.append(merged)
+            keep.sort(key=lambda w: w.start)
+            self.store.slots[self.store.slot_of(key)][key] = keep
+
+    def _account_work(self, cell_keys, per_cell_counts) -> None:
+        slots = hash_to_slot(cell_keys, self.store.num_slots).astype(np.int64)
+        owners = self.store.slot_map.table[slots]
+        np.add.at(self.worker_items, owners, np.asarray(per_cell_counts))
+
+    # -- watermark / emission --------------------------------------------------
+    def _advance_watermark(self) -> Dict[str, np.ndarray]:
+        if self.max_ts is None:
+            return _emission_dict([])
+        new_wm = self.max_ts - self.spec.lateness
+        self.wm = new_wm if self.wm is None else max(self.wm, new_wm)
+        due = []
+        for slot_dict in self.store.slots:
+            for key, wins in slot_dict.items():
+                for w in wins:
+                    if w.end <= self.wm:
+                        due.append((w.end, w.start, key, w))
+        due.sort(key=lambda r: r[:3])
+        rows = []
+        for end, start, key, w in due:
+            rows.append((key, start, end, w.value, w.count))
+            slot_dict = self.store.slots[self.store.slot_of(key)]
+            slot_dict[key].remove(w)
+            if not slot_dict[key]:
+                del slot_dict[key]
+        return _emission_dict(rows)
+
+    def flush(self) -> Dict[str, np.ndarray]:
+        """End-of-stream: fire every remaining window (watermark -> +inf).
+        Not part of the oracle contract — a convenience for applications."""
+        rows = [
+            (key, start, end, value, count)
+            for key, start, end, value, count in (
+                (k, w.start, w.end, w.value, w.count)
+                for slot_dict in self.store.slots
+                for k, wins in slot_dict.items()
+                for w in wins
+            )
+        ]
+        rows.sort(key=lambda r: (r[2], r[1], r[0]))
+        self.store = KeyedStore(
+            self.store.num_slots, self.store.n_workers,
+            slot_map=self.store.slot_map,
+        )
+        return _emission_dict(rows)
+
+    # -- checkpoint round-trip -------------------------------------------------
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        tree = self.store.to_pytree()
+        tree.update(
+            wm=np.int64(self.wm if self.wm is not None else 0),
+            wm_valid=np.int64(self.wm is not None),
+            max_ts=np.int64(self.max_ts if self.max_ts is not None else 0),
+            max_ts_valid=np.int64(self.max_ts is not None),
+            late_count=np.int64(self.late_count),
+            worker_items=self.worker_items.copy(),
+        )
+        return tree
+
+    @classmethod
+    def restore(
+        cls, spec: WindowSpec, tree: Dict[str, np.ndarray], *,
+        impl: str = "segment",
+    ) -> "KeyedWindowEngine":
+        store = KeyedStore.from_pytree(tree)
+        eng = cls(spec, num_slots=store.num_slots, impl=impl, store=store)
+        eng.wm = int(tree["wm"]) if int(tree["wm_valid"]) else None
+        eng.max_ts = int(tree["max_ts"]) if int(tree["max_ts_valid"]) else None
+        eng.late_count = int(tree["late_count"])
+        eng.worker_items = np.asarray(tree["worker_items"], np.int64).copy()
+        return eng

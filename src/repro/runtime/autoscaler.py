@@ -136,19 +136,35 @@ class Autoscaler:
         self._pending: Optional[int] = None
         self._pending_count = 0
 
-    def propose(self, bus: MetricsBus, current: int, queue=None) -> Optional[int]:
+    def propose(
+        self, bus: MetricsBus, current: int, queue=None, feasible=None
+    ) -> Optional[int]:
         """Pure decision (also used by ft/driver's elastic path): returns a
-        target degree != current once cooldown+hysteresis are satisfied."""
-        target = self.policy.target(bus, current, self.candidates, queue=queue)
+        target degree != current once cooldown+hysteresis are satisfied.
+
+        ``feasible`` (optional) clamps the candidate ladder to degrees the
+        pattern can actually run at — the fix for policies proposing
+        degrees the state's ownership mode rejects (e.g. a non-divisor of
+        ``num_slots`` under S2 block ownership).  ``maybe_scale`` supplies
+        it from the executor's ``feasible_degrees``; slot-map stores report
+        every degree feasible, so the clamp is a no-op there.
+        """
+        candidates = self.candidates
+        if feasible is not None:
+            feasible_set = set(feasible)
+            candidates = [c for c in candidates if c in feasible_set]
+            if not candidates:
+                return None
+        target = self.policy.target(bus, current, candidates, queue=queue)
         if target == current:
             # no-op is always legal — policies signal "hold" by returning
             # `current` even when the farm started off the candidate ladder
             self._pending, self._pending_count = None, 0
             return None
-        if target not in self.candidates:
+        if target not in candidates:
             raise ValueError(
                 f"policy proposed degree {target} outside candidates "
-                f"{self.candidates}"
+                f"{candidates}"
             )
         if self._since_resize < self.cooldown_chunks:
             return None
@@ -174,7 +190,12 @@ class Autoscaler:
         """Consult the policy and apply the transition if accepted."""
         bus = executor.metrics
         current = executor.degree
-        target = self.propose(bus, current, queue=queue)
+        target = self.propose(
+            bus,
+            current,
+            queue=queue,
+            feasible=executor.feasible_degrees(self.candidates),
+        )
         self.tick()
         if target is None:
             return None

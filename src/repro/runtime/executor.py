@@ -62,6 +62,11 @@ class PatternAdapter:
     #: multiple of this (1 except for flush/sync-period patterns)
     granularity: int = 1
 
+    #: host-driven adapters (e.g. the keyed window engine) run their step as
+    #: plain host code: no mesh is built, the step is not jitted, and state
+    #: is a host pytree — the executor switches on this flag
+    is_host: bool = False
+
     def validate_degree(self, chunk_size: int, n_w: int) -> None:
         if chunk_size % n_w:
             raise ValueError(
@@ -74,6 +79,20 @@ class PatternAdapter:
                 f"(chunk_size={chunk_size}, n_w={n_w})"
             )
 
+    def feasible_degrees(self, chunk_size: int, candidates) -> List[int]:
+        """Subset of ``candidates`` this pattern can actually run at — the
+        clamp the autoscaler applies before consulting its policy (block
+        ownership restricts to divisors of the slot count; slot-map
+        ownership accepts every degree)."""
+        out = []
+        for n in candidates:
+            try:
+                self.validate_degree(chunk_size, n)
+            except ValueError:
+                continue
+            out.append(n)
+        return out
+
     def init_state(self):
         raise NotImplementedError
 
@@ -81,8 +100,13 @@ class PatternAdapter:
         """Return ``(state, chunk) -> (state, out)`` — jit-compilable."""
         raise NotImplementedError
 
-    def place(self, state, mesh: Mesh, axis: str):
-        """Device-place ``state`` for ``mesh`` (the physical handoff)."""
+    def make_host_step(self, n_w: int) -> Callable:
+        """Host-driven step for ``is_host`` adapters (not jitted)."""
+        raise NotImplementedError
+
+    def place(self, state, mesh: Optional[Mesh], axis: str):
+        """Device-place ``state`` for ``mesh`` (the physical handoff);
+        host adapters receive ``mesh=None`` and keep state on host."""
         return state
 
     def resize(self, state, n_old: int, n_new: int) -> Tuple[Any, ResizeInfo]:
@@ -91,7 +115,9 @@ class PatternAdapter:
 
 
 class PartitionedAdapter(PatternAdapter):
-    """S2 fully-partitioned state: resize = block repartitioning (handoff)."""
+    """S2 fully-partitioned state: resize = repartitioning (block handoff,
+    or slot-map handoff when the pattern uses slot-map ownership — every
+    degree feasible, replicated state vector)."""
 
     def __init__(self, pattern: patterns.PartitionedState, v0):
         self.pattern = pattern
@@ -102,7 +128,7 @@ class PartitionedAdapter(PatternAdapter):
 
     def validate_degree(self, chunk_size: int, n_w: int) -> None:
         super().validate_degree(chunk_size, n_w)
-        self.pattern.slots_per_worker(n_w)  # raises if slots don't divide
+        self.pattern.validate_degree(n_w)  # mode-appropriate ownership check
 
     def make_step(self, mesh: Mesh, axis: str) -> Callable:
         def step(v, chunk):
@@ -112,13 +138,19 @@ class PartitionedAdapter(PatternAdapter):
         return step
 
     def place(self, v, mesh: Mesh, axis: str):
-        return jax.device_put(v, NamedSharding(mesh, P(axis)))
+        spec = P() if self.pattern.ownership == "slotmap" else P(axis)
+        return jax.device_put(v, NamedSharding(mesh, spec))
 
     def resize(self, v, n_old: int, n_new: int) -> Tuple[Any, ResizeInfo]:
-        moved = self.pattern.handoff_volume(self.pattern.num_slots, n_old, n_new)
+        moved = self.pattern.transition_volume(n_old, n_new)
         v = self.pattern.reshard(v, n_old, n_new)  # value is placement-invariant
+        proto = (
+            "S2-slotmap-handoff"
+            if self.pattern.ownership == "slotmap"
+            else "S2-block-handoff"
+        )
         return v, ResizeInfo(
-            protocol="S2-block-handoff",
+            protocol=proto,
             handoff_items=moved,
             detail=f"{moved}/{self.pattern.num_slots} slots change owner",
         )
@@ -277,7 +309,7 @@ class StreamExecutor:
         self._steps: Dict[int, Callable] = {}
         self.degree = degree
         adapter.validate_degree(chunk_size, degree)
-        self.state = adapter.place(adapter.init_state(), self._mesh(degree), axis)
+        self.state = self.place_state(adapter.init_state())
         self.chunks_done = 0
 
     # -- degree / compile caches ---------------------------------------------
@@ -290,9 +322,23 @@ class StreamExecutor:
 
     def _step(self, n: int) -> Callable:
         if n not in self._steps:
-            raw = self.adapter.make_step(self._mesh(n), self.axis)
-            self._steps[n] = jax.jit(raw)
+            if self.adapter.is_host:
+                self._steps[n] = self.adapter.make_host_step(n)
+            else:
+                raw = self.adapter.make_step(self._mesh(n), self.axis)
+                self._steps[n] = jax.jit(raw)
         return self._steps[n]
+
+    def place_state(self, state):
+        """Place ``state`` for the current degree (host adapters skip the
+        mesh entirely — their state is a host pytree)."""
+        mesh = None if self.adapter.is_host else self._mesh(self.degree)
+        return self.adapter.place(state, mesh, self.axis)
+
+    def feasible_degrees(self, candidates) -> List[int]:
+        """Degrees from ``candidates`` the adapter accepts at this chunk
+        size — what the autoscaler clamps policy proposals to."""
+        return self.adapter.feasible_degrees(self.chunk_size, candidates)
 
     @property
     def compiled_degrees(self) -> List[int]:
@@ -305,8 +351,8 @@ class StreamExecutor:
         self.adapter.validate_degree(self.chunk_size, n_new)
         n_old = self.degree
         self.state, info = self.adapter.resize(self.state, n_old, n_new)
-        self.state = self.adapter.place(self.state, self._mesh(n_new), self.axis)
         self.degree = n_new
+        self.state = self.place_state(self.state)
         rec = ResizeRecord(
             t=self.metrics.clock.now(),
             n_old=n_old,
@@ -320,11 +366,17 @@ class StreamExecutor:
 
     # -- execution ------------------------------------------------------------
     def process(self, chunk, *, queue_depth: int = 0):
-        """Run one chunk at the current degree; returns the chunk output."""
-        chunk = jnp.asarray(chunk)
-        if chunk.shape[0] != self.chunk_size:
+        """Run one chunk at the current degree; returns the chunk output.
+
+        A chunk may be a single array, a pytree of arrays (leading axis =
+        stream order), or — for host adapters — a structured record array
+        (e.g. keyed stream items)."""
+        if not self.adapter.is_host:
+            chunk = jax.tree.map(jnp.asarray, chunk)
+        m = int(len(jax.tree.leaves(chunk)[0]))
+        if m != self.chunk_size:
             # tail chunk: fall back to the largest compatible degree
-            self._fit_degree_for(chunk.shape[0])
+            self._fit_degree_for(m)
         t0 = self.metrics.clock.now()
         self.state, out = self._step(self.degree)(self.state, chunk)
         jax.block_until_ready(out)
@@ -333,10 +385,10 @@ class StreamExecutor:
             ChunkRecord(
                 t_start=t0,
                 t_end=t1,
-                m=int(chunk.shape[0]),
+                m=m,
                 n_workers=self.degree,
                 queue_depth=queue_depth,
-                collector_updates=int(chunk.shape[0]) // self.adapter.granularity,
+                collector_updates=m // self.adapter.granularity,
             )
         )
         self.chunks_done += 1

@@ -273,6 +273,10 @@ class Chunker:
 
     @staticmethod
     def _shape(items: List):
+        if items and isinstance(items[0], np.void):
+            # structured records (e.g. keyed stream items): re-stack into a
+            # record array so field access stays columnar downstream
+            return np.array(items, dtype=items[0].dtype)
         if items and isinstance(items[0], np.ndarray):
             return np.stack(items)
         if items and np.isscalar(items[0]):

@@ -83,19 +83,15 @@ class Supervisor:
         latest = ckpt_lib.latest_step(self.ckpt_dir)
         if latest is None:
             # no checkpoint yet: restart the stream from the initial state
-            self.executor.state = self.executor.adapter.place(
-                self.executor.adapter.init_state(),
-                self.executor._mesh(self.executor.degree),
-                self.executor.axis,
+            self.executor.state = self.executor.place_state(
+                self.executor.adapter.init_state()
             )
             self._log(0, "restore", "no checkpoint; restarting stream")
             return 0
         state, meta = ckpt_lib.restore(
             self.ckpt_dir, latest, self.executor.state
         )
-        self.executor.state = self.executor.adapter.place(
-            state, self.executor._mesh(self.executor.degree), self.executor.axis
-        )
+        self.executor.state = self.executor.place_state(state)
         self._log(latest, "restore", f"restored checkpoint at chunk {latest}")
         return int(meta["cursor"])
 

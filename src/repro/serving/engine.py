@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.keyed.store import hash_to_slot, plan_relocation
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 
@@ -101,10 +102,10 @@ class ServingEngine:
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self._extract = jax.jit(self._extract_impl)
 
-    # -- S2 slot assignment ----------------------------------------------------
+    # -- S2 slot assignment (the keyed store's hash, sessions as keys) ---------
     def _slot_for(self, req: Request) -> Optional[int]:
         if self.policy == "hash":
-            slot = (req.rid * 2654435761) % self.num_slots  # h(session)
+            slot = int(hash_to_slot(req.rid, self.num_slots))  # h(session)
             return slot if slot not in self.active else None
         for s in range(self.num_slots):
             if s not in self.active:
@@ -175,30 +176,15 @@ class ServingEngine:
             return 0
 
         old_active = dict(self.active)
-        placements: Dict[int, int] = {}   # old slot -> new slot
-        requeued: list = []
-        if self.policy == "hash":
-            for old_slot, req in old_active.items():
-                want = (req.rid * 2654435761) % new_num_slots
-                if want in placements.values():
-                    requeued.append(req)
-                else:
-                    placements[old_slot] = want
-        else:
-            # keep slot ids that still fit; compact the rest into free slots
-            for old_slot in sorted(old_active):
-                if old_slot < new_num_slots:
-                    placements[old_slot] = old_slot
-            free_slots = iter(
-                s for s in range(new_num_slots) if s not in placements.values()
-            )
-            for old_slot in sorted(old_active):
-                if old_slot >= new_num_slots:
-                    tgt = next(free_slots, None)
-                    if tgt is None:
-                        requeued.append(old_active[old_slot])
-                    else:
-                        placements[old_slot] = tgt
+        # the keyed store plans the §4.2 handoff: sessions are keys, decode
+        # slots are the partitions (hash re-hashes to the new modulus with
+        # collision-requeue; ondemand keeps fitting ids and compacts)
+        placements, requeued_slots = plan_relocation(
+            {slot: req.rid for slot, req in old_active.items()},
+            new_num_slots,
+            policy=self.policy,
+        )
+        requeued = [old_active[slot] for slot in requeued_slots]
 
         new_caches = T.init_caches(self.cfg, new_num_slots, self.s_max,
                                    self.cfg.cdtype)

@@ -73,6 +73,38 @@ def check_s2_partitioned_resize():
     print("S2 resize ok")
 
 
+def check_s2_slotmap_resize():
+    """Slot-map ownership: degrees that do NOT divide num_slots (4, 5 over
+    18) run and resize bit-exactly, with the slot-map handoff accounting."""
+    num_slots = 18
+    pat = patterns.PartitionedState(
+        f=lambda x, s: x * 3 + s,
+        ns=lambda x, s: s + 2 * x,
+        h=lambda x: (x.astype(jnp.int32) * 11) % num_slots,
+        num_slots=num_slots,
+        ownership="slotmap",
+    )
+    chunk = 20  # divisible by 2, 4, 5 — none of which divide 18 except 2
+    xs = jnp.arange(chunk * NUM_CHUNKS, dtype=jnp.int32)
+    v0 = jnp.zeros((num_slots,), dtype=jnp.int32)
+
+    ex = StreamExecutor(PartitionedAdapter(pat, v0), degree=2, chunk_size=chunk)
+    outs = ex.run(
+        [xs[i : i + chunk] for i in range(0, len(xs), chunk)],
+        schedule={2: 4, 4: 5, 6: 2},
+    )
+    ys_ref, v_ref = pat.reference(xs, v0)
+    got = np.concatenate([np.asarray(o) for o in outs])
+    np.testing.assert_array_equal(got, np.asarray(ys_ref))
+    np.testing.assert_array_equal(np.asarray(ex.state), np.asarray(v_ref))
+    assert [r.protocol for r in ex.metrics.resizes] == \
+        ["S2-slotmap-handoff"] * 3
+    assert [r.handoff_items for r in ex.metrics.resizes] == [
+        pat.transition_volume(a, b) for a, b in ((2, 4), (4, 5), (5, 2))
+    ]
+    print("S2 slotmap resize ok (non-divisor degrees)")
+
+
 def check_s3_accumulator_resize():
     # f reads only the item (view-independent) so per-item outputs are
     # degree-invariant; the final state is exact by assoc+comm regardless.
@@ -263,6 +295,7 @@ def check_supervisor_failure_recovery():
 if __name__ == "__main__":
     assert jax.device_count() == 8, jax.devices()
     check_s2_partitioned_resize()
+    check_s2_slotmap_resize()
     check_s3_accumulator_resize()
     check_s3_state_threading()
     check_s4_successive_resize()
