@@ -1,0 +1,121 @@
+"""Benchmark regression gates: fresh results/*.json vs committed baselines.
+
+Replaces the inline heredoc assertions that used to live in the CI yaml:
+the ``bench`` job runs the benchmark modules, then this checker compares
+every fresh report under ``results/`` against ``results/baselines.json``.
+Three gate kinds per suite:
+
+* ``exact``  — the value must equal the baseline (correctness flags: a flip
+  is a correctness regression, never tolerable);
+* ``min``    — the value must be >= the floor (speedups and sanity
+  throughput floors: "the device table beats the host dict" is a claim the
+  build enforces, not a hope);
+* ``band``   — the value must sit within ``value * (1 ± rtol)`` (tolerance
+  bands around measured performance, so a *perf* regression — not just a
+  correctness flip — fails the build; bands are put on machine-relative
+  ratios, which are far more stable across CI runners than absolute
+  wall-clock numbers).
+
+Values are addressed by dotted paths with list indexing, e.g.
+``hot_path[2].speedup`` or ``device_table.speedup``.
+
+Run:     python -m benchmarks.check_gates
+Refresh: python -m benchmarks.check_gates --update   (rewrites band centers
+         from the current results; exact/min/rtol entries are left alone)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINES = os.path.join(_REPO, "results", "baselines.json")
+
+_TOKEN = re.compile(r"([^.\[\]]+)|\[(\d+)\]")
+
+
+def resolve(obj, path: str):
+    """Walk ``obj`` by a dotted path with ``[i]`` list indexing."""
+    for name, idx in _TOKEN.findall(path):
+        obj = obj[int(idx)] if idx else obj[name]
+    return obj
+
+
+def check_suite(name: str, spec: dict, root: str) -> list:
+    """Evaluate one suite's gates; returns (gate, path, ok, detail) rows."""
+    rows = []
+    path = os.path.join(root, spec["file"])
+    if not os.path.exists(path):
+        return [("file", spec["file"], False, "missing — run the benchmark")]
+    with open(path) as f:
+        rep = json.load(f)
+    for p, want in spec.get("exact", {}).items():
+        got = resolve(rep, p)
+        rows.append(("exact", f"{name}:{p}", got == want,
+                     f"got {got!r}, want {want!r}"))
+    for p, floor in spec.get("min", {}).items():
+        got = resolve(rep, p)
+        rows.append(("min", f"{name}:{p}", got >= floor,
+                     f"got {got:.4g}, floor {floor:.4g}"))
+    for p, band in spec.get("band", {}).items():
+        got = resolve(rep, p)
+        v, rtol = band["value"], band["rtol"]
+        lo, hi = v * (1 - rtol), v * (1 + rtol)
+        rows.append(("band", f"{name}:{p}", lo <= got <= hi,
+                     f"got {got:.4g}, band [{lo:.4g}, {hi:.4g}]"))
+    return rows
+
+
+def update_bands(baselines: dict, root: str) -> None:
+    for spec in baselines.values():
+        path = os.path.join(root, spec["file"])
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            rep = json.load(f)
+        for p, band in spec.get("band", {}).items():
+            band["value"] = resolve(rep, p)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baselines", default=BASELINES)
+    ap.add_argument("--root", default=_REPO,
+                    help="directory the suite 'file' paths are relative to")
+    ap.add_argument("--update", action="store_true",
+                    help="refresh band centers from current results")
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.baselines):
+        print(
+            f"FAIL  baselines file {args.baselines} is missing — it must be "
+            f"committed (results/ is gitignored EXCEPT baselines.json)"
+        )
+        return 1
+    with open(args.baselines) as f:
+        baselines = json.load(f)
+    if args.update:
+        update_bands(baselines, args.root)
+        with open(args.baselines, "w") as f:
+            json.dump(baselines, f, indent=2)
+            f.write("\n")
+        print(f"updated band centers in {args.baselines}")
+        return 0
+    rows = []
+    for name, spec in baselines.items():
+        rows.extend(check_suite(name, spec, args.root))
+    width = max(len(r[1]) for r in rows) if rows else 0
+    failed = 0
+    for gate, path, ok, detail in rows:
+        mark = "PASS" if ok else "FAIL"
+        failed += not ok
+        print(f"{mark}  {gate:<5}  {path:<{width}}  {detail}")
+    print(f"\n{len(rows) - failed}/{len(rows)} gates passed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -101,6 +101,52 @@ def keyed_throughput_table(path: str) -> None:
             f"| {h['cells']} | {h['rows']} | {h['masked_us']:.0f} | "
             f"{h['segment_us']:.0f} | {h['speedup']:.2f}x |"
         )
+    dt = rep.get("device_table")
+    if dt:
+        lines.append("")
+        lines.append(
+            "### Host dict-of-dicts vs device-resident table "
+            "(standing-keys regime)"
+        )
+        lines.append("")
+        lines.append(
+            "| backend | items/s | us/item | exact vs oracle |"
+        )
+        lines.append("|---|---|---|---|")
+        lines.append(
+            f"| host `KeyedStore` (PR 2) | {dt['host_items_per_s']:.4g} | "
+            f"{1e6 / dt['host_items_per_s']:.2f} | "
+            f"{'yes' if dt['host_exact'] else '**NO**'} |"
+        )
+        lines.append(
+            f"| `DeviceWindowTable` | {dt['table_items_per_s']:.4g} | "
+            f"{1e6 / dt['table_items_per_s']:.2f} | "
+            f"{'yes' if dt['table_exact'] else '**NO**'} |"
+        )
+        st = dt["table_stats"]
+        lines.append("")
+        lines.append(
+            f"device table speedup **{dt['speedup']:.2f}x** over "
+            f"{dt['items']} items / {dt['num_keys']} standing keys "
+            f"(row hits {st['hits']}, inserts {st['inserted']}, "
+            f"spilled {st['spilled']}, evicted {st['evicted']})"
+        )
+    sweep = rep.get("capacity_sweep")
+    if sweep:
+        lines.append("")
+        lines.append("### Capacity / TTL sweep (hot+cold key churn)")
+        lines.append("")
+        lines.append(
+            "| capacity | ttl | items/s | spilled | evicted | exact |"
+        )
+        lines.append("|---|---|---|---|---|---|")
+        for s in sweep:
+            ttl = s["ttl"] if s["ttl"] is not None else "—"
+            lines.append(
+                f"| {s['capacity']} | {ttl} | "
+                f"{s['items_per_s']:.4g} | {s['spilled']} | {s['evicted']} | "
+                f"{'yes' if s['exact'] else '**NO**'} |"
+            )
     lines.append("")
     lines.append("| phase | degree | items/s |")
     lines.append("|---|---|---|")
@@ -117,8 +163,11 @@ def keyed_throughput_table(path: str) -> None:
     lines.append("")
     lines.append(
         f"segment beats masked: **{rep['segment_beats_masked']}** · "
+        f"device table beats host: "
+        f"**{rep.get('device_table_beats_host', '—')}** · "
         f"Pallas == ref (interpret): **{rep['pallas_interpret_matches_ref']}**"
         f" · resized run == oracle: **{rep['resized_run_matches_oracle']}**"
+        f" · sweep all exact: **{rep.get('capacity_sweep_all_exact', '—')}**"
     )
     with open(path, "w") as f:
         f.write("\n".join(lines) + "\n")

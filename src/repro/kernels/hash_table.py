@@ -1,0 +1,120 @@
+"""Hash-table row lookup — the Pallas kernel for device window tables.
+
+The device-resident keyed window table (:mod:`repro.keyed.table`) maps a
+cell (a ``(key, window_start)`` pair) to its row in a dense fixed-capacity
+slab.  The table invariant (lookups scan the whole probe window, so a live
+cell has exactly one row) lets the device realization skip pointer chasing
+entirely: matching is a **full-scan one-hot compare** — every cell block is
+compared against every table block with broadcast equality, and the row
+index is recovered as a min-reduction over match candidates.  No gathers,
+no scatters: broadcast compares and min-reductions are exactly what the VPU
+wants, the same design point as the one-hot MXU contraction in
+``segment_reduce.py``.
+
+The sequential TPU grid runs table blocks innermost; the per-cell-block
+output is initialized to the miss sentinel (``capacity``) on the first
+table step and min-accumulated across steps.  Because a cell has at most
+one live row, min-index equals the unique match.
+
+int64 keys/starts are compared as **lo/hi int32 halves** (four equality
+planes ANDed) — TPU vector units have no i64 lanes, and under default
+JAX x64-off config ``jnp`` would silently narrow anyway; the dispatch layer
+(:func:`repro.kernels.ops.table_lookup`) does the split host-side with
+uint64 wraparound so negative keys round-trip exactly.
+
+The accumulate half of the table update is the ``scatter_add`` kernel from
+``segment_reduce.py`` (shipped with PR 2 precisely for this table); this
+module only adds the match/lookup kernel and its jnp reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _match_candidates(
+    cell_lo_hi, table_lo_hi, occ, base: int, capacity: int,
+):
+    """``[bn, bc]`` candidate row indices: the row index where all four
+    int32 planes match an occupied row, else ``capacity`` (the miss/identity
+    of the min-accumulation)."""
+    (cklo, ckhi, cslo, cshi) = cell_lo_hi
+    (tklo, tkhi, tslo, tshi) = table_lo_hi
+    m = (
+        (tklo[None, :] == cklo[:, None])
+        & (tkhi[None, :] == ckhi[:, None])
+        & (tslo[None, :] == cslo[:, None])
+        & (tshi[None, :] == cshi[:, None])
+        & (occ[None, :] != 0)
+    )
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, m.shape, 1)
+    return jnp.where(m, idx, jnp.int32(capacity))
+
+
+def _table_lookup_kernel(
+    cklo_ref, ckhi_ref, cslo_ref, cshi_ref,
+    tklo_ref, tkhi_ref, tslo_ref, tshi_ref, occ_ref,
+    out_ref, *, capacity: int, block_table: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, capacity)
+
+    cand = _match_candidates(
+        (cklo_ref[0], ckhi_ref[0], cslo_ref[0], cshi_ref[0]),
+        (tklo_ref[0], tkhi_ref[0], tslo_ref[0], tshi_ref[0]),
+        occ_ref[0],
+        base=j * block_table,
+        capacity=capacity,
+    )
+    out_ref[0, :] = jnp.minimum(out_ref[0, :], jnp.min(cand, axis=1))
+
+
+def table_lookup(
+    cell_lo_hi, table_lo_hi, occ, *, block_cells: int = 128,
+    block_table: int = 512, interpret: bool = True,
+):
+    """Row index of each cell in the table, ``capacity`` = miss.
+
+    ``cell_lo_hi``: four int32 ``[n]`` arrays (key lo/hi, start lo/hi);
+    ``table_lo_hi``: the same four planes at ``[C]``; ``occ``: int32 ``[C]``
+    occupancy.  Returns int32 ``[n]``.  Padding convention: cell padding may
+    hold any value (padded outputs are sliced off by the caller); table
+    padding must be unoccupied.
+    """
+    n = cell_lo_hi[0].shape[0]
+    capacity = occ.shape[0]
+    bn = min(block_cells, n)
+    bc = min(block_table, capacity)
+
+    def pad_to(a, mult):
+        short = (-a.shape[0]) % mult
+        if short:
+            a = jnp.concatenate([a, jnp.zeros((short,), a.dtype)])
+        return a
+
+    cells = [pad_to(jnp.asarray(a, jnp.int32), bn)[None, :]
+             for a in cell_lo_hi]
+    table = [pad_to(jnp.asarray(a, jnp.int32), bc)[None, :]
+             for a in (*table_lo_hi, occ)]
+    n_pad = cells[0].shape[1]
+    c_pad = table[0].shape[1]
+    kernel = functools.partial(
+        _table_lookup_kernel, capacity=capacity, block_table=bc
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_pad // bn, c_pad // bc),
+        in_specs=[pl.BlockSpec((1, bn), lambda i, j: (0, i))] * 4
+        + [pl.BlockSpec((1, bc), lambda i, j: (0, j))] * 5,
+        out_specs=pl.BlockSpec((1, bn), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+        interpret=interpret,
+    )(*cells, *table)
+    return out[0, :n]

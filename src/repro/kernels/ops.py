@@ -13,8 +13,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.kernels import decode_attention as _dk
 from repro.kernels import flash_attention as _fk
+from repro.kernels import hash_table as _ht
 from repro.kernels import moe_dispatch as _mk
 from repro.kernels import ref as _ref
 from repro.kernels import segment_reduce as _sr
@@ -105,6 +108,35 @@ def segment_sum_sorted(values, seg_ids, num_segments: int):
         return _sr.segment_sum_sorted(values, seg_ids, num_segments)
     return _sr.segment_sum(
         values, seg_ids, num_segments, interpret=mode is None
+    )
+
+
+def _split_i64(a) -> tuple:
+    """int64 host array -> (lo, hi) int32 bit halves via uint64 wraparound
+    (negative values split/compare exactly; jnp under x64-off would narrow)."""
+    u = np.asarray(a, np.int64).astype(np.uint64)
+    lo = (u & np.uint64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+    hi = (u >> np.uint64(32)).astype(np.uint32).view(np.int32)
+    return lo, hi
+
+
+def table_lookup(cell_keys, cell_starts, table_keys, table_starts, table_occ):
+    """Row index of each ``(key, start)`` cell in a device window table
+    (``capacity`` = miss) — the match half of the table's insert/accumulate
+    (the accumulate half dispatches through :func:`scatter_add`).  Keys and
+    starts are int64 on the host; the kernel and its reference compare int32
+    lo/hi halves."""
+    cells = _split_i64(cell_keys) + _split_i64(cell_starts)
+    table = _split_i64(table_keys) + _split_i64(table_starts)
+    occ = np.asarray(table_occ, np.int32)
+    mode = _kernel_enabled()
+    if mode is False:
+        return _ref.table_lookup_ref(cells, table, occ)
+    return _ht.table_lookup(
+        tuple(jnp.asarray(c) for c in cells),
+        tuple(jnp.asarray(t) for t in table),
+        jnp.asarray(occ),
+        interpret=mode is None,
     )
 
 

@@ -102,6 +102,25 @@ def scatter_add_ref(table, ids, rows):
     return padded.at[ids].add(rows.astype(acc))[:C]
 
 
+def table_lookup_ref(cell_lo_hi, table_lo_hi, occ):
+    """Full-scan min-index match (see kernels/hash_table.py): four int32
+    planes (key lo/hi, start lo/hi) compared cell x row; returns int32 [n]
+    row indices with capacity = miss.  A live cell has at most one row (the
+    table's no-duplicates invariant), so min-index is the unique match."""
+    cklo, ckhi, cslo, cshi = (jnp.asarray(a, jnp.int32) for a in cell_lo_hi)
+    tklo, tkhi, tslo, tshi = (jnp.asarray(a, jnp.int32) for a in table_lo_hi)
+    capacity = occ.shape[0]
+    m = (
+        (tklo[None, :] == cklo[:, None])
+        & (tkhi[None, :] == ckhi[:, None])
+        & (tslo[None, :] == cslo[:, None])
+        & (tshi[None, :] == cshi[:, None])
+        & (jnp.asarray(occ, jnp.int32)[None, :] != 0)
+    )
+    idx = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    return jnp.min(jnp.where(m, idx, jnp.int32(capacity)), axis=1)
+
+
 def moe_gather_ref(x, row_token):
     """x [T, d]; row_token [R] int32 in [0, T] (T = dummy row -> zeros)."""
     x_pad = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)

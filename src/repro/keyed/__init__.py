@@ -5,9 +5,13 @@ Layers (see README.md "Keyed windowed state"):
 * :mod:`repro.keyed.store` — slot-mapped keyed state store: explicit
   slot -> owner table, any worker count, minimal-migration rebalance, and
   the session-store relocation planner the serving engine routes through.
+* :mod:`repro.keyed.table` — device-resident window table: dense
+  fixed-capacity open-addressed arrays with TTL eviction, the host store
+  as spill tier (Pallas lookup kernel in ``kernels/hash_table.py``).
 * :mod:`repro.keyed.windows` — tumbling / sliding / session window
   operators with watermarks and a late-data policy, chunk-exact against the
-  serial oracle :func:`repro.core.semantics.keyed_windows`.
+  serial oracle :func:`repro.core.semantics.keyed_windows` on either
+  state backend (``host`` dict store or ``device_table``).
 * :mod:`repro.keyed.kernels` — the per-chunk cell-reduction hot path:
   sort-by-key + Pallas segment-reduce, with the masked full-scan baseline
   it replaces.
@@ -21,6 +25,7 @@ from repro.keyed.runtime import (
     ITEM_DTYPE,
     KeyedWindowAdapter,
     keyed_stream,
+    migrated_rows,
     synthetic_keyed_items,
 )
 from repro.keyed.store import (
@@ -30,18 +35,23 @@ from repro.keyed.store import (
     hash_to_slot,
     plan_relocation,
 )
+from repro.keyed.table import DeviceWindowTable, TableStats, cell_hash
 from repro.keyed.windows import KeyedWindowEngine, WindowSpec
 
 __all__ = [
     "ITEM_DTYPE",
+    "DeviceWindowTable",
     "KeyedStore",
     "KeyedWindowAdapter",
     "KeyedWindowEngine",
     "SlotMap",
+    "TableStats",
     "WindowSpec",
     "WindowState",
+    "cell_hash",
     "hash_to_slot",
     "keyed_stream",
+    "migrated_rows",
     "plan_relocation",
     "reduce_by_cell",
     "sort_by_cell",

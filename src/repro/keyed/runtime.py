@@ -22,7 +22,7 @@ from typing import Any, Callable, Tuple
 
 import numpy as np
 
-from repro.keyed.store import SlotMap
+from repro.keyed.store import SlotMap, hash_to_slot
 from repro.keyed.windows import KeyedWindowEngine, WindowSpec
 from repro.runtime.executor import PatternAdapter, ResizeInfo
 
@@ -56,19 +56,38 @@ def synthetic_keyed_items(
 
 
 class KeyedWindowAdapter(PatternAdapter):
-    """Keyed windowed state under the elastic executor (host-driven)."""
+    """Keyed windowed state under the elastic executor (host-driven).
+
+    ``backend="device_table"`` runs tumbling/sliding windows on the
+    device-resident :class:`~repro.keyed.table.DeviceWindowTable`
+    (``capacity`` rows, optional ``ttl`` eviction, host-store spill tier);
+    the canonical engine snapshot makes both backends indistinguishable to
+    the executor, the autoscaler, and ``repro.checkpoint``.
+    """
 
     is_host = True
 
     def __init__(self, spec: WindowSpec, *, num_slots: int,
-                 impl: str = "segment"):
+                 impl: str = "segment", backend: str = "host",
+                 capacity: int = 1024, ttl: int | None = None,
+                 max_probes: int = 16):
         self.spec = spec
         self.num_slots = num_slots
         self.impl = impl
+        self.backend = backend
+        self.capacity = capacity
+        self.ttl = ttl
+        self.max_probes = max_probes
+
+    def _engine_kwargs(self):
+        return dict(
+            impl=self.impl, backend=self.backend, capacity=self.capacity,
+            ttl=self.ttl, max_probes=self.max_probes,
+        )
 
     def init_state(self):
         return KeyedWindowEngine(
-            self.spec, num_slots=self.num_slots, impl=self.impl
+            self.spec, num_slots=self.num_slots, **self._engine_kwargs()
         ).snapshot()
 
     def validate_degree(self, chunk_size: int, n_w: int) -> None:
@@ -82,7 +101,9 @@ class KeyedWindowAdapter(PatternAdapter):
 
     def make_host_step(self, n_w: int) -> Callable:
         def step(state, chunk):
-            eng = KeyedWindowEngine.restore(self.spec, state, impl=self.impl)
+            eng = KeyedWindowEngine.restore(
+                self.spec, state, **self._engine_kwargs()
+            )
             if eng.store.n_workers != n_w:
                 # initial placement (not a resize): align ownership with the
                 # executor's current degree before the first chunk
@@ -101,6 +122,11 @@ class KeyedWindowAdapter(PatternAdapter):
         old_items = np.asarray(state["worker_items"], np.int64)
         keep = min(n_new, len(old_items))
         items[:keep] = old_items[:keep]  # surviving workers keep their tallies
+        # the handoff payload under a device table is table ROWS, not dict
+        # entries: every open cell whose key hashes to a migrated slot moves
+        # with its slot (the canonical snapshot rows ARE the migration unit,
+        # so nothing is re-serialized — ownership is a column lookup)
+        moved_rows = migrated_rows(state, moved)
         state = dict(
             state, slot_table=sm.table, n_workers=np.int64(n_new),
             worker_items=items,
@@ -108,6 +134,18 @@ class KeyedWindowAdapter(PatternAdapter):
         return state, ResizeInfo(
             protocol="S2-slotmap-handoff",
             handoff_items=int(len(moved)),
-            detail=f"{len(moved)}/{len(table)} slots migrate "
-                   f"(minimal rebalance {n_cur}->{n_new})",
+            detail=f"{len(moved)}/{len(table)} slots ({moved_rows} table rows)"
+                   f" migrate (minimal rebalance {n_cur}->{n_new})",
         )
+
+
+def migrated_rows(state, moved_slots) -> int:
+    """Open-window rows riding a slot migration: rows (either tier) whose
+    key hashes to a slot in ``moved_slots`` — the §4.2 handoff volume in
+    row units, reported alongside the slot count on the metrics bus."""
+    keys = np.asarray(state["w_key"], np.int64)
+    if not len(keys) or not len(moved_slots):
+        return 0
+    slots = hash_to_slot(keys, len(np.asarray(state["slot_table"])))
+    return int(np.isin(slots.astype(np.int64),
+                       np.asarray(moved_slots, np.int64)).sum())

@@ -219,6 +219,17 @@ class KeyedStore:
 
     @classmethod
     def from_pytree(cls, tree: Dict[str, np.ndarray]) -> "KeyedStore":
+        """Rebuild a store from its pytree, **order-canonically**.
+
+        The rows are re-sorted by ``(key, start)`` before insertion rather
+        than trusted in array order: the serialized arrays may arrive in any
+        order (hand-built trees, concatenated/merged snapshots), and naive
+        insertion order leaks into the per-slot dict insertion order and the
+        per-key window-list order — the reconstructed store would differ
+        from a natively-built one even though the logical state is equal.
+        Sorting first makes ``from_pytree(t).to_pytree() == t`` hold for
+        every row permutation (regression-tested in tests/test_keyed.py).
+        """
         table = np.asarray(tree["slot_table"], np.int32)
         n_workers = int(tree["n_workers"])
         store = cls(
@@ -226,13 +237,16 @@ class KeyedStore:
             n_workers,
             slot_map=SlotMap(len(table), n_workers, table=table),
         )
-        for key, start, end, value, count in zip(
-            np.asarray(tree["w_key"], np.int64),
-            np.asarray(tree["w_start"], np.int64),
-            np.asarray(tree["w_end"], np.int64),
-            np.asarray(tree["w_value"], np.int64),
-            np.asarray(tree["w_count"], np.int64),
-        ):
+        rows = sorted(
+            zip(
+                np.asarray(tree["w_key"], np.int64).tolist(),
+                np.asarray(tree["w_start"], np.int64).tolist(),
+                np.asarray(tree["w_end"], np.int64).tolist(),
+                np.asarray(tree["w_value"], np.int64).tolist(),
+                np.asarray(tree["w_count"], np.int64).tolist(),
+            )
+        )
+        for key, start, end, value, count in rows:
             store.windows_of(int(key)).append(
                 WindowState(int(start), int(end), int(value), int(count))
             )

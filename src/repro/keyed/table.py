@@ -1,0 +1,321 @@
+"""Device-resident keyed window table: dense arrays, open addressing, TTL.
+
+PR 2 realized the fully-partitioned keyed state (§2.4/§4.2, S5 workloads) as
+a host dict-of-dicts (:class:`repro.keyed.store.KeyedStore`) — correct, but
+the per-chunk merge is a Python loop over cells, which ROADMAP names as the
+single-host throughput cap.  This module keeps the key -> window-state table
+resident in **dense fixed-capacity arrays** (key slab, window bounds,
+accumulators, last-touch timestamps, occupancy bitmap) so the per-chunk
+update is whole-chunk vectorized ops — the region-based streaming-state /
+transactional-multicore result: the win comes from mutating the table at
+stream rate with one fused update instead of per-key interpreter work.
+
+Layout and addressing
+    A **row** holds one open cell (a distinct ``(key, window_start)`` pair).
+    Rows are addressed by open addressing: a cell's home slot is
+    ``cell_hash(key, start) % capacity`` (the same multiplicative-hash family
+    as :func:`repro.keyed.store.hash_to_slot`), and an insert probes the
+    window ``home .. home + max_probes`` (mod capacity) for a match or an
+    empty row.  **Lookup scans the whole probe window** (it does not stop at
+    the first empty row), so freeing rows on emission/eviction needs no
+    tombstones and a live cell always has exactly one row — the invariant
+    that keeps the Pallas full-scan lookup kernel and the numpy probe-window
+    realization bit-identical.
+
+Tiering (spill + TTL eviction)
+    The host :class:`~repro.keyed.store.KeyedStore` stays on as the
+    spill/overflow tier: a cell that cannot be placed within its probe
+    window (table full / clustered) is returned to the caller, who merges it
+    into the host store; a row idle past ``ttl`` watermark units
+    (``last_touch + ttl <= watermark``) is **evicted** to the same tier.
+    Tier placement is never semantic — at watermark-close the engine merges
+    the due rows of both tiers (sum + count are associative), so emissions
+    are bit-exact against :func:`repro.core.semantics.keyed_windows` under
+    any capacity, probe budget, or TTL, including pathological ones.
+
+Realizations (the CPU perf-cliff rule of :mod:`repro.keyed.kernels`)
+    The numpy probe-window path is the honest CPU realization (XLA's CPU
+    sort/scatter lowering loses to numpy's C kernels by an order of
+    magnitude here).  When the Pallas kernels are active, lookup dispatches
+    to :func:`repro.kernels.ops.table_lookup` — the one-hot full-scan match
+    kernel (``kernels/hash_table.py``) — and the accumulate half is the
+    ``scatter_add`` kernel shipped with the segment-reduce pair.  All paths
+    produce bit-identical tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.keyed.store import HASH_MULTIPLIER
+
+#: second mix constant (64-bit golden ratio) — decorrelates the window start
+#: from the key before the multiplicative hash spreads the cell over rows
+_START_MIX = np.uint64(0x9E3779B97F4A7C15)
+
+#: last-touch sentinel for a just-claimed row: far enough below any event
+#: time that the first ``max(touch, ts)`` always wins (event times may be
+#: negative under disorder), far enough above INT64_MIN that ``touch + ttl``
+#: never wraps
+_NEVER_TOUCHED = np.int64(-(2 ** 62))
+
+
+def cell_hash(keys, starts, capacity: int) -> np.ndarray:
+    """Home row of each ``(key, window_start)`` cell in ``[0, capacity)``.
+
+    uint64 wraparound arithmetic end to end (negative keys wrap exactly like
+    :func:`repro.keyed.store.hash_to_slot`), so scalar and array callers and
+    every realization agree bit-for-bit."""
+    k = np.asarray(keys, np.int64).astype(np.uint64)
+    s = np.asarray(starts, np.int64).astype(np.uint64)
+    with np.errstate(over="ignore"):  # uint64 wraparound is the point
+        mix = k * np.uint64(HASH_MULTIPLIER) + s * _START_MIX
+        return (
+            (mix * np.uint64(HASH_MULTIPLIER)) % np.uint64(capacity)
+        ).astype(np.int64)
+
+
+@dataclasses.dataclass
+class TableStats:
+    """Placement accounting (not part of window semantics)."""
+
+    inserted: int = 0   # cells that claimed a fresh row
+    hits: int = 0       # cells that accumulated into an existing row
+    spilled: int = 0    # cells handed to the host tier (probe window full)
+    evicted: int = 0    # rows moved to the host tier by TTL
+
+
+class DeviceWindowTable:
+    """Fixed-capacity open-addressed table of open ``(key, window)`` cells.
+
+    ``capacity`` rows; each row is ``(key, start, end, value, count,
+    last_touch)`` plus an occupancy bit.  All mutators take **canonically
+    sorted, duplicate-free** cell batches (the engine's ``np.unique`` output)
+    — that is what makes claim conflicts deterministic.
+    """
+
+    COLUMNS = ("key", "start", "end", "value", "count", "touch")
+
+    def __init__(self, capacity: int, *, max_probes: int = 16):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if max_probes < 1:
+            raise ValueError(f"max_probes must be >= 1, got {max_probes}")
+        self.capacity = capacity
+        self.max_probes = min(max_probes, capacity)
+        self.key = np.zeros(capacity, np.int64)
+        self.start = np.zeros(capacity, np.int64)
+        self.end = np.zeros(capacity, np.int64)
+        self.value = np.zeros(capacity, np.int64)
+        self.count = np.zeros(capacity, np.int64)
+        self.touch = np.zeros(capacity, np.int64)
+        self.occ = np.zeros(capacity, bool)
+        self.stats = TableStats()
+
+    # -- introspection ---------------------------------------------------------
+    @property
+    def occupancy(self) -> int:
+        return int(self.occ.sum())
+
+    @property
+    def load_factor(self) -> float:
+        return self.occupancy / self.capacity
+
+    def rows(self) -> np.ndarray:
+        """Occupied rows as an ``[n, 6]`` int64 matrix in row-index order
+        (columns per :attr:`COLUMNS`) — placement order, NOT canonical."""
+        idx = np.flatnonzero(self.occ)
+        return np.stack(
+            [self.key[idx], self.start[idx], self.end[idx],
+             self.value[idx], self.count[idx], self.touch[idx]],
+            axis=1,
+        )
+
+    # -- probe-window lookup ---------------------------------------------------
+    def _probe_window(self, h: np.ndarray) -> np.ndarray:
+        """``[n, P]`` candidate rows for home slots ``h`` (wrapping)."""
+        return (h[:, None] + np.arange(self.max_probes, dtype=np.int64)) \
+            % self.capacity
+
+    def lookup(self, cell_keys, cell_starts) -> np.ndarray:
+        """Row of each cell, or ``-1`` for absent cells.
+
+        Scans the full probe window (no early stop at empties — see module
+        docstring), dispatched to the Pallas one-hot match kernel when the
+        kernels are active and the numpy gather-and-compare realization
+        otherwise; both return the identical (unique) row.
+        """
+        ck = np.asarray(cell_keys, np.int64)
+        cs = np.asarray(cell_starts, np.int64)
+        if not len(ck):
+            return np.zeros(0, np.int64)
+        from repro.kernels import ops  # late import: keyed.store must not pull jax
+
+        if ops.kernels_active():
+            rows = np.asarray(
+                ops.table_lookup(ck, cs, self.key, self.start, self.occ),
+                np.int64,
+            )
+            return np.where(rows >= self.capacity, np.int64(-1), rows)
+        cand = self._probe_window(cell_hash(ck, cs, self.capacity))
+        m = (
+            self.occ[cand]
+            & (self.key[cand] == ck[:, None])
+            & (self.start[cand] == cs[:, None])
+        )
+        first = np.argmax(m, axis=1)
+        hit = m.any(axis=1)
+        rows = cand[np.arange(len(ck)), first]
+        return np.where(hit, rows, np.int64(-1))
+
+    # -- open-addressing claim -------------------------------------------------
+    def _claim(self, ck, cs, ce) -> np.ndarray:
+        """Claim a row for each (absent) cell; ``-1`` = spill.
+
+        Deterministic conflict rule: when several cells want the same empty
+        row in the same round, the first cell in canonical order wins; losers
+        move on to their next in-window empty row in the next round.  Every
+        round places at least the first still-active cell, so the loop is
+        bounded by the batch size.
+        """
+        n = len(ck)
+        rows = np.full(n, -1, np.int64)
+        if not n:
+            return rows
+        cand = self._probe_window(cell_hash(ck, cs, self.capacity))
+        active = np.arange(n)
+        while len(active):
+            free = ~self.occ[cand[active]]                    # [a, P]
+            has_free = free.any(axis=1)
+            spill = active[~has_free]
+            if len(spill):
+                self.stats.spilled += len(spill)
+            active = active[has_free]
+            if not len(active):
+                break
+            first = np.argmax(free[has_free], axis=1)
+            want = cand[active, first]
+            # first claimant (canonical cell order) per row wins this round
+            _, winner_pos = np.unique(want, return_index=True)
+            winners = active[winner_pos]
+            w_rows = want[winner_pos]
+            rows[winners] = w_rows
+            self.occ[w_rows] = True
+            self.key[w_rows] = ck[winners]
+            self.start[w_rows] = cs[winners]
+            self.end[w_rows] = ce[winners]
+            self.value[w_rows] = 0
+            self.count[w_rows] = 0
+            self.touch[w_rows] = _NEVER_TOUCHED
+            self.stats.inserted += len(winners)
+            keep = np.ones(len(active), bool)
+            keep[winner_pos] = False
+            active = active[keep]
+        return rows
+
+    # -- the per-chunk fused update --------------------------------------------
+    def update(
+        self, cell_keys, cell_starts, cell_ends, value_sums, counts,
+        touch_ts: int,
+    ) -> Optional[Tuple[np.ndarray, ...]]:
+        """Accumulate per-cell partials into the table; returns the spill.
+
+        Cells must be canonically sorted and duplicate-free.  Existing rows
+        accumulate (``value += sum``, ``count += n``, ``touch = max(touch,
+        touch_ts)``); absent cells claim rows via open addressing; cells that
+        cannot be placed are returned as ``(key, start, end, value, count)``
+        arrays for the caller's host tier (``None`` when nothing spilled).
+        """
+        ck = np.asarray(cell_keys, np.int64)
+        cs = np.asarray(cell_starts, np.int64)
+        ce = np.asarray(cell_ends, np.int64)
+        vs = np.asarray(value_sums, np.int64)
+        cn = np.asarray(counts, np.int64)
+        if not len(ck):
+            return None
+        rows = self.lookup(ck, cs)
+        miss = rows < 0
+        self.stats.hits += int((~miss).sum())
+        if miss.any():
+            rows[miss] = self._claim(ck[miss], cs[miss], ce[miss])
+        ok = rows >= 0
+        r = rows[ok]
+        np.add.at(self.value, r, vs[ok])
+        np.add.at(self.count, r, cn[ok])
+        np.maximum.at(self.touch, r, np.int64(touch_ts))
+        if ok.all():
+            return None
+        sp = ~ok
+        return ck[sp], cs[sp], ce[sp], vs[sp], cn[sp]
+
+    # -- watermark close / TTL eviction ----------------------------------------
+    def _extract(self, mask: np.ndarray) -> Tuple[np.ndarray, ...]:
+        idx = np.flatnonzero(mask)
+        out = (
+            self.key[idx].copy(), self.start[idx].copy(),
+            self.end[idx].copy(), self.value[idx].copy(),
+            self.count[idx].copy(), self.touch[idx].copy(),
+        )
+        self.occ[idx] = False
+        return out
+
+    def take_due(self, watermark: int) -> Tuple[np.ndarray, ...]:
+        """Remove and return every row with ``end <= watermark`` (the
+        watermark-close set), as ``(key, start, end, value, count, touch)``
+        arrays in row-index order — the engine sorts the merged emission."""
+        return self._extract(self.occ & (self.end <= watermark))
+
+    def evict_idle(self, watermark: int, ttl: int) -> Tuple[np.ndarray, ...]:
+        """Remove and return rows idle past ``ttl`` watermark units
+        (``touch + ttl <= watermark``) — the TTL spill to the host tier."""
+        out = self._extract(self.occ & (self.touch + ttl <= watermark))
+        self.stats.evicted += len(out[0])
+        return out
+
+    def clear(self) -> None:
+        self.occ[:] = False
+
+    # -- canonical round-trip --------------------------------------------------
+    def insert_rows(
+        self, keys, starts, ends, values, counts, touches,
+    ) -> Optional[Tuple[np.ndarray, ...]]:
+        """Bulk-place fully-formed rows (checkpoint restore / rebuild after
+        resize).  Rows must be canonically sorted; placement is by the same
+        claim rule as live inserts, so a rebuild is deterministic.  Rows
+        that do not fit are returned (same layout as :meth:`update` spill,
+        plus the touch column) for the host tier."""
+        ck = np.asarray(keys, np.int64)
+        if not len(ck):
+            return None
+        cs = np.asarray(starts, np.int64)
+        ce = np.asarray(ends, np.int64)
+        rows = self._claim(ck, cs, ce)
+        ok = rows >= 0
+        r = rows[ok]
+        self.value[r] = np.asarray(values, np.int64)[ok]
+        self.count[r] = np.asarray(counts, np.int64)[ok]
+        self.touch[r] = np.asarray(touches, np.int64)[ok]
+        if ok.all():
+            return None
+        sp = ~ok
+        return (
+            ck[sp],
+            cs[sp],
+            ce[sp],
+            np.asarray(values, np.int64)[sp],
+            np.asarray(counts, np.int64)[sp],
+            np.asarray(touches, np.int64)[sp],
+        )
+
+    # -- §4.2 ownership over rows ----------------------------------------------
+    def owners(self, slot_table: np.ndarray, num_slots: int) -> np.ndarray:
+        """Owner worker of every occupied row (row keys hashed through the
+        engine's slot map) — what resize accounting migrates."""
+        from repro.keyed.store import hash_to_slot
+
+        idx = np.flatnonzero(self.occ)
+        slots = hash_to_slot(self.key[idx], num_slots).astype(np.int64)
+        return np.asarray(slot_table, np.int64)[slots]

@@ -12,20 +12,41 @@ The engine realizes the serial semantics of
 * live assignments are reduced to per-cell partials (a cell is a distinct
   ``(key, window)`` pair) through :func:`repro.keyed.kernels.reduce_by_cell`
   — the sorted Pallas segment-reduce hot path, or the masked full-scan
-  baseline — then merged into the :class:`~repro.keyed.store.KeyedStore`;
+  baseline — then merged into windowed state;
 * the watermark ``max(ts) - lateness`` advances at the chunk boundary and
   fires every window with ``end <= wm`` in ``(end, start, key)`` order.
 
+Windowed state lives in one of two **backends**:
+
+* ``backend="host"`` — the PR 2 realization: every open window in the
+  dict-of-dicts :class:`~repro.keyed.store.KeyedStore` (per-cell merge is a
+  Python loop — the single-host throughput cap ROADMAP names);
+* ``backend="device_table"`` — tumbling/sliding cells live in a dense
+  fixed-capacity :class:`~repro.keyed.table.DeviceWindowTable` (open
+  addressing, whole-chunk vectorized update, TTL eviction of idle rows),
+  with the host store kept as the **spill/overflow tier**: probe-window
+  overflow and TTL-evicted rows merge into the store, and watermark-close
+  merges the due rows of *both* tiers before emitting — so tier placement
+  is never semantic and emissions stay bit-exact against the oracle under
+  any capacity/TTL, including forced-eviction regimes.  Session windows
+  merge by interval overlap (variable bounds), so they stay host-side.
+
 Aggregation (sum + count) is associative and integer, and window/session
 merging is order-independent, so chunked execution — at ANY worker count,
-including counts that do not divide ``num_slots``, and across mid-stream
-rebalances — is bit-exact against the serial oracle whenever the oracle's
-``watermark_every`` equals the chunk size.  ``tests/test_keyed.py`` proves
-this property-style for all three kinds.
+including counts that do not divide ``num_slots``, across mid-stream
+rebalances, and on either backend — is bit-exact against the serial oracle
+whenever the oracle's ``watermark_every`` equals the chunk size.
+``tests/test_keyed.py`` and ``tests/test_keyed_table.py`` prove this
+property-style.
 
 Engine state round-trips through fixed-key numpy pytrees
-(:meth:`snapshot` / :meth:`restore`), which is what lets
-``repro.checkpoint`` and the failure supervisor cover the keyed store.
+(:meth:`snapshot` / :meth:`restore`).  The snapshot is **canonical and
+backend-agnostic**: open windows from both tiers are merged into one sorted
+row set (``w_*`` columns), with per-row residency and last-touch columns
+(``w_resident`` / ``w_touch``) carrying the table placement metadata —
+identical logical state always serializes identically, which is what lets
+``repro.checkpoint`` and the failure supervisor replay a device-table run
+to bit-identical emissions.
 """
 
 from __future__ import annotations
@@ -36,7 +57,10 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.keyed import kernels as kk
-from repro.keyed.store import KeyedStore, WindowState, hash_to_slot
+from repro.keyed.store import KeyedStore, SlotMap, WindowState, hash_to_slot
+from repro.keyed.table import DeviceWindowTable
+
+BACKENDS = ("host", "device_table")
 
 _EMPTY = dict(
     key=np.zeros(0, np.int64), start=np.zeros(0, np.int64),
@@ -94,7 +118,14 @@ def _emission_dict(rows: List[Tuple[int, int, int, int, int]]) -> Dict:
 
 
 class KeyedWindowEngine:
-    """Chunked keyed-window executor over a slot-mapped keyed store."""
+    """Chunked keyed-window executor over tiered keyed state.
+
+    ``backend="host"`` keeps every open window in the slot-mapped
+    :class:`KeyedStore`; ``backend="device_table"`` runs tumbling/sliding
+    cells on a :class:`DeviceWindowTable` of ``capacity`` rows with optional
+    ``ttl`` eviction (watermark units), spilling to the host store (see
+    module docstring).  Session windows always run host-side.
+    """
 
     def __init__(
         self,
@@ -104,10 +135,28 @@ class KeyedWindowEngine:
         n_workers: int = 1,
         impl: str = "segment",
         store: Optional[KeyedStore] = None,
+        backend: str = "host",
+        capacity: int = 1024,
+        ttl: Optional[int] = None,
+        max_probes: int = 16,
     ):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        if ttl is not None and ttl < 0:
+            raise ValueError(f"ttl must be >= 0, got {ttl}")
         self.spec = spec
         self.store = store or KeyedStore(num_slots, n_workers)
         self.impl = impl
+        self.backend = backend
+        self.capacity = capacity
+        self.ttl = ttl
+        self.max_probes = max_probes
+        # sessions merge by interval overlap (variable bounds) — host-side
+        self.table: Optional[DeviceWindowTable] = (
+            DeviceWindowTable(capacity, max_probes=max_probes)
+            if backend == "device_table" and spec.kind != "session"
+            else None
+        )
         self.wm: Optional[int] = None
         self.max_ts: Optional[int] = None
         # late assignments of the chunk being processed, stream order; the
@@ -150,6 +199,25 @@ class KeyedWindowEngine:
             )
         return {"emissions": emissions, "late": late_out}
 
+    # -- host-store merge (the spill path and the host backend) ----------------
+    def _merge_into_store(self, keys, starts, ends, vsums, counts) -> None:
+        """Fold per-cell partials into the host store (rows in canonical
+        cell order; per-key window lists stay start-sorted)."""
+        for key, start, end, vsum, cnt in zip(
+            np.asarray(keys).tolist(), np.asarray(starts).tolist(),
+            np.asarray(ends).tolist(), np.asarray(vsums).tolist(),
+            np.asarray(counts).tolist(),
+        ):
+            wins = self.store.windows_of(key)
+            for w in wins:
+                if w.start == start:
+                    w.value += vsum
+                    w.count += cnt
+                    break
+            else:
+                wins.append(WindowState(start, end, vsum, cnt))
+                wins.sort(key=lambda w: w.start)
+
     # -- tumbling / sliding ----------------------------------------------------
     def _process_panes(self, keys, values, ts) -> None:
         size, slide = self.spec.size, self.spec.effective_slide
@@ -190,16 +258,20 @@ class KeyedWindowEngine:
             np.int64,
         )
         self._account_work(cells[:, 0], partial[:, 1])
-        for (key, start), (vsum, cnt) in zip(cells.tolist(), partial.tolist()):
-            wins = self.store.windows_of(key)
-            for w in wins:
-                if w.start == start:
-                    w.value += vsum
-                    w.count += cnt
-                    break
-            else:
-                wins.append(WindowState(start, start + size, vsum, cnt))
-                wins.sort(key=lambda w: w.start)
+        c_keys, c_starts = cells[:, 0], cells[:, 1]
+        if self.table is not None:
+            # the device-table fused update: lookup/claim + accumulate; the
+            # probe-window overflow (if any) spills to the host tier
+            spill = self.table.update(
+                c_keys, c_starts, c_starts + size,
+                partial[:, 0], partial[:, 1], touch_ts=int(ts.max()),
+            )
+            if spill is not None:
+                self._merge_into_store(*spill)
+        else:
+            self._merge_into_store(
+                c_keys, c_starts, c_starts + size, partial[:, 0], partial[:, 1]
+            )
 
     # -- session ---------------------------------------------------------------
     def _process_sessions(self, keys, values, ts) -> None:
@@ -264,68 +336,180 @@ class KeyedWindowEngine:
         np.add.at(self.worker_items, owners, np.asarray(per_cell_counts))
 
     # -- watermark / emission --------------------------------------------------
-    def _advance_watermark(self) -> Dict[str, np.ndarray]:
-        if self.max_ts is None:
-            return _emission_dict([])
-        new_wm = self.max_ts - self.spec.lateness
-        self.wm = new_wm if self.wm is None else max(self.wm, new_wm)
+    def _store_due(self) -> List[Tuple[int, int, int, int, int]]:
+        """Remove and return the host-store rows with ``end <= wm``."""
         due = []
         for slot_dict in self.store.slots:
             for key, wins in slot_dict.items():
                 for w in wins:
                     if w.end <= self.wm:
-                        due.append((w.end, w.start, key, w))
-        due.sort(key=lambda r: r[:3])
+                        due.append((key, w.start, w.end, w))
         rows = []
-        for end, start, key, w in due:
+        for key, start, end, w in due:
             rows.append((key, start, end, w.value, w.count))
             slot_dict = self.store.slots[self.store.slot_of(key)]
             slot_dict[key].remove(w)
             if not slot_dict[key]:
                 del slot_dict[key]
-        return _emission_dict(rows)
+        return rows
+
+    @staticmethod
+    def _merge_fire(rows) -> List[Tuple[int, int, int, int, int]]:
+        """Merge per-tier partials of the same cell and order the emission
+        in the oracle's ``(end, start, key)`` fire order."""
+        acc: Dict[Tuple[int, int, int], List[int]] = {}
+        for key, start, end, value, count in rows:
+            cell = (int(end), int(start), int(key))
+            if cell in acc:
+                acc[cell][0] += int(value)
+                acc[cell][1] += int(count)
+            else:
+                acc[cell] = [int(value), int(count)]
+        return [
+            (key, start, end, value, count)
+            for (end, start, key), (value, count) in sorted(acc.items())
+        ]
+
+    def _advance_watermark(self) -> Dict[str, np.ndarray]:
+        if self.max_ts is None:
+            return _emission_dict([])
+        new_wm = self.max_ts - self.spec.lateness
+        self.wm = new_wm if self.wm is None else max(self.wm, new_wm)
+        rows = self._store_due()
+        if self.table is not None:
+            t_key, t_start, t_end, t_value, t_count, _ = \
+                self.table.take_due(self.wm)
+            rows.extend(
+                zip(t_key.tolist(), t_start.tolist(), t_end.tolist(),
+                    t_value.tolist(), t_count.tolist())
+            )
+            if self.ttl is not None:
+                e = self.table.evict_idle(self.wm, self.ttl)
+                # idle rows change tier, not value: merge into the host store
+                self._merge_into_store(*e[:5])
+        return _emission_dict(self._merge_fire(rows))
 
     def flush(self) -> Dict[str, np.ndarray]:
         """End-of-stream: fire every remaining window (watermark -> +inf).
         Not part of the oracle contract — a convenience for applications."""
         rows = [
-            (key, start, end, value, count)
-            for key, start, end, value, count in (
-                (k, w.start, w.end, w.value, w.count)
-                for slot_dict in self.store.slots
-                for k, wins in slot_dict.items()
-                for w in wins
-            )
+            (k, w.start, w.end, w.value, w.count)
+            for slot_dict in self.store.slots
+            for k, wins in slot_dict.items()
+            for w in wins
         ]
-        rows.sort(key=lambda r: (r[2], r[1], r[0]))
+        if self.table is not None:
+            for key, start, end, value, count, _ in self.table.rows():
+                rows.append((int(key), int(start), int(end), int(value),
+                             int(count)))
+            self.table.clear()
         self.store = KeyedStore(
             self.store.num_slots, self.store.n_workers,
             slot_map=self.store.slot_map,
         )
-        return _emission_dict(rows)
+        return _emission_dict(self._merge_fire(rows))
 
     # -- checkpoint round-trip -------------------------------------------------
     def snapshot(self) -> Dict[str, np.ndarray]:
-        tree = self.store.to_pytree()
-        tree.update(
-            wm=np.int64(self.wm if self.wm is not None else 0),
-            wm_valid=np.int64(self.wm is not None),
-            max_ts=np.int64(self.max_ts if self.max_ts is not None else 0),
-            max_ts_valid=np.int64(self.max_ts is not None),
-            late_count=np.int64(self.late_count),
-            worker_items=self.worker_items.copy(),
+        """Canonical, backend-agnostic state: one merged row per open cell
+        (sorted by ``(key, start, end)``), with residency/touch placement
+        columns, plus watermark scalars and placement counters."""
+        acc: Dict[Tuple[int, int, int], List[int]] = {}
+        for slot_dict in self.store.slots:
+            for key, wins in slot_dict.items():
+                for w in wins:
+                    acc[(key, int(w.start), int(w.end))] = [
+                        int(w.value), int(w.count), 0, 0,
+                    ]
+        if self.table is not None:
+            for key, start, end, value, count, touch in self.table.rows():
+                cell = (int(key), int(start), int(end))
+                if cell in acc:  # cell split across tiers: merge, mark resident
+                    acc[cell][0] += int(value)
+                    acc[cell][1] += int(count)
+                    acc[cell][2] = 1
+                    acc[cell][3] = int(touch)
+                else:
+                    acc[cell] = [int(value), int(count), 1, int(touch)]
+        rows = sorted(
+            (key, start, end, v, c, res, touch)
+            for (key, start, end), (v, c, res, touch) in acc.items()
         )
-        return tree
+        cols = np.asarray(rows, np.int64).reshape(-1, 7).T
+        stats = self.table.stats if self.table is not None else None
+        return {
+            "slot_table": self.store.slot_map.table.copy(),
+            "n_workers": np.int64(self.store.slot_map.n_workers),
+            "w_key": cols[0].copy(),
+            "w_start": cols[1].copy(),
+            "w_end": cols[2].copy(),
+            "w_value": cols[3].copy(),
+            "w_count": cols[4].copy(),
+            "w_resident": cols[5].copy(),
+            "w_touch": cols[6].copy(),
+            "wm": np.int64(self.wm if self.wm is not None else 0),
+            "wm_valid": np.int64(self.wm is not None),
+            "max_ts": np.int64(self.max_ts if self.max_ts is not None else 0),
+            "max_ts_valid": np.int64(self.max_ts is not None),
+            "late_count": np.int64(self.late_count),
+            "worker_items": self.worker_items.copy(),
+            "t_inserted": np.int64(stats.inserted if stats else 0),
+            "t_hits": np.int64(stats.hits if stats else 0),
+            "t_spilled": np.int64(stats.spilled if stats else 0),
+            "t_evicted": np.int64(stats.evicted if stats else 0),
+        }
 
     @classmethod
     def restore(
         cls, spec: WindowSpec, tree: Dict[str, np.ndarray], *,
-        impl: str = "segment",
+        impl: str = "segment", backend: str = "host", capacity: int = 1024,
+        ttl: Optional[int] = None, max_probes: int = 16,
     ) -> "KeyedWindowEngine":
-        store = KeyedStore.from_pytree(tree)
-        eng = cls(spec, num_slots=store.num_slots, impl=impl, store=store)
+        slot_table = np.asarray(tree["slot_table"], np.int32)
+        n_workers = int(tree["n_workers"])
+        store = KeyedStore(
+            len(slot_table), n_workers,
+            slot_map=SlotMap(len(slot_table), n_workers, table=slot_table),
+        )
+        eng = cls(
+            spec, num_slots=store.num_slots, impl=impl, store=store,
+            backend=backend, capacity=capacity, ttl=ttl, max_probes=max_probes,
+        )
+        key = np.asarray(tree["w_key"], np.int64)
+        start = np.asarray(tree["w_start"], np.int64)
+        end = np.asarray(tree["w_end"], np.int64)
+        value = np.asarray(tree["w_value"], np.int64)
+        count = np.asarray(tree["w_count"], np.int64)
+        # placement columns are optional: a PR 2 (host-only) snapshot has no
+        # residency metadata — every row restores into the store
+        resident = np.asarray(
+            tree.get("w_resident", np.zeros(len(key), np.int64)), np.int64
+        )
+        touch = np.asarray(
+            tree.get("w_touch", np.zeros(len(key), np.int64)), np.int64
+        )
+        if eng.table is None:
+            resident = np.zeros(len(key), np.int64)
+        res = resident != 0
+        for k, s, e, v, c in zip(
+            key[~res].tolist(), start[~res].tolist(), end[~res].tolist(),
+            value[~res].tolist(), count[~res].tolist(),
+        ):
+            store.windows_of(k).append(WindowState(s, e, v, c))
+        if eng.table is not None and res.any():
+            over = eng.table.insert_rows(
+                key[res], start[res], end[res], value[res], count[res],
+                touch[res],
+            )
+            if over is not None:  # capacity shrank since the snapshot: spill
+                eng._merge_into_store(*over[:5])
         eng.wm = int(tree["wm"]) if int(tree["wm_valid"]) else None
         eng.max_ts = int(tree["max_ts"]) if int(tree["max_ts_valid"]) else None
         eng.late_count = int(tree["late_count"])
         eng.worker_items = np.asarray(tree["worker_items"], np.int64).copy()
+        if eng.table is not None:
+            eng.table.stats.inserted = int(tree.get("t_inserted", 0))
+            eng.table.stats.hits = int(tree.get("t_hits", 0))
+            eng.table.stats.spilled = int(tree.get("t_spilled", 0))
+            eng.table.stats.evicted = int(tree.get("t_evicted", 0))
         return eng

@@ -148,6 +148,39 @@ class TestStoreAndRelocation:
             np.testing.assert_array_equal(t[k], t2[k])
         assert store2.n_workers == 3
 
+    def test_from_pytree_is_order_canonical(self):
+        """Regression: serialization used to trust the array order, so a
+        permuted (but logically identical) pytree rebuilt a store whose
+        per-slot dict insertion order and per-key window-list order differed
+        from a natively-built one.  from_pytree must canonicalize: any row
+        permutation rebuilds the identical in-memory store."""
+        from repro.keyed import WindowState
+
+        store = KeyedStore(NUM_SLOTS, 3)
+        # adversarial insertion: keys and window starts in decreasing order
+        for key in (45, 5, 25, -7):
+            for start in (21, 7, 0):
+                store.windows_of(key).append(
+                    WindowState(start, start + 7, key + start, 1)
+                )
+        t = store.to_pytree()
+        rng = np.random.default_rng(0)
+        perm = rng.permutation(len(t["w_key"]))
+        shuffled = dict(
+            t, **{k: t[k][perm]
+                  for k in ("w_key", "w_start", "w_end", "w_value", "w_count")}
+        )
+        store2 = KeyedStore.from_pytree(shuffled)
+        t2 = store2.to_pytree()
+        for k in t:
+            np.testing.assert_array_equal(t[k], t2[k], err_msg=k)
+        # in-memory canonical form, not just canonical serialization:
+        for slot_dict in store2.slots:
+            assert list(slot_dict) == sorted(slot_dict)
+            for wins in slot_dict.values():
+                starts = [w.start for w in wins]
+                assert starts == sorted(starts)
+
     def test_negative_keys_hash_consistently(self):
         """Scalar and array hashing must agree on negative keys (int64 keys
         are signed; a bare uint64 cast crashes on scalars but wraps on

@@ -1,0 +1,498 @@
+"""Tests for the device-resident keyed window table (`repro.keyed.table`).
+
+Acceptance contract (ISSUE 3): device-table runs — including **forced
+eviction** (tiny TTL), **forced spill** (tiny capacity/probe budget), and
+mid-stream grow/shrink at worker counts that do NOT divide ``num_slots`` —
+are bit-exact against :func:`repro.core.semantics.keyed_windows`, and a
+snapshot/restore through the canonical pytree replays to identical
+emissions.  Plus: open-addressing invariants, the Pallas lookup kernel vs
+its reference vs the numpy probe-window realization, and the resize
+accounting that migrates table rows rather than dict entries.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import semantics
+from repro.keyed import (
+    DeviceWindowTable,
+    KeyedWindowAdapter,
+    KeyedWindowEngine,
+    WindowSpec,
+    cell_hash,
+    keyed_stream,
+    migrated_rows,
+    synthetic_keyed_items,
+)
+from repro.kernels import ops
+from repro.runtime import FailurePlan, StreamExecutor, Supervisor
+
+NUM_SLOTS = 20
+CHUNK = 16
+
+#: configs that force every tier transition: ample table, probe-window spill,
+#: TTL eviction churn, and both at once
+TABLE_CONFIGS = [
+    dict(capacity=256),
+    dict(capacity=16, max_probes=4),          # forced spill
+    dict(capacity=64, ttl=0),                 # eviction of anything idle
+    dict(capacity=8, max_probes=2, ttl=2),    # spill + eviction together
+]
+
+
+def _triples(items):
+    return [(int(r["key"]), int(r["value"]), int(r["ts"])) for r in items]
+
+
+def _emissions(outs):
+    return [
+        tuple(int(x) for x in row)
+        for o in outs
+        for row in zip(
+            *(o["emissions"][k] for k in ("key", "start", "end", "value",
+                                          "count"))
+        )
+    ]
+
+
+def _state_rows(state):
+    return [
+        tuple(int(x) for x in r)
+        for r in zip(
+            *(np.asarray(state[k]).tolist()
+              for k in ("w_key", "w_start", "w_end", "w_value", "w_count"))
+        )
+    ]
+
+
+def _spec_for(kind):
+    if kind == "tumbling":
+        return WindowSpec("tumbling", size=7, lateness=3, late_policy="side")
+    return WindowSpec("sliding", size=9, slide=4, lateness=3,
+                      late_policy="side")
+
+
+# ---------------------------------------------------------------------------
+# cell hash + table mechanics
+# ---------------------------------------------------------------------------
+
+class TestCellHash:
+    def test_scalar_array_agree_including_negative_keys(self):
+        for key, start in [(-5, 0), (7, -14), (-(2 ** 40), 21), (0, 0)]:
+            h = int(cell_hash(key, start, 64))
+            ha = int(cell_hash(np.array([key]), np.array([start]), 64)[0])
+            assert h == ha and 0 <= h < 64
+
+    def test_start_decorrelates_cells_of_one_key(self):
+        hs = cell_hash(np.zeros(32, np.int64),
+                       np.arange(32, dtype=np.int64) * 7, 1024)
+        assert len(np.unique(hs)) > 16  # same key, different windows spread
+
+
+class TestDeviceWindowTable:
+    def test_update_accumulates_and_touches(self):
+        t = DeviceWindowTable(32, max_probes=4)
+        ck = np.array([1, 2, 3], np.int64)
+        cs = np.array([0, 0, 7], np.int64)
+        assert t.update(ck, cs, cs + 7, [10, 20, 30], [1, 1, 1], 5) is None
+        assert t.update(ck, cs, cs + 7, [1, 2, 3], [1, 1, 1], 9) is None
+        rows = t.lookup(ck, cs)
+        assert (rows >= 0).all()
+        np.testing.assert_array_equal(t.value[rows], [11, 22, 33])
+        np.testing.assert_array_equal(t.count[rows], [2, 2, 2])
+        np.testing.assert_array_equal(t.touch[rows], [9, 9, 9])
+        assert t.stats.inserted == 3 and t.stats.hits == 3
+
+    def test_lookup_scans_past_freed_rows_no_duplicates(self):
+        """Emission frees a row mid-probe-window; a later lookup of a cell
+        placed beyond it must still find the live row (no tombstones, no
+        duplicate claim)."""
+        cap = 8
+        # three cells with the SAME home slot -> consecutive probe placement
+        keys = []
+        k = 0
+        home = int(cell_hash(0, 0, cap))
+        while len(keys) < 3:
+            if int(cell_hash(k, 0, cap)) == home:
+                keys.append(k)
+            k += 1
+        ck = np.asarray(sorted(keys), np.int64)
+        cs = np.zeros(3, np.int64)
+        t = DeviceWindowTable(cap, max_probes=4)
+        t.update(ck, cs, cs + 7, [1, 1, 1], [1, 1, 1], 0)
+        rows = t.lookup(ck, cs)
+        assert sorted(rows.tolist()) == [(home + i) % cap for i in range(3)]
+        # free the FIRST cell's row (as emission would), then look up the rest
+        t.occ[rows[0]] = False
+        again = t.lookup(ck, cs)
+        assert again[0] == -1
+        np.testing.assert_array_equal(again[1:], rows[1:])
+        # re-update must accumulate into the surviving rows, not re-claim them
+        t.update(ck[1:], cs[1:], cs[1:] + 7, [5, 5], [1, 1], 1)
+        assert t.value[rows[1]] == 6 and t.value[rows[2]] == 6
+
+    def test_probe_window_exhaustion_spills(self):
+        t = DeviceWindowTable(4, max_probes=2)
+        ck = np.arange(8, dtype=np.int64)
+        cs = np.zeros(8, np.int64)
+        spill = t.update(ck, cs, cs + 7, np.ones(8), np.ones(8), 0)
+        assert spill is not None
+        sk = spill[0]
+        assert len(sk) + t.occupancy == 8
+        assert t.stats.spilled == len(sk)
+        # spilled cells are exactly those absent from the table
+        assert (t.lookup(sk, np.zeros(len(sk), np.int64)) == -1).all()
+
+    def test_take_due_and_evict_idle(self):
+        t = DeviceWindowTable(32, max_probes=4)
+        ck = np.array([1, 2, 3], np.int64)
+        cs = np.array([0, 7, 14], np.int64)
+        t.update(ck, cs, cs + 7, [1, 1, 1], [1, 1, 1], touch_ts=10)
+        k, s, e, v, c, _ = t.take_due(watermark=14)  # ends 7, 14 fire
+        assert sorted(k.tolist()) == [1, 2] and t.occupancy == 1
+        # remaining row: touched at 10, ttl 3 -> idle at wm 13
+        k2, *_ = t.evict_idle(watermark=13, ttl=3)
+        assert k2.tolist() == [3] and t.occupancy == 0
+        assert t.stats.evicted == 1
+
+    def test_never_touched_sentinel_handles_negative_times(self):
+        t = DeviceWindowTable(8, max_probes=4)
+        t.update(np.array([5]), np.array([-21]), np.array([-14]),
+                 [1], [1], touch_ts=-9)
+        row = int(t.lookup(np.array([5]), np.array([-21]))[0])
+        assert t.touch[row] == -9  # max(sentinel, -9) == -9, not 0
+
+    def test_insert_rows_rebuild_matches_live_placement_semantics(self):
+        t = DeviceWindowTable(16, max_probes=4)
+        ck = np.arange(10, dtype=np.int64)
+        cs = np.zeros(10, np.int64)
+        t.update(ck, cs, cs + 7, np.arange(10), np.ones(10), 3)
+        rows = t.rows()
+        order = np.lexsort((rows[:, 1], rows[:, 0]))  # canonical (key, start)
+        rows = rows[order]
+        t2 = DeviceWindowTable(16, max_probes=4)
+        assert t2.insert_rows(*(rows[:, i] for i in range(6))) is None
+        r1 = t.lookup(ck, cs)
+        r2 = t2.lookup(ck, cs)
+        assert (r2 >= 0).all()
+        np.testing.assert_array_equal(t.value[r1], t2.value[r2])
+        np.testing.assert_array_equal(t.touch[r1], t2.touch[r2])
+
+    def test_bad_args(self):
+        with pytest.raises(ValueError):
+            DeviceWindowTable(0)
+        with pytest.raises(ValueError):
+            DeviceWindowTable(8, max_probes=0)
+        with pytest.raises(ValueError):
+            KeyedWindowEngine(
+                WindowSpec("tumbling", size=4), num_slots=8, backend="gpu"
+            )
+        with pytest.raises(ValueError):
+            KeyedWindowEngine(
+                WindowSpec("tumbling", size=4), num_slots=8,
+                backend="device_table", ttl=-1,
+            )
+
+
+# ---------------------------------------------------------------------------
+# Pallas lookup kernel vs reference vs numpy probe realization
+# ---------------------------------------------------------------------------
+
+class TestLookupKernel:
+    def _table(self, capacity, n, seed):
+        rng = np.random.default_rng(seed)
+        t = DeviceWindowTable(capacity, max_probes=8)
+        ck = np.sort(rng.integers(-(2 ** 40), 2 ** 40, size=n))
+        cs = rng.integers(-50, 50, size=n) * 7
+        t.update(ck, cs, cs + 7, np.ones(n), np.ones(n), 0)
+        return t, ck, cs
+
+    @pytest.mark.parametrize("mode", ["ref", "interpret"])
+    def test_dispatch_modes_match_numpy_probe(self, mode):
+        t, ck, cs = self._table(64, 40, 0)
+        want = t.lookup(ck, cs)  # numpy probe-window realization
+        ops.use_kernels(mode)
+        try:
+            got = np.asarray(
+                ops.table_lookup(ck, cs, t.key, t.start, t.occ), np.int64
+            )
+        finally:
+            ops.use_kernels("auto")
+        np.testing.assert_array_equal(
+            np.where(got >= t.capacity, -1, got), want
+        )
+
+    def test_kernel_padding_and_blocking(self):
+        """Cell count and capacity that are NOT multiples of the block sizes
+        exercise the padding convention (padded table rows unoccupied)."""
+        from repro.kernels import hash_table as ht
+        from repro.kernels import ref as kref
+
+        t, ck, cs = self._table(37, 23, 1)
+        cells = ops._split_i64(ck) + ops._split_i64(cs)
+        table = ops._split_i64(t.key) + ops._split_i64(t.start)
+        occ = np.asarray(t.occ, np.int32)
+        got = np.asarray(
+            ht.table_lookup(cells, table, occ, block_cells=8, block_table=16,
+                            interpret=True)
+        )
+        want = np.asarray(kref.table_lookup_ref(cells, table, occ))
+        np.testing.assert_array_equal(got, want)
+
+    def test_engine_exact_through_kernel_dispatch(self):
+        spec = WindowSpec("tumbling", size=7, lateness=3)
+        items = synthetic_keyed_items(CHUNK * 5, num_keys=9, disorder=5,
+                                      seed=2)
+        o_em, _, _ = semantics.keyed_windows(
+            "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        ops.use_kernels("interpret")
+        try:
+            eng = KeyedWindowEngine(
+                spec, num_slots=NUM_SLOTS, backend="device_table", capacity=64
+            )
+            outs = [
+                eng.process_chunk(items[i: i + CHUNK])
+                for i in range(0, len(items), CHUNK)
+            ]
+        finally:
+            ops.use_kernels("auto")
+        assert _emissions(outs) == o_em
+
+
+# ---------------------------------------------------------------------------
+# backend bit-exactness vs the serial oracle (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+class TestTableBackendBitExact:
+    def _run_executor(self, spec, items, schedule, degree=2, **table_kw):
+        ad = KeyedWindowAdapter(
+            spec, num_slots=NUM_SLOTS, impl="segment",
+            backend="device_table", **table_kw,
+        )
+        ex = StreamExecutor(ad, degree=degree, chunk_size=CHUNK)
+        chunks = [items[i: i + CHUNK] for i in range(0, len(items), CHUNK)]
+        outs = ex.run(chunks, schedule=schedule)
+        return ex, outs
+
+    @pytest.mark.parametrize("kind", ["tumbling", "sliding"])
+    @pytest.mark.parametrize("cfg", TABLE_CONFIGS,
+                             ids=["ample", "spill", "evict", "spill+evict"])
+    def test_grow_shrink_nondivisible_degrees_bit_exact(self, kind, cfg):
+        spec = _spec_for(kind)
+        items = synthetic_keyed_items(
+            11 * CHUNK + 9, num_keys=9, disorder=6, seed=13
+        )
+        ex, outs = self._run_executor(spec, items, {2: 3, 5: 7, 8: 2}, **cfg)
+        o_em, o_open, o_late = semantics.keyed_windows(
+            kind, _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        assert _emissions(outs) == o_em
+        assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+        late_rows = [
+            tuple(int(x) for x in row)
+            for o in outs
+            for row in zip(*(o["late"][k]
+                             for k in ("key", "value", "ts", "start")))
+        ]
+        assert late_rows == o_late
+        assert all(
+            r.protocol == "S2-slotmap-handoff" for r in ex.metrics.resizes
+        )
+
+    def test_forced_spill_and_eviction_really_happen(self):
+        """The stress configs must actually exercise the tier transitions —
+        otherwise the bit-exact parametrization proves nothing."""
+        spec = WindowSpec("tumbling", size=200, lateness=4)
+        n = 25 * CHUNK
+        i = np.arange(n, dtype=np.int64)
+        # hot set of 24 standing keys (> capacity: forces probe-window spill)
+        # plus one-shot cold keys that go idle (forces TTL eviction)
+        keys = np.where(i % CHUNK == 0, 1000 + i, i % 24)
+        items = keyed_stream(keys, i % 13, i)
+        ex, outs = self._run_executor(
+            spec, items, {3: 7}, capacity=16, max_probes=2, ttl=10
+        )
+        assert int(ex.state["t_spilled"]) > 0
+        assert int(ex.state["t_evicted"]) > 0
+        o_em, o_open, _ = semantics.keyed_windows(
+            "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        assert _emissions(outs) == o_em
+        assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+
+    def test_session_backend_stays_host_side_and_exact(self):
+        spec = WindowSpec("session", gap=5, lateness=3, late_policy="side")
+        eng = KeyedWindowEngine(
+            spec, num_slots=NUM_SLOTS, backend="device_table", capacity=64
+        )
+        assert eng.table is None  # sessions merge by overlap: host tier
+        items = synthetic_keyed_items(CHUNK * 6, num_keys=7, disorder=4,
+                                      seed=4)
+        outs = [
+            eng.process_chunk(items[i: i + CHUNK])
+            for i in range(0, len(items), CHUNK)
+        ]
+        o_em, o_open, _ = semantics.keyed_windows(
+            "session", _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        assert _emissions(outs) == o_em
+        assert _state_rows(eng.snapshot()) == [tuple(t) for t in o_open]
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        st.sampled_from(["tumbling", "sliding"]),
+        st.integers(0, 10_000),
+        st.integers(0, 10),
+        st.sampled_from([(2, 3), (3, 7), (6, 4)]),
+        st.sampled_from([(8, 2, 0), (16, 4, 2), (12, 3, 5)]),
+    )
+    def test_property_forced_evictions_spill_resize_bit_exact(
+        self, kind, seed, disorder, degrees, table_cfg
+    ):
+        """Property (ISSUE satellite): random streams on a deliberately
+        undersized table (every config forces spill and TTL churn), with a
+        mid-stream resize between NON-divisor worker counts, match the
+        serial oracle on emissions, late records, and final canonical
+        state."""
+        spec = _spec_for(kind)
+        capacity, max_probes, ttl = table_cfg
+        items = synthetic_keyed_items(
+            8 * CHUNK + 5, num_keys=11, disorder=disorder, seed=seed
+        )
+        d0, d1 = degrees
+        o_em, o_open, o_late = semantics.keyed_windows(
+            kind, _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        ex, outs = self._run_executor(
+            spec, items, {3: d1, 6: d0}, degree=d0,
+            capacity=capacity, max_probes=max_probes, ttl=ttl,
+        )
+        assert _emissions(outs) == o_em
+        assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+        late_rows = [
+            tuple(int(x) for x in row)
+            for o in outs
+            for row in zip(*(o["late"][k]
+                             for k in ("key", "value", "ts", "start")))
+        ]
+        assert late_rows == o_late
+
+
+# ---------------------------------------------------------------------------
+# canonical snapshot: checkpoint round-trip + replay + resize accounting
+# ---------------------------------------------------------------------------
+
+class TestSnapshotRestore:
+    def test_midstream_snapshot_restore_replays_identically(self):
+        spec = WindowSpec("tumbling", size=40, lateness=6)
+        items = synthetic_keyed_items(10 * CHUNK, num_keys=9, disorder=5,
+                                      seed=7)
+        kw = dict(backend="device_table", capacity=16, max_probes=4, ttl=8)
+        a = KeyedWindowEngine(spec, num_slots=NUM_SLOTS, **kw)
+        for i in range(0, 5 * CHUNK, CHUNK):
+            a.process_chunk(items[i: i + CHUNK])
+        snap = a.snapshot()
+        b = KeyedWindowEngine.restore(spec, snap, **kw)
+        outs_a, outs_b = [], []
+        for i in range(5 * CHUNK, len(items), CHUNK):
+            outs_a.append(a.process_chunk(items[i: i + CHUNK]))
+            outs_b.append(b.process_chunk(items[i: i + CHUNK]))
+        assert _emissions(outs_a) == _emissions(outs_b)
+        sa, sb = a.snapshot(), b.snapshot()
+        for k in sa:
+            np.testing.assert_array_equal(sa[k], sb[k], err_msg=k)
+
+    def test_restore_is_snapshot_fixed_point(self):
+        spec = WindowSpec("sliding", size=9, slide=4, lateness=3)
+        kw = dict(backend="device_table", capacity=32, ttl=4)
+        eng = KeyedWindowEngine(spec, num_slots=NUM_SLOTS, **kw)
+        items = synthetic_keyed_items(4 * CHUNK, num_keys=8, disorder=4,
+                                      seed=9)
+        for i in range(0, len(items), CHUNK):
+            eng.process_chunk(items[i: i + CHUNK])
+        snap = eng.snapshot()
+        again = KeyedWindowEngine.restore(spec, snap, **kw).snapshot()
+        for k in snap:
+            np.testing.assert_array_equal(snap[k], again[k], err_msg=k)
+
+    def test_pr2_host_snapshot_restores_without_placement_columns(self):
+        """Backward compat: a PR 2 pytree (no w_resident / w_touch / t_*)
+        restores into either backend; the table backend starts the rows on
+        the host tier and adopts them lazily."""
+        spec = WindowSpec("tumbling", size=7, lateness=3)
+        host = KeyedWindowEngine(spec, num_slots=NUM_SLOTS)
+        items = synthetic_keyed_items(CHUNK * 3, num_keys=6, disorder=3,
+                                      seed=5)
+        outs = [host.process_chunk(items[i: i + CHUNK])
+                for i in range(0, len(items), CHUNK)]
+        del outs
+        old = {
+            k: v for k, v in host.snapshot().items()
+            if not k.startswith(("w_resident", "w_touch", "t_"))
+        }
+        for backend in ("host", "device_table"):
+            eng = KeyedWindowEngine.restore(
+                spec, old, backend=backend, capacity=32
+            )
+            assert _state_rows(eng.snapshot()) == _state_rows(host.snapshot())
+
+    def test_supervisor_checkpoint_replay_covers_device_table(self, tmp_path):
+        """Failure -> rollback -> replay with the device-table backend under
+        a spill+TTL stress config: bit-exact vs the oracle end to end."""
+        from repro.runtime import BoundedSource
+
+        spec = WindowSpec("tumbling", size=30, lateness=5, late_policy="side")
+        NCH = 6
+        items = synthetic_keyed_items(CHUNK * NCH, num_keys=7, disorder=5,
+                                      seed=3)
+        src = BoundedSource(items)
+
+        def chunk_fn(i):
+            src.seek(i * CHUNK)
+            return src.take(CHUNK)
+
+        ad = KeyedWindowAdapter(
+            spec, num_slots=10, impl="segment", backend="device_table",
+            capacity=8, max_probes=2, ttl=4,
+        )
+        ex = StreamExecutor(ad, degree=3, chunk_size=CHUNK)
+        sup = Supervisor(
+            ex, chunk_fn, num_chunks=NCH, ckpt_dir=str(tmp_path),
+            ckpt_every=2, failure_plan=FailurePlan(fail_at=3, recover_after=2),
+        )
+        outs = sup.run()
+        o_em, o_open, _ = semantics.keyed_windows(
+            "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        assert _emissions([outs[i] for i in range(NCH)]) == o_em
+        assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+        kinds = [e.kind for e in sup.events]
+        assert "failure" in kinds and "shrink" in kinds and "grow" in kinds
+
+    def test_resize_accounting_reports_migrated_table_rows(self):
+        spec = WindowSpec("tumbling", size=64, lateness=4)
+        ad = KeyedWindowAdapter(
+            spec, num_slots=NUM_SLOTS, backend="device_table", capacity=64
+        )
+        ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+        items = synthetic_keyed_items(CHUNK * 3, num_keys=12, disorder=2,
+                                      seed=1)
+        for i in range(0, len(items), CHUNK):
+            ex.process(items[i: i + CHUNK])
+        state_before = dict(ex.state)
+        rec = ex.set_degree(7)
+        assert rec is not None and rec.protocol == "S2-slotmap-handoff"
+        assert "table rows" in rec.reason
+        # the detail's row count is exactly the moved-slot row population
+        from repro.keyed import SlotMap
+
+        slot_table = np.asarray(state_before["slot_table"], np.int32)
+        _, moved = SlotMap(
+            len(slot_table), int(state_before["n_workers"]), table=slot_table
+        ).rebalance(7)
+        n_rows = migrated_rows(state_before, moved)
+        assert f"({n_rows} table rows)" in rec.reason
+        assert n_rows > 0
