@@ -10,6 +10,9 @@ Three gate kinds per suite:
 * ``min``    — the value must be >= the floor (speedups and sanity
   throughput floors: "the device table beats the host dict" is a claim the
   build enforces, not a hope);
+* ``max``    — the value must be <= the ceiling (volume/overhead caps:
+  "a resize ships only the moved rows" is enforced as a hard ceiling on
+  migration handoff rows/bytes and scaling ratios);
 * ``band``   — the value must sit within ``value * (1 ± rtol)`` (tolerance
   bands around measured performance, so a *perf* regression — not just a
   correctness flip — fails the build; bands are put on machine-relative
@@ -61,6 +64,10 @@ def check_suite(name: str, spec: dict, root: str) -> list:
         got = resolve(rep, p)
         rows.append(("min", f"{name}:{p}", got >= floor,
                      f"got {got:.4g}, floor {floor:.4g}"))
+    for p, ceiling in spec.get("max", {}).items():
+        got = resolve(rep, p)
+        rows.append(("max", f"{name}:{p}", got <= ceiling,
+                     f"got {got:.4g}, ceiling {ceiling:.4g}"))
     for p, band in spec.get("band", {}).items():
         got = resolve(rep, p)
         v, rtol = band["value"], band["rtol"]

@@ -1,0 +1,310 @@
+"""Sharded keyed state plane benchmark: live-shard overhead + row migration.
+
+Three measurements, one JSON report (``results/keyed_migration.json``):
+
+* **Per-chunk adapter overhead vs standing state** — the live sharded plane
+  (`KeyedWindowAdapter(live=True)`: resident engine shards, serialization
+  only at snapshot barriers) vs the legacy snapshot-per-chunk path
+  (``live=False``: rehydrate + re-serialize the global engine every chunk)
+  across growing standing-state sizes.  Claim the build enforces: live
+  per-chunk cost is **independent of standing state** (``live_scaling``
+  stays under a ceiling while ``legacy_scaling`` grows), and live beats
+  legacy outright in the state-heavy regime (``live_speedup_large``).
+* **Row-level migration cost** — live resizes at several degrees on one
+  standing plane, with the per-resize handoff volume (slots, rows, bytes)
+  read off the metrics bus.  Claims: rows move in proportion to moved
+  *slots* (``row_frac_over_slot_frac`` ceiling — resize cost scales with
+  moved rows, not table size), every resize costs less than one full
+  snapshot barrier (``max_resize_vs_barrier`` ceiling — the DMA path never
+  re-serializes the world), and the largest single-resize handoff stays
+  under a hard row/byte cap (``max_handoff_rows``).
+* **Correctness rides along** — a resized live run (grow + shrink at
+  non-divisor degrees, early firing on) must match the serial oracle
+  (``resized_run_matches_oracle``), and the live and legacy planes must
+  produce identical emissions and final canonical state on the overhead
+  workload (``live_matches_legacy``).
+
+``benchmarks/check_gates.py`` compares this report against the committed
+``results/baselines.json`` (exact / min / max gates) in the CI ``bench``
+job.
+
+Run:  PYTHONPATH=src python -m benchmarks.keyed_migration
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, derived
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+NUM_SLOTS = 40
+CHUNK = 2048
+WARM_CHUNKS = 6
+MEAS_CHUNKS = 8
+STANDING_SIZES = (512, 2048, 8192)   # standing keys == open cells
+CAPACITY = 16384
+RESIZE_SCHEDULE = [5, 7, 3, 8]       # from degree 4: varied moved fractions
+
+
+def _standing_stream(n_keys: int, num_chunks: int):
+    """Keys cycle over a stable population; one huge tumbling window per
+    key stays open for the whole run — the standing-state regime."""
+    from repro.keyed import keyed_stream
+
+    n = CHUNK * num_chunks
+    i = np.arange(n, dtype=np.int64)
+    return keyed_stream(i % n_keys, i % 97, i)
+
+
+def _spec():
+    from repro.keyed import WindowSpec
+
+    return WindowSpec("tumbling", size=1 << 40, lateness=8)
+
+
+def _make_executor(live: bool, n_keys: int, degree: int = 4):
+    from repro.keyed import KeyedWindowAdapter
+    from repro.runtime import StreamExecutor
+
+    ad = KeyedWindowAdapter(
+        _spec(), num_slots=NUM_SLOTS, impl="segment",
+        backend="device_table", capacity=CAPACITY, live=live,
+    )
+    return ad, StreamExecutor(ad, degree=degree, chunk_size=CHUNK)
+
+
+def _per_chunk_us(ex, chunks) -> float:
+    t0 = time.perf_counter()
+    for c in chunks:
+        ex.process(c)
+    return 1e6 * (time.perf_counter() - t0) / len(chunks)
+
+
+def _overhead_section():
+    """Per-chunk cost of live vs legacy across standing-state sizes."""
+    rows, cells = [], []
+    for n_keys in STANDING_SIZES:
+        items = _standing_stream(n_keys, WARM_CHUNKS + MEAS_CHUNKS)
+        chunks = [items[i: i + CHUNK] for i in range(0, len(items), CHUNK)]
+        per_mode = {}
+        finals = {}
+        for live in (True, False):
+            ad, ex = _make_executor(live, n_keys)
+            for c in chunks[:WARM_CHUNKS]:
+                ex.process(c)
+            per_mode[live] = _per_chunk_us(ex, chunks[WARM_CHUNKS:])
+            finals[live] = ex.state
+        # both planes must hold the identical canonical state at the end
+        same = all(
+            np.array_equal(finals[True][k], finals[False][k])
+            for k in finals[True]
+        )
+        cells.append(
+            {
+                "standing_keys": n_keys,
+                "live_us_per_chunk": per_mode[True],
+                "legacy_us_per_chunk": per_mode[False],
+                "speedup": per_mode[False] / per_mode[True],
+                "state_equal": same,
+            }
+        )
+        rows.append(
+            Row(
+                f"keyed/migration/standing{n_keys}",
+                per_mode[True],
+                derived(
+                    legacy_us=per_mode[False],
+                    speedup=per_mode[False] / per_mode[True],
+                    exact=int(same),
+                ),
+            )
+        )
+    lo, hi = cells[0], cells[-1]
+    section = {
+        "chunk": CHUNK,
+        "cells": cells,
+        # live per-chunk cost must NOT scale with standing state...
+        "live_scaling": hi["live_us_per_chunk"] / lo["live_us_per_chunk"],
+        # ...while the legacy snapshot-per-chunk path does
+        "legacy_scaling": (
+            hi["legacy_us_per_chunk"] / lo["legacy_us_per_chunk"]
+        ),
+        "live_speedup_large": hi["speedup"],
+        "live_matches_legacy": all(c["state_equal"] for c in cells),
+    }
+    return rows, section
+
+
+def _migration_section():
+    """Live-resize cost and handoff volume on one standing plane."""
+    n_keys = STANDING_SIZES[-1]
+    items = _standing_stream(n_keys, WARM_CHUNKS)
+    ad, ex = _make_executor(True, n_keys)
+    for i in range(0, len(items), CHUNK):
+        ex.process(items[i: i + CHUNK])
+    # warm the resize path (fresh-shard construction, routing tables) so
+    # the measured transitions don't carry one-time allocation cost
+    ex.set_degree(6)
+    ex.set_degree(4)
+    # the cost a snapshot-path resize would pay: serialize the whole plane
+    barrier_us = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        snap = ex.snapshot_barrier()
+        dt = 1e6 * (time.perf_counter() - t0)
+        barrier_us = dt if barrier_us is None else min(barrier_us, dt)
+    total_rows = int(len(snap["w_key"]))
+    resizes = []
+    degree = ex.degree
+    for n_new in RESIZE_SCHEDULE:
+        t0 = time.perf_counter()
+        rec = ex.set_degree(n_new)
+        secs_us = 1e6 * (time.perf_counter() - t0)
+        slot_frac = rec.handoff_items / NUM_SLOTS
+        row_frac = rec.handoff_rows / total_rows if total_rows else 0.0
+        resizes.append(
+            {
+                "n_old": degree, "n_new": n_new,
+                "handoff_slots": rec.handoff_items,
+                "handoff_rows": rec.handoff_rows,
+                "handoff_bytes": rec.handoff_bytes,
+                "resize_us": secs_us,
+                "slot_frac": slot_frac,
+                "row_frac": row_frac,
+            }
+        )
+        degree = n_new
+    # post-migration state must be intact (rows moved, nothing lost)
+    after = ex.snapshot_barrier()
+    intact = bool(
+        np.array_equal(snap["w_key"], after["w_key"])
+        and np.array_equal(snap["w_value"], after["w_value"])
+        and np.array_equal(snap["w_count"], after["w_count"])
+    )
+    vol = ex.metrics.migration_volume()
+    section = {
+        "standing_rows": total_rows,
+        "barrier_us": barrier_us,
+        "resizes": resizes,
+        "state_intact_after_migrations": intact,
+        # hash uniformity: moved rows track moved slots, not table size
+        "row_frac_over_slot_frac": max(
+            r["row_frac"] / r["slot_frac"] for r in resizes
+        ),
+        "max_resize_vs_barrier": max(
+            r["resize_us"] / barrier_us for r in resizes
+        ),
+        "max_handoff_rows": max(r["handoff_rows"] for r in resizes),
+        "max_handoff_bytes": max(r["handoff_bytes"] for r in resizes),
+        "bus_volume": vol,
+    }
+    rows = [
+        Row(
+            f"keyed/migration/resize{r['n_old']}to{r['n_new']}",
+            r["resize_us"],
+            derived(rows=r["handoff_rows"], slots=r["handoff_slots"],
+                    row_frac=r["row_frac"]),
+        )
+        for r in resizes
+    ]
+    return rows, section
+
+
+def _oracle_section():
+    """A resized live run (non-divisor degrees, early firing) vs the serial
+    oracle — the correctness flag the gates pin exact."""
+    from repro.core import semantics
+    from repro.keyed import (
+        KeyedWindowAdapter,
+        WindowSpec,
+        synthetic_keyed_items,
+    )
+    from repro.runtime import StreamExecutor
+
+    ch, nch, slots = 256, 12, 20
+    spec = WindowSpec("sliding", size=96, slide=32, lateness=16,
+                      late_policy="side", early_every=2)
+    items = synthetic_keyed_items(ch * nch, num_keys=64, disorder=8, seed=0)
+    ad = KeyedWindowAdapter(spec, num_slots=slots, impl="segment",
+                            backend="device_table", capacity=512)
+    ex = StreamExecutor(ad, degree=2, chunk_size=ch)
+    outs = ex.run(
+        [items[i: i + ch] for i in range(0, len(items), ch)],
+        schedule={4: 3, 8: 7},
+    )
+    triples = [(int(r["key"]), int(r["value"]), int(r["ts"])) for r in items]
+    o_em, o_open, o_late, o_early = semantics.keyed_windows(
+        "sliding", triples, **spec.oracle_kwargs(ch)
+    )
+
+    def got(channel, keys=("key", "start", "end", "value", "count")):
+        return [
+            tuple(int(x) for x in row)
+            for o in outs
+            for row in zip(*(o[channel][k] for k in keys))
+        ]
+
+    state_rows = [
+        tuple(int(x) for x in r)
+        for r in zip(*(np.asarray(ex.state[k]).tolist()
+                       for k in ("w_key", "w_start", "w_end", "w_value",
+                                 "w_count")))
+    ]
+    exact = (
+        got("emissions") == o_em
+        and got("early") == o_early
+        and got("late", ("key", "value", "ts", "start")) == o_late
+        and state_rows == [tuple(t) for t in o_open]
+    )
+    return exact
+
+
+def run() -> list[Row]:
+    rows, overhead = _overhead_section()
+    mig_rows, migration = _migration_section()
+    rows.extend(mig_rows)
+    exact = _oracle_section()
+    report = {
+        "workload": {
+            "num_slots": NUM_SLOTS, "chunk": CHUNK,
+            "standing_sizes": list(STANDING_SIZES),
+            "capacity": CAPACITY,
+            "resize_schedule": RESIZE_SCHEDULE,
+        },
+        "overhead": overhead,
+        "migration": migration,
+        "live_matches_legacy": overhead["live_matches_legacy"],
+        "state_intact_after_migrations":
+            migration["state_intact_after_migrations"],
+        "resized_run_matches_oracle": exact,
+    }
+    os.makedirs(os.path.join(_REPO, "results"), exist_ok=True)
+    with open(os.path.join(_REPO, "results", "keyed_migration.json"),
+              "w") as f:
+        json.dump(report, f, indent=2)
+    rows.append(
+        Row(
+            "keyed/migration/report",
+            0.0,
+            derived(
+                live_scaling=overhead["live_scaling"],
+                legacy_scaling=overhead["legacy_scaling"],
+                speedup_large=overhead["live_speedup_large"],
+                oracle_exact=int(exact),
+                path="results/keyed_migration.json",
+            ),
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

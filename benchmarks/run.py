@@ -27,6 +27,7 @@ def main() -> None:
         "benchmarks.shardmap_farm",
         "benchmarks.elastic_runtime",
         "benchmarks.keyed_throughput",
+        "benchmarks.keyed_migration",
         "benchmarks.kernel_bench",
         "benchmarks.roofline",
     ]

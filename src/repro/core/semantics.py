@@ -136,6 +136,7 @@ def keyed_windows(
     watermark_every: int = 1,
     lateness: int = 0,    # bounded out-of-orderness: wm = max_ts - lateness
     late_policy: str = "drop",  # "drop" | "side"
+    early_every: int = 0,  # emit provisional panes every N watermark ticks
 ):
     """Serial oracle for keyed windowed aggregation (sum + count per window).
 
@@ -160,21 +161,34 @@ def keyed_windows(
     (``ts + gap <= wm``); otherwise it merges into (possibly several)
     existing sessions by interval overlap within ``gap``.
 
+    **Early firing** (``early_every > 0``): every ``early_every``-th
+    watermark tick (a tick is one watermark advance — every
+    ``watermark_every`` items, plus the trailing partial group) each
+    still-open window additionally emits a **provisional** pane result —
+    its running ``(key, start, end, value_sum, count)`` — in the same
+    ``(end, start, key)`` order final emissions fire in.  Provisional
+    results never close or reset a window; the final emission at
+    watermark-close is unchanged.
+
     Returns ``(emissions, open_windows, late)`` where ``emissions`` is a
     list of ``(key, start, end, value_sum, count)`` in emission order,
     ``open_windows`` the same 5-tuples for still-open windows (sorted by
     ``(key, start)``), and ``late`` the late-assignment records in stream
-    order.  Everything is integer arithmetic — parallel engines must match
-    bit-exactly.
+    order.  With ``early_every > 0`` a fourth element is appended: the
+    provisional ``early`` rows in firing order.  Everything is integer
+    arithmetic — parallel engines must match bit-exactly.
     """
     if kind not in ("tumbling", "sliding", "session"):
         raise ValueError(f"unknown window kind {kind!r}")
     if late_policy not in ("drop", "side"):
         raise ValueError(f"unknown late policy {late_policy!r}")
+    if early_every < 0:
+        raise ValueError(f"early_every must be >= 0, got {early_every}")
     open_wins = {}   # key -> list of [start, end, value, count]
-    emissions, late = [], []
+    emissions, late, early = [], [], []
     wm = None
     max_ts = None
+    ticks = 0
 
     def assignments(ts):
         if kind == "tumbling":
@@ -200,6 +214,22 @@ def keyed_windows(
             open_wins[key].remove(w)
             if not open_wins[key]:
                 del open_wins[key]
+
+    def early_fire():
+        rows = sorted(
+            (w[1], w[0], key, w[2], w[3])
+            for key, wins in open_wins.items()
+            for w in wins
+        )
+        early.extend((key, start, end, v, c) for end, start, key, v, c in rows)
+
+    def tick():
+        nonlocal wm, ticks
+        wm = max_ts - lateness if wm is None else max(wm, max_ts - lateness)
+        fire(wm)
+        ticks += 1
+        if early_every and ticks % early_every == 0:
+            early_fire()
 
     count = 0
     for key, value, ts in items:
@@ -241,17 +271,17 @@ def keyed_windows(
                     wins.sort(key=lambda w: w[0])
         count += 1
         if count % watermark_every == 0:
-            wm = max_ts - lateness if wm is None else max(wm, max_ts - lateness)
-            fire(wm)
+            tick()
     if count % watermark_every and max_ts is not None:
-        wm = max_ts - lateness if wm is None else max(wm, max_ts - lateness)
-        fire(wm)
+        tick()
 
     open_out = sorted(
         (key, w[0], w[1], w[2], w[3])
         for key, wins in open_wins.items()
         for w in wins
     )
+    if early_every:
+        return emissions, open_out, late, early
     return emissions, open_out, late
 
 

@@ -15,9 +15,10 @@ Layers (see README.md "Keyed windowed state"):
 * :mod:`repro.keyed.kernels` — the per-chunk cell-reduction hot path:
   sort-by-key + Pallas segment-reduce, with the masked full-scan baseline
   it replaces.
-* :mod:`repro.keyed.runtime` — the StreamExecutor adapter: elastic degree
-  changes rebalance the slot map mid-stream; state checkpoints through
-  ``repro.checkpoint``.
+* :mod:`repro.keyed.runtime` — the sharded state plane under the
+  StreamExecutor: live per-worker engine shards routed by ``hash_to_slot``,
+  elastic resizes as row-level slot migration between shards, canonical
+  serialization only at supervisor checkpoint barriers.
 """
 
 from repro.keyed.kernels import reduce_by_cell, sort_by_cell
@@ -32,6 +33,7 @@ from repro.keyed.store import (
     KeyedStore,
     SlotMap,
     WindowState,
+    fold_worker_items,
     hash_to_slot,
     plan_relocation,
 )
@@ -49,6 +51,7 @@ __all__ = [
     "WindowSpec",
     "WindowState",
     "cell_hash",
+    "fold_worker_items",
     "hash_to_slot",
     "keyed_stream",
     "migrated_rows",

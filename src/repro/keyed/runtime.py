@@ -1,28 +1,49 @@
-"""Runtime integration: keyed windows as a StreamExecutor pattern adapter.
+"""Runtime integration: the sharded keyed state plane under the executor.
 
-:class:`KeyedWindowAdapter` is a **host-driven** adapter (``is_host``): its
-state is the engine's checkpoint pytree (numpy arrays with fixed keys), its
-step rehydrates the engine, processes one chunk, and snapshots back.  That
-makes three runtime features fall out for free:
+:class:`KeyedWindowAdapter` is a **live-state host adapter**
+(``is_host`` + ``has_live_state``): instead of one global
+:class:`~repro.keyed.windows.KeyedWindowEngine` rehydrated from a snapshot
+and re-serialized on every chunk (the PR 2/3 realization — per-chunk cost
+grew with *standing state*, not chunk size), it keeps ``n_w`` **live engine
+shards**, one per worker, each owning exactly the slots the
+:class:`~repro.keyed.store.SlotMap` assigns it — the paper's §4.2
+fully-partitioned ownership made physical:
 
-* ``StreamExecutor.set_degree`` / the autoscaler rebalance the slot map
-  mid-stream through :meth:`resize` — the §4.2 protocol with **slot-map
-  minimal migration**, valid at every worker count (``feasible_degrees``
-  reports all of them, unlike block ownership's divisors);
-* the failure supervisor checkpoints/restores executor state through
-  ``repro.checkpoint`` unchanged — the keyed store round-trips because the
-  state *is* its canonical serialized form;
-* replay after rollback is bit-exact: the engine is deterministic and the
-  snapshot is canonical, so a re-processed chunk emits identical windows.
+* ``step_live`` routes each chunk's items to shards by ``hash_to_slot`` and
+  merges the per-shard emissions / early firings / late records back into
+  the serial oracle's deterministic order — output stays bit-exact against
+  :func:`repro.core.semantics.keyed_windows` because cells are disjoint
+  across shards and the watermark clock (``wm_ts`` + tick count) is shared;
+* ``resize_live`` is the **row-level migration plane**: only the canonical
+  snapshot rows of reassigned slots are extracted from donor shards
+  (masked row extraction on both tiers) and ``ingest_rows``-ed into
+  recipients — no global re-serialization; the handoff volume (slots, rows,
+  bytes) rides the :class:`~repro.runtime.metrics.ResizeRecord` onto the
+  metrics bus;
+* ``snapshot_barrier`` merges per-shard snapshots into THE canonical form —
+  serialization happens at supervisor checkpoint barriers and explicit
+  state reads only, so per-chunk adapter overhead is independent of
+  standing-state size (``benchmarks/keyed_migration.py`` gates this);
+* the failure supervisor restores shards from the canonical merged
+  snapshot (the executor re-attaches lazily), and replay is bit-exact: the
+  shards are deterministic and the barrier snapshot is canonical.
+
+``live=False`` keeps the legacy snapshot-per-chunk executor path
+(``make_host_step``) — the migration benchmark measures the gap.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.keyed.store import SlotMap, hash_to_slot
+from repro.keyed.store import (
+    SlotMap,
+    fold_worker_items,
+    hash_to_slot,
+)
+from repro.keyed.table import TableStats
 from repro.keyed.windows import KeyedWindowEngine, WindowSpec
 from repro.runtime.executor import PatternAdapter, ResizeInfo
 
@@ -30,6 +51,15 @@ from repro.runtime.executor import PatternAdapter, ResizeInfo
 ITEM_DTYPE = np.dtype(
     [("key", np.int64), ("value", np.int64), ("ts", np.int64)]
 )
+
+#: canonical snapshot row width: 7 int64 columns (key, start, end, value,
+#: count, resident, touch) — what a migrated row costs on the wire
+ROW_BYTES = 7 * 8
+
+_ROW_COLS = (
+    "w_key", "w_start", "w_end", "w_value", "w_count", "w_resident", "w_touch"
+)
+_STAT_KEYS = ("t_inserted", "t_hits", "t_spilled", "t_evicted")
 
 
 def keyed_stream(keys, values, ts) -> np.ndarray:
@@ -55,14 +85,30 @@ def synthetic_keyed_items(
     return keyed_stream(keys, values, ts)
 
 
-class KeyedWindowAdapter(PatternAdapter):
-    """Keyed windowed state under the elastic executor (host-driven).
+def _take(chunk, idx):
+    """Row-select a chunk (structured array or dict of columns)."""
+    if isinstance(chunk, np.ndarray):
+        return chunk[idx]
+    return {k: np.asarray(v)[idx] for k, v in chunk.items()}
 
-    ``backend="device_table"`` runs tumbling/sliding windows on the
-    device-resident :class:`~repro.keyed.table.DeviceWindowTable`
-    (``capacity`` rows, optional ``ttl`` eviction, host-store spill tier);
-    the canonical engine snapshot makes both backends indistinguishable to
-    the executor, the autoscaler, and ``repro.checkpoint``.
+
+def _concat_sorted(parts: List[Dict[str, np.ndarray]], keys) -> Dict:
+    """Merge per-shard emission dicts into global ``(end, start, key)``
+    fire order (shards hold disjoint cells, so a sort IS the merge)."""
+    cols = {k: np.concatenate([p[k] for p in parts]) for k in keys}
+    order = np.lexsort((cols["key"], cols["start"], cols["end"]))
+    return {k: v[order] for k, v in cols.items()}
+
+
+class KeyedWindowAdapter(PatternAdapter):
+    """Keyed windowed state as a sharded live plane under the executor.
+
+    ``backend="device_table"`` gives every shard its own
+    :class:`~repro.keyed.table.DeviceWindowTable` (``capacity`` rows *per
+    shard*, optional ``ttl`` eviction, host-store spill tier); the barrier
+    snapshot makes both backends indistinguishable to the executor, the
+    autoscaler, and ``repro.checkpoint``.  ``live=False`` restores the
+    legacy one-global-engine, snapshot-per-chunk behavior.
     """
 
     is_host = True
@@ -70,7 +116,7 @@ class KeyedWindowAdapter(PatternAdapter):
     def __init__(self, spec: WindowSpec, *, num_slots: int,
                  impl: str = "segment", backend: str = "host",
                  capacity: int = 1024, ttl: int | None = None,
-                 max_probes: int = 16):
+                 max_probes: int = 16, live: bool = True):
         self.spec = spec
         self.num_slots = num_slots
         self.impl = impl
@@ -78,12 +124,20 @@ class KeyedWindowAdapter(PatternAdapter):
         self.capacity = capacity
         self.ttl = ttl
         self.max_probes = max_probes
+        self.has_live_state = bool(live)
+        self._shards: Optional[List[KeyedWindowEngine]] = None
+        self._slot_map: Optional[SlotMap] = None
 
     def _engine_kwargs(self):
         return dict(
             impl=self.impl, backend=self.backend, capacity=self.capacity,
             ttl=self.ttl, max_probes=self.max_probes,
         )
+
+    @property
+    def shards(self) -> Optional[List[KeyedWindowEngine]]:
+        """The live engine shards (None while detached)."""
+        return self._shards
 
     def init_state(self):
         return KeyedWindowEngine(
@@ -99,29 +153,229 @@ class KeyedWindowAdapter(PatternAdapter):
                 f"got {n_w}"
             )
 
-    def make_host_step(self, n_w: int) -> Callable:
+    # -- live-state lifecycle --------------------------------------------------
+    def attach(self, state, n_w: int) -> None:
+        """Hydrate ``n_w`` live shards from the canonical snapshot: each
+        shard restores ONLY the rows of its owned slots (the engine's
+        owned-slot filter) — the one-time cost of going live."""
+        slot_table = np.asarray(state["slot_table"], np.int32)
+        n_cur = int(state["n_workers"])
+        sm = SlotMap(len(slot_table), n_cur, table=slot_table)
+        if n_cur != n_w:
+            # degree alignment (a snapshot written at another degree): fold
+            # tallies along with ownership — the work metric is conserved
+            # through attach exactly like through a resize
+            new_sm, _ = sm.rebalance(n_w)
+            state = dict(
+                state, slot_table=new_sm.table, n_workers=np.int64(n_w),
+                worker_items=fold_worker_items(
+                    np.asarray(state["worker_items"], np.int64),
+                    sm.table, new_sm.table, n_w,
+                ),
+            )
+            sm = new_sm
+        worker_items = np.asarray(state["worker_items"], np.int64)
+        shards = []
+        for w in range(n_w):
+            eng = KeyedWindowEngine.restore(
+                self.spec, state, owned_slots=sm.slots_of(w),
+                **self._engine_kwargs(),
+            )
+            # shard w carries only its own tally; the stream-global counters
+            # (late count, table stats) live on shard 0 — the barrier sums
+            items = np.zeros(n_w, np.int64)
+            items[w] = worker_items[w] if w < len(worker_items) else 0
+            eng.worker_items = items
+            if w:
+                eng.late_count = 0
+                if eng.table is not None:
+                    eng.table.stats = TableStats()
+            shards.append(eng)
+        self._shards = shards
+        self._slot_map = sm
+
+    def detach(self) -> None:
+        self._shards = None
+        self._slot_map = None
+
+    def snapshot_barrier(self) -> Dict[str, np.ndarray]:
+        """Merge per-shard snapshots into THE canonical snapshot: identical
+        logical state serializes identically whether it lived in one global
+        engine or ``n_w`` shards (rows are disjoint; a canonical sort is
+        the merge; counters are sums)."""
+        snaps = [s.snapshot() for s in self._shards]
+        cols = {
+            k: np.concatenate([s[k] for s in snaps]) for k in _ROW_COLS
+        }
+        order = np.lexsort(
+            (cols["w_end"], cols["w_start"], cols["w_key"])
+        )
+        out = {k: v[order] for k, v in cols.items()}
+        out["slot_table"] = self._slot_map.table.copy()
+        out["n_workers"] = np.int64(self._slot_map.n_workers)
+        for k in ("wm", "wm_valid", "wm_ticks", "max_ts", "max_ts_valid"):
+            out[k] = snaps[0][k]  # the watermark clock is shared
+        out["late_count"] = np.int64(
+            sum(int(s["late_count"]) for s in snaps)
+        )
+        out["worker_items"] = np.sum(
+            [s["worker_items"] for s in snaps], axis=0, dtype=np.int64
+        )
+        for k in _STAT_KEYS:
+            out[k] = np.int64(sum(int(s[k]) for s in snaps))
+        return out
+
+    def step_live(self, chunk) -> Dict[str, Dict[str, np.ndarray]]:
+        """Route one chunk to the owning shards and merge their outputs
+        back into the oracle's deterministic order."""
+        keys = np.asarray(chunk["key"], np.int64)
+        n_w = len(self._shards)
+        if len(keys):
+            owners = np.asarray(self._slot_map.table, np.int64)[
+                hash_to_slot(keys, self.num_slots).astype(np.int64)
+            ]
+            # the chunk's max(ts) is the shared watermark clock: every shard
+            # advances (and ticks) identically, even on an empty sub-chunk
+            wm_ts = int(np.asarray(chunk["ts"], np.int64).max())
+        else:
+            owners = np.zeros(0, np.int64)
+            wm_ts = None
+        em_parts, early_parts, late_parts = [], [], []
+        for w, eng in enumerate(self._shards):
+            sel = np.flatnonzero(owners == w)
+            out = eng.process_chunk(
+                _take(chunk, sel), wm_ts=wm_ts, positions=sel
+            )
+            em_parts.append(out["emissions"])
+            early_parts.append(out["early"])
+            late_parts.append(out["late"])
+        fire_keys = ("key", "start", "end", "value", "count")
+        emissions = _concat_sorted(em_parts, fire_keys)
+        early = _concat_sorted(early_parts, fire_keys)
+        # late records merge back into stream order by original position
+        # (stable: one item's multiple late panes keep their engine order)
+        late_cols = {
+            k: np.concatenate([p[k] for p in late_parts])
+            for k in ("key", "value", "ts", "start", "pos")
+        }
+        order = np.argsort(late_cols.pop("pos"), kind="stable")
+        late = {k: v[order] for k, v in late_cols.items()}
+        return {"emissions": emissions, "late": late, "early": early}
+
+    def resize_live(self, n_old: int, n_new: int) -> ResizeInfo:
+        """Row-level slot migration between live shards.
+
+        Only the reassigned slots' rows move: donors extract them through
+        the tier masks, recipients ``ingest_rows`` them — per-resize cost
+        scales with *moved rows*, never with standing state.  Departing
+        shards fold their global counters (and, via
+        :func:`~repro.keyed.store.fold_worker_items`, their work tallies)
+        into survivors before they are dropped.
+        """
+        sm_old = self._slot_map
+        sm_new, moved = sm_old.rebalance(n_new)
+        old_owner = np.asarray(sm_old.table, np.int64)
+        new_owner = np.asarray(sm_new.table, np.int64)
+        # grow: fresh shards join with the shared watermark clock and no rows
+        proto = self._shards[0]
+        while len(self._shards) < n_new:
+            eng = KeyedWindowEngine(
+                self.spec, num_slots=self.num_slots, **self._engine_kwargs()
+            )
+            eng.wm, eng.max_ts = proto.wm, proto.max_ts
+            eng.wm_ticks = proto.wm_ticks
+            self._shards.append(eng)
+        # donor side: pull each donor's moved rows once (both tiers), then
+        # bucket them by recipient through the new ownership table
+        per_recipient: Dict[int, List[Tuple[np.ndarray, ...]]] = {}
+        rows_moved = 0
+        for d in np.unique(old_owner[moved]).tolist():
+            rows = self._shards[int(d)].extract_rows(
+                moved[old_owner[moved] == d]
+            )
+            rows_moved += len(rows[0])
+            row_recips = new_owner[
+                hash_to_slot(rows[0], self.num_slots).astype(np.int64)
+            ]
+            for r in np.unique(row_recips).tolist():
+                m = row_recips == r
+                per_recipient.setdefault(int(r), []).append(
+                    tuple(col[m] for col in rows)
+                )
+        # recipient side: one canonical sorted batch per recipient, so the
+        # open-addressing re-placement is deterministic
+        for r in sorted(per_recipient):
+            parts = per_recipient[r]
+            cols = [np.concatenate([p[i] for p in parts]) for i in range(7)]
+            order = np.lexsort((cols[2], cols[1], cols[0]))
+            self._shards[r].ingest_rows(*(c[order] for c in cols))
+        # fold tallies and global counters, then drop departing shards
+        global_items = np.sum(
+            [s.worker_items for s in self._shards[:n_old]], axis=0,
+            dtype=np.int64,
+        )
+        folded = fold_worker_items(global_items, old_owner, new_owner, n_new)
+        for eng in self._shards[n_new:]:
+            self._shards[0].late_count += eng.late_count
+            if self._shards[0].table is not None and eng.table is not None:
+                s0, se = self._shards[0].table.stats, eng.table.stats
+                s0.inserted += se.inserted
+                s0.hits += se.hits
+                s0.spilled += se.spilled
+                s0.evicted += se.evicted
+        del self._shards[n_new:]
+        for w, eng in enumerate(self._shards):
+            items = np.zeros(n_new, np.int64)
+            items[w] = folded[w]
+            eng.worker_items = items
+            eng.store.slot_map = SlotMap(
+                self.num_slots, n_new, table=sm_new.table
+            )
+        self._slot_map = sm_new
+        return ResizeInfo(
+            protocol="S2-slotmap-handoff",
+            handoff_items=int(len(moved)),
+            handoff_rows=int(rows_moved),
+            handoff_bytes=int(rows_moved) * ROW_BYTES,
+            detail=f"{len(moved)}/{self.num_slots} slots "
+                   f"({rows_moved} table rows) migrate "
+                   f"(minimal rebalance {n_old}->{n_new})",
+        )
+
+    # -- legacy snapshot-per-chunk path (live=False) ---------------------------
+    def make_host_step(self, n_w: int):
         def step(state, chunk):
             eng = KeyedWindowEngine.restore(
                 self.spec, state, **self._engine_kwargs()
             )
             if eng.store.n_workers != n_w:
-                # initial placement (not a resize): align ownership with the
-                # executor's current degree before the first chunk
+                # degree alignment (a snapshot written at another degree):
+                # fold tallies along with ownership, as attach does
+                old_table = eng.store.slot_map.table.copy()
                 eng.store.resize(n_w)
-                eng.worker_items = np.zeros(n_w, np.int64)
+                eng.worker_items = fold_worker_items(
+                    eng.worker_items, old_table, eng.store.slot_map.table,
+                    n_w,
+                )
             out = eng.process_chunk(chunk)
             return eng.snapshot(), out
 
         return step
 
     def resize(self, state, n_old: int, n_new: int) -> Tuple[Any, ResizeInfo]:
+        """Serialized-state resize (detached adapters / ``live=False``):
+        rewrites the ownership table in place and folds worker tallies —
+        the rows themselves do not move because the single global store
+        holds them all."""
         table = np.asarray(state["slot_table"], np.int32)
         n_cur = int(state["n_workers"])
         sm, moved = SlotMap(len(table), n_cur, table=table).rebalance(n_new)
-        items = np.zeros(n_new, np.int64)
-        old_items = np.asarray(state["worker_items"], np.int64)
-        keep = min(n_new, len(old_items))
-        items[:keep] = old_items[:keep]  # surviving workers keep their tallies
+        # fold, don't truncate: departing workers' tallies follow their
+        # slots to the survivors so the §4.2 work metric stays conserved
+        items = fold_worker_items(
+            np.asarray(state["worker_items"], np.int64), table, sm.table,
+            n_new,
+        )
         # the handoff payload under a device table is table ROWS, not dict
         # entries: every open cell whose key hashes to a migrated slot moves
         # with its slot (the canonical snapshot rows ARE the migration unit,
@@ -134,6 +388,8 @@ class KeyedWindowAdapter(PatternAdapter):
         return state, ResizeInfo(
             protocol="S2-slotmap-handoff",
             handoff_items=int(len(moved)),
+            handoff_rows=int(moved_rows),
+            handoff_bytes=int(moved_rows) * ROW_BYTES,
             detail=f"{len(moved)}/{len(table)} slots ({moved_rows} table rows)"
                    f" migrate (minimal rebalance {n_cur}->{n_new})",
         )

@@ -138,6 +138,47 @@ class SlotMap:
         return int(len(self.rebalance(n_new)[1]))
 
 
+def fold_worker_items(
+    old_items: np.ndarray,
+    old_table: np.ndarray,
+    new_table: np.ndarray,
+    n_new: int,
+) -> np.ndarray:
+    """Re-own per-worker item tallies across a rebalance, losing nothing.
+
+    Surviving workers keep their own tallies.  A **departing** worker's tally
+    follows its slots: it is split over the workers that received them, in
+    proportion to the slot counts, integer-rounded by largest remainder
+    (ties broken toward the lowest worker id) so the global sum is invariant
+    — the fix for shrink resizes silently truncating departed workers'
+    tallies out of the §4.2 work-distribution metric.  A departing worker
+    that owned no slots (possible only in hand-built tables) folds into
+    worker 0.
+    """
+    old_items = np.asarray(old_items, np.int64)
+    old_table = np.asarray(old_table, np.int64)
+    new_table = np.asarray(new_table, np.int64)
+    items = np.zeros(n_new, np.int64)
+    keep = min(n_new, len(old_items))
+    items[:keep] = old_items[:keep]
+    for d in range(n_new, len(old_items)):
+        tally = int(old_items[d])
+        if tally == 0:
+            continue
+        recipients = new_table[old_table == d]
+        if not len(recipients):
+            items[0] += tally
+            continue
+        counts = np.bincount(recipients, minlength=n_new)
+        total = int(counts.sum())
+        shares = tally * counts // total
+        remainders = tally * counts - shares * total
+        order = np.argsort(-remainders, kind="stable")
+        shares[order[: tally - int(shares.sum())]] += 1
+        items += shares
+    return items
+
+
 # ---------------------------------------------------------------------------
 # keyed store
 # ---------------------------------------------------------------------------
@@ -194,6 +235,22 @@ class KeyedStore:
     @property
     def n_workers(self) -> int:
         return self.slot_map.n_workers
+
+    def extract_slot_rows(self, slots) -> List[Tuple[int, int, int, int, int]]:
+        """Remove and return every open window of ``slots`` as
+        ``(key, start, end, value, count)`` tuples sorted by
+        ``(key, start, end)`` — the host tier's half of a row-level slot
+        migration (the donor side; :class:`SlotMap` names the recipient)."""
+        rows = []
+        for s in np.asarray(slots, np.int64).tolist():
+            slot_dict = self.slots[int(s)]
+            for key, wins in slot_dict.items():
+                for w in wins:
+                    rows.append((int(key), int(w.start), int(w.end),
+                                 int(w.value), int(w.count)))
+            slot_dict.clear()
+        rows.sort()
+        return rows
 
     # -- checkpoint round-trip (repro.checkpoint-compatible pytree) -----------
     def to_pytree(self) -> Dict[str, np.ndarray]:

@@ -311,6 +311,26 @@ class DeviceWindowTable:
         )
 
     # -- §4.2 ownership over rows ----------------------------------------------
+    def extract_slot_rows(
+        self, slots, num_slots: int
+    ) -> Tuple[np.ndarray, ...]:
+        """Remove and return every occupied row whose key hashes to a slot in
+        ``slots`` (the :meth:`_extract` mask applied to slot ownership) — the
+        device tier's half of a row-level slot migration.  Same layout as
+        :meth:`take_due`; rows leave in canonical ``(key, start)`` order so
+        the recipient's re-insertion is deterministic."""
+        from repro.keyed.store import hash_to_slot
+
+        idx = np.flatnonzero(self.occ)
+        if not len(idx):
+            return self._extract(np.zeros(self.capacity, bool))
+        row_slots = hash_to_slot(self.key[idx], num_slots).astype(np.int64)
+        mask = np.zeros(self.capacity, bool)
+        mask[idx[np.isin(row_slots, np.asarray(slots, np.int64))]] = True
+        out = self._extract(mask)
+        order = np.lexsort((out[2], out[1], out[0]))
+        return tuple(col[order] for col in out)
+
     def owners(self, slot_table: np.ndarray, num_slots: int) -> np.ndarray:
         """Owner worker of every occupied row (row keys hashed through the
         engine's slot map) — what resize accounting migrates."""

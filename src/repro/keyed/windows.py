@@ -79,12 +79,15 @@ class WindowSpec:
     gap: int = 0
     lateness: int = 0          # out-of-orderness bound: wm = max_ts - lateness
     late_policy: str = "drop"  # "drop" | "side"
+    early_every: int = 0       # provisional pane firing every N wm ticks
 
     def __post_init__(self):
         if self.kind not in ("tumbling", "sliding", "session"):
             raise ValueError(f"unknown window kind {self.kind!r}")
         if self.late_policy not in ("drop", "side"):
             raise ValueError(f"unknown late policy {self.late_policy!r}")
+        if self.early_every < 0:
+            raise ValueError(f"early_every must be >= 0, got {self.early_every}")
         if self.kind == "session":
             if self.gap <= 0:
                 raise ValueError("session windows need gap > 0")
@@ -105,7 +108,7 @@ class WindowSpec:
         return dict(
             size=self.size, slide=self.slide, gap=self.gap,
             watermark_every=watermark_every, lateness=self.lateness,
-            late_policy=self.late_policy,
+            late_policy=self.late_policy, early_every=self.early_every,
         )
 
 
@@ -159,45 +162,80 @@ class KeyedWindowEngine:
         )
         self.wm: Optional[int] = None
         self.max_ts: Optional[int] = None
+        self.wm_ticks = 0  # watermark advances seen (early-firing cadence)
         # late assignments of the chunk being processed, stream order; the
         # records are SHIPPED per chunk (under late_policy="side") rather
         # than accumulated in state, so state stays bounded by the open
         # windows — only the running count is part of the snapshot
         self._chunk_late: List[Tuple[int, int, int, int]] = []
+        self._chunk_late_pos: List[int] = []
+        self._chunk_touch: Optional[int] = None
         self.late_count = 0
         # per-owner live-assignment counts (the §4.2 work distribution)
         self.worker_items = np.zeros(self.store.n_workers, np.int64)
 
     # -- chunk processing ------------------------------------------------------
-    def process_chunk(self, chunk) -> Dict[str, Dict[str, np.ndarray]]:
+    def process_chunk(
+        self, chunk, *, wm_ts: Optional[int] = None, positions=None,
+    ) -> Dict[str, Dict[str, np.ndarray]]:
         """Process one chunk (dict or structured array with ``key`` /
         ``value`` / ``ts`` fields); returns ``{"emissions": ..., "late":
-        ...}`` as fixed-key column dicts."""
+        ..., "early": ...}`` as fixed-key column dicts.
+
+        ``wm_ts`` is the watermark clock of a **sharded** run: a shard sees
+        only the items routed to it, so the adapter passes the whole chunk's
+        ``max(ts)`` to every shard — the watermark (and its tick count, the
+        early-firing cadence) stays global, and a shard whose sub-chunk is
+        empty still advances.  ``positions`` (the items' indices in the
+        un-routed chunk) ride along on the late side-output as a ``pos``
+        column so the adapter can stable-merge shards' late records back
+        into stream order.
+        """
         keys = np.asarray(chunk["key"], np.int64)
         values = np.asarray(chunk["value"], np.int64)
         ts = np.asarray(chunk["ts"], np.int64)
+        pos = (
+            np.asarray(positions, np.int64) if positions is not None
+            else np.arange(len(keys), dtype=np.int64)
+        )
         self._chunk_late = []
+        self._chunk_late_pos = []
         if len(keys):
+            # last-touch stamps use the GLOBAL chunk clock when sharded
+            # (wm_ts >= this shard's local max), so a sharded table's rows
+            # carry the same touch column a global engine would write
+            self._chunk_touch = int(ts.max()) if wm_ts is None else int(wm_ts)
             if self.spec.kind == "session":
-                self._process_sessions(keys, values, ts)
+                self._process_sessions(keys, values, ts, pos)
             else:
-                self._process_panes(keys, values, ts)
+                self._process_panes(keys, values, ts, pos)
             chunk_max = int(ts.max())
             self.max_ts = (
                 chunk_max if self.max_ts is None else max(self.max_ts, chunk_max)
             )
-        emissions = self._advance_watermark()
+        if wm_ts is not None:
+            self.max_ts = (
+                int(wm_ts) if self.max_ts is None
+                else max(self.max_ts, int(wm_ts))
+            )
+        emissions, early = self._advance_watermark(
+            ticked=bool(len(keys)) or wm_ts is not None
+        )
         self.late_count += len(self._chunk_late)
         if self.spec.late_policy == "side" and self._chunk_late:
             cols = np.asarray(self._chunk_late, np.int64).T
             late_out = dict(key=cols[0], value=cols[1], ts=cols[2],
                             start=cols[3])
+            late_pos = np.asarray(self._chunk_late_pos, np.int64)
         else:
             late_out = dict(
                 key=np.zeros(0, np.int64), value=np.zeros(0, np.int64),
                 ts=np.zeros(0, np.int64), start=np.zeros(0, np.int64),
             )
-        return {"emissions": emissions, "late": late_out}
+            late_pos = np.zeros(0, np.int64)
+        if positions is not None:
+            late_out["pos"] = late_pos
+        return {"emissions": emissions, "late": late_out, "early": early}
 
     # -- host-store merge (the spill path and the host backend) ----------------
     def _merge_into_store(self, keys, starts, ends, vsums, counts) -> None:
@@ -219,7 +257,7 @@ class KeyedWindowEngine:
                 wins.sort(key=lambda w: w.start)
 
     # -- tumbling / sliding ----------------------------------------------------
-    def _process_panes(self, keys, values, ts) -> None:
+    def _process_panes(self, keys, values, ts, pos) -> None:
         size, slide = self.spec.size, self.spec.effective_slide
         panes = -(-size // slide)
         hi = (ts // slide) * slide
@@ -233,12 +271,14 @@ class KeyedWindowEngine:
         k_e = np.repeat(keys, panes).reshape(len(keys), panes)
         v_e = np.repeat(values, panes).reshape(len(keys), panes)
         t_e = np.repeat(ts, panes).reshape(len(keys), panes)
+        p_e = np.repeat(pos, panes).reshape(len(keys), panes)
         late_sel = (valid & late).reshape(-1)
         flat = lambda a: a.reshape(-1)[late_sel]
         self._chunk_late.extend(
             zip(flat(k_e).tolist(), flat(v_e).tolist(), flat(t_e).tolist(),
                 starts.reshape(-1)[late_sel].tolist())
         )
+        self._chunk_late_pos.extend(flat(p_e).tolist())
         live = (valid & ~late).reshape(-1)
         k_l = k_e.reshape(-1)[live]
         v_l = v_e.reshape(-1)[live]
@@ -264,7 +304,7 @@ class KeyedWindowEngine:
             # probe-window overflow (if any) spills to the host tier
             spill = self.table.update(
                 c_keys, c_starts, c_starts + size,
-                partial[:, 0], partial[:, 1], touch_ts=int(ts.max()),
+                partial[:, 0], partial[:, 1], touch_ts=self._chunk_touch,
             )
             if spill is not None:
                 self._merge_into_store(*spill)
@@ -274,7 +314,7 @@ class KeyedWindowEngine:
             )
 
     # -- session ---------------------------------------------------------------
-    def _process_sessions(self, keys, values, ts) -> None:
+    def _process_sessions(self, keys, values, ts, pos) -> None:
         gap = self.spec.gap
         if self.wm is not None:
             late_mask = (ts + gap) <= self.wm
@@ -284,6 +324,7 @@ class KeyedWindowEngine:
             zip(keys[late_mask].tolist(), values[late_mask].tolist(),
                 ts[late_mask].tolist(), ts[late_mask].tolist())
         )
+        self._chunk_late_pos.extend(pos[late_mask].tolist())
         live = ~late_mask
         k, v, t = keys[live], values[live], ts[live]
         if not len(k):
@@ -370,9 +411,29 @@ class KeyedWindowEngine:
             for (end, start, key), (value, count) in sorted(acc.items())
         ]
 
-    def _advance_watermark(self) -> Dict[str, np.ndarray]:
+    def _open_rows(self) -> List[Tuple[int, int, int, int, int]]:
+        """Every open window of both tiers as raw (unmerged) 5-tuples."""
+        rows = [
+            (k, w.start, w.end, w.value, w.count)
+            for slot_dict in self.store.slots
+            for k, wins in slot_dict.items()
+            for w in wins
+        ]
+        if self.table is not None:
+            for key, start, end, value, count, _ in self.table.rows():
+                rows.append((int(key), int(start), int(end), int(value),
+                             int(count)))
+        return rows
+
+    def _advance_watermark(
+        self, ticked: bool = True
+    ) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+        """Advance wm, fire due windows; returns ``(emissions, early)``.
+        ``ticked`` counts this advance toward the early-firing cadence (a
+        shard ticks on every global chunk, even when its sub-chunk was
+        empty, so all shards' provisional firings stay aligned)."""
         if self.max_ts is None:
-            return _emission_dict([])
+            return _emission_dict([]), _emission_dict([])
         new_wm = self.max_ts - self.spec.lateness
         self.wm = new_wm if self.wm is None else max(self.wm, new_wm)
         rows = self._store_due()
@@ -387,27 +448,98 @@ class KeyedWindowEngine:
                 e = self.table.evict_idle(self.wm, self.ttl)
                 # idle rows change tier, not value: merge into the host store
                 self._merge_into_store(*e[:5])
-        return _emission_dict(self._merge_fire(rows))
+        early = _emission_dict([])
+        if ticked:
+            self.wm_ticks += 1
+            if (
+                self.spec.early_every
+                and self.wm_ticks % self.spec.early_every == 0
+            ):
+                # provisional panes: running aggregates of every still-open
+                # window, merged across tiers, in the (end, start, key)
+                # order final emissions fire in — never closes a window
+                early = _emission_dict(self._merge_fire(self._open_rows()))
+        return _emission_dict(self._merge_fire(rows)), early
 
     def flush(self) -> Dict[str, np.ndarray]:
         """End-of-stream: fire every remaining window (watermark -> +inf).
         Not part of the oracle contract — a convenience for applications."""
-        rows = [
-            (k, w.start, w.end, w.value, w.count)
-            for slot_dict in self.store.slots
-            for k, wins in slot_dict.items()
-            for w in wins
-        ]
+        rows = self._open_rows()
         if self.table is not None:
-            for key, start, end, value, count, _ in self.table.rows():
-                rows.append((int(key), int(start), int(end), int(value),
-                             int(count)))
             self.table.clear()
         self.store = KeyedStore(
             self.store.num_slots, self.store.n_workers,
             slot_map=self.store.slot_map,
         )
         return _emission_dict(self._merge_fire(rows))
+
+    # -- row-level slot migration (the §4.2 DMA path) --------------------------
+    def extract_rows(self, slots) -> Tuple[np.ndarray, ...]:
+        """Remove and return the canonical snapshot rows of ``slots`` from
+        BOTH tiers, as ``(key, start, end, value, count, resident, touch)``
+        int64 arrays sorted by ``(key, start, end)``.
+
+        This is the donor half of a slot migration: the canonical rows ARE
+        the migration unit, pulled straight out of the live tiers
+        (host-store slot dicts / device-table ownership mask) — nothing else
+        in the engine is serialized or rebuilt.
+        """
+        slots = np.asarray(slots, np.int64)
+        acc: Dict[Tuple[int, int, int], List[int]] = {}
+        for key, start, end, v, c in self.store.extract_slot_rows(slots):
+            acc[(key, start, end)] = [v, c, 0, 0]
+        if self.table is not None and len(slots):
+            t_key, t_start, t_end, t_value, t_count, t_touch = \
+                self.table.extract_slot_rows(slots, self.store.num_slots)
+            for key, start, end, v, c, touch in zip(
+                t_key.tolist(), t_start.tolist(), t_end.tolist(),
+                t_value.tolist(), t_count.tolist(), t_touch.tolist(),
+            ):
+                cell = (key, start, end)
+                if cell in acc:  # cell split across tiers: merge the partials
+                    acc[cell][0] += v
+                    acc[cell][1] += c
+                    acc[cell][2] = 1
+                    acc[cell][3] = touch
+                else:
+                    acc[cell] = [v, c, 1, touch]
+        rows = sorted(
+            (key, start, end, v, c, res, touch)
+            for (key, start, end), (v, c, res, touch) in acc.items()
+        )
+        cols = np.asarray(rows, np.int64).reshape(-1, 7).T
+        return tuple(cols[i].copy() for i in range(7))
+
+    def ingest_rows(
+        self, key, start, end, value, count, resident, touch,
+    ) -> None:
+        """Adopt canonical rows shipped by a donor shard (the recipient half
+        of a slot migration).  Rows must be canonically sorted (the
+        :meth:`extract_rows` output order).  Table-resident rows re-place
+        into this engine's table (overflow spills to the host tier, which is
+        never semantic); host rows merge into the store."""
+        key = np.asarray(key, np.int64)
+        if not len(key):
+            return
+        start = np.asarray(start, np.int64)
+        end = np.asarray(end, np.int64)
+        value = np.asarray(value, np.int64)
+        count = np.asarray(count, np.int64)
+        touch = np.asarray(touch, np.int64)
+        res = (
+            np.asarray(resident, np.int64) != 0
+            if self.table is not None else np.zeros(len(key), bool)
+        )
+        self._merge_into_store(
+            key[~res], start[~res], end[~res], value[~res], count[~res]
+        )
+        if self.table is not None and res.any():
+            over = self.table.insert_rows(
+                key[res], start[res], end[res], value[res], count[res],
+                touch[res],
+            )
+            if over is not None:  # recipient table full: host tier absorbs
+                self._merge_into_store(*over[:5])
 
     # -- checkpoint round-trip -------------------------------------------------
     def snapshot(self) -> Dict[str, np.ndarray]:
@@ -449,6 +581,7 @@ class KeyedWindowEngine:
             "w_touch": cols[6].copy(),
             "wm": np.int64(self.wm if self.wm is not None else 0),
             "wm_valid": np.int64(self.wm is not None),
+            "wm_ticks": np.int64(self.wm_ticks),
             "max_ts": np.int64(self.max_ts if self.max_ts is not None else 0),
             "max_ts_valid": np.int64(self.max_ts is not None),
             "late_count": np.int64(self.late_count),
@@ -463,8 +596,16 @@ class KeyedWindowEngine:
     def restore(
         cls, spec: WindowSpec, tree: Dict[str, np.ndarray], *,
         impl: str = "segment", backend: str = "host", capacity: int = 1024,
-        ttl: Optional[int] = None, max_probes: int = 16,
+        ttl: Optional[int] = None, max_probes: int = 16, owned_slots=None,
     ) -> "KeyedWindowEngine":
+        """Rebuild an engine from its canonical snapshot.
+
+        ``owned_slots`` is the sharded state plane's **owned-slot filter**:
+        when given, only rows whose key hashes to one of those slots are
+        loaded — a worker shard rehydrates exactly the slice of state the
+        :class:`~repro.keyed.store.SlotMap` assigns it, straight from the
+        shared canonical snapshot, with no per-shard re-serialization.
+        """
         slot_table = np.asarray(tree["slot_table"], np.int32)
         n_workers = int(tree["n_workers"])
         store = KeyedStore(
@@ -488,6 +629,14 @@ class KeyedWindowEngine:
         touch = np.asarray(
             tree.get("w_touch", np.zeros(len(key), np.int64)), np.int64
         )
+        if owned_slots is not None:
+            own = np.isin(
+                hash_to_slot(key, len(slot_table)).astype(np.int64),
+                np.asarray(owned_slots, np.int64),
+            )
+            key, start, end = key[own], start[own], end[own]
+            value, count = value[own], count[own]
+            resident, touch = resident[own], touch[own]
         if eng.table is None:
             resident = np.zeros(len(key), np.int64)
         res = resident != 0
@@ -505,6 +654,7 @@ class KeyedWindowEngine:
                 eng._merge_into_store(*over[:5])
         eng.wm = int(tree["wm"]) if int(tree["wm_valid"]) else None
         eng.max_ts = int(tree["max_ts"]) if int(tree["max_ts_valid"]) else None
+        eng.wm_ticks = int(tree.get("wm_ticks", 0))
         eng.late_count = int(tree["late_count"])
         eng.worker_items = np.asarray(tree["worker_items"], np.int64).copy()
         if eng.table is not None:

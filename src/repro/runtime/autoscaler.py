@@ -111,6 +111,11 @@ class Decision:
     proposed: int
     applied: bool
     reason: str
+    # migration volume of the applied transition (0 when nothing shipped):
+    # scaling decisions are judged against the §4.2 handoff they cost
+    handoff_slots: int = 0
+    handoff_rows: int = 0
+    handoff_bytes: int = 0
 
 
 class Autoscaler:
@@ -210,6 +215,9 @@ class Autoscaler:
             proposed=target,
             applied=rec is not None,
             reason=rec.reason if rec else "noop",
+            handoff_slots=rec.handoff_items if rec else 0,
+            handoff_rows=rec.handoff_rows if rec else 0,
+            handoff_bytes=rec.handoff_bytes if rec else 0,
         )
         self.decisions.append(d)
         return d

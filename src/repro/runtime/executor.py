@@ -44,10 +44,18 @@ def default_mesh_factory(n: int, axis: str) -> Mesh:
 
 @dataclasses.dataclass(frozen=True)
 class ResizeInfo:
-    """What a §4.x transition did (fed to the metrics bus / benchmarks)."""
+    """What a §4.x transition did (fed to the metrics bus / benchmarks).
+
+    ``handoff_items`` counts ownership units (S2 slots); ``handoff_rows`` /
+    ``handoff_bytes`` count the *physical* migration payload when the
+    pattern ships state rows between live shards (the DMA path) — zero for
+    metadata-only transitions.
+    """
 
     protocol: str
     handoff_items: int = 0
+    handoff_rows: int = 0
+    handoff_bytes: int = 0
     detail: str = ""
 
 
@@ -66,6 +74,14 @@ class PatternAdapter:
     #: plain host code: no mesh is built, the step is not jitted, and state
     #: is a host pytree — the executor switches on this flag
     is_host: bool = False
+
+    #: live-state adapters keep resident state (e.g. per-worker engine
+    #: shards) between chunks instead of round-tripping a serialized pytree
+    #: through every step: the executor drives them through the
+    #: attach / step_live / resize_live / snapshot_barrier / detach
+    #: lifecycle, and the canonical serialized form is materialized ONLY at
+    #: checkpoint barriers and explicit state reads
+    has_live_state: bool = False
 
     def validate_degree(self, chunk_size: int, n_w: int) -> None:
         if chunk_size % n_w:
@@ -111,6 +127,31 @@ class PatternAdapter:
 
     def resize(self, state, n_old: int, n_new: int) -> Tuple[Any, ResizeInfo]:
         """Run the pattern's §4.x protocol for a degree change."""
+        raise NotImplementedError
+
+    # -- live-state lifecycle (has_live_state adapters only) -------------------
+    def attach(self, state, n_w: int) -> None:
+        """Build live resident state (e.g. engine shards) from the canonical
+        serialized ``state`` at degree ``n_w``."""
+        raise NotImplementedError
+
+    def detach(self) -> None:
+        """Drop live resident state (the canonical form was already read
+        through :meth:`snapshot_barrier` if it was needed)."""
+        raise NotImplementedError
+
+    def snapshot_barrier(self):
+        """Serialize live state to the canonical form — the ONLY place a
+        live adapter pays serialization cost (checkpoints, state reads)."""
+        raise NotImplementedError
+
+    def step_live(self, chunk):
+        """One chunk against the live resident state; returns the output."""
+        raise NotImplementedError
+
+    def resize_live(self, n_old: int, n_new: int) -> ResizeInfo:
+        """§4.x transition applied directly to live state (row-level
+        migration between shards — no global re-serialization)."""
         raise NotImplementedError
 
 
@@ -309,8 +350,36 @@ class StreamExecutor:
         self._steps: Dict[int, Callable] = {}
         self.degree = degree
         adapter.validate_degree(chunk_size, degree)
+        self._attached = False
         self.state = self.place_state(adapter.init_state())
         self.chunks_done = 0
+
+    # -- state (canonical vs live) --------------------------------------------
+    @property
+    def state(self):
+        """The adapter state in canonical serialized form.  While a
+        live-state adapter is attached, reading this IS a snapshot barrier:
+        the live shards serialize on demand (checkpoints, tests, metrics) —
+        never per chunk."""
+        if self._attached:
+            return self.adapter.snapshot_barrier()
+        return self._state
+
+    @state.setter
+    def state(self, value):
+        # an external state write (checkpoint restore, re-init) invalidates
+        # live shards: drop them and re-attach lazily from the new canonical
+        # state at the next chunk
+        if self._attached:
+            self.adapter.detach()
+            self._attached = False
+        self._state = value
+
+    def snapshot_barrier(self):
+        """Materialize the canonical checkpointable state.  For live-state
+        adapters this is the supervisor's serialization point — the only
+        time resident shards are flattened between resizes."""
+        return self.state
 
     # -- degree / compile caches ---------------------------------------------
     def _mesh(self, n: int) -> Mesh:
@@ -345,20 +414,30 @@ class StreamExecutor:
         return sorted(self._steps)
 
     def set_degree(self, n_new: int, *, reason: str = "") -> Optional[ResizeRecord]:
-        """Apply a §4.x transition to ``n_new``; no-op if already there."""
+        """Apply a §4.x transition to ``n_new``; no-op if already there.
+
+        Live-state adapters resize in place — row-level migration between
+        resident shards — with no detour through the canonical form; others
+        run the serialized-state protocol and re-place."""
         if n_new == self.degree:
             return None
         self.adapter.validate_degree(self.chunk_size, n_new)
         n_old = self.degree
-        self.state, info = self.adapter.resize(self.state, n_old, n_new)
-        self.degree = n_new
-        self.state = self.place_state(self.state)
+        if self._attached:
+            info = self.adapter.resize_live(n_old, n_new)
+            self.degree = n_new
+        else:
+            self._state, info = self.adapter.resize(self._state, n_old, n_new)
+            self.degree = n_new
+            self._state = self.place_state(self._state)
         rec = ResizeRecord(
             t=self.metrics.clock.now(),
             n_old=n_old,
             n_new=n_new,
             protocol=info.protocol,
             handoff_items=info.handoff_items,
+            handoff_rows=info.handoff_rows,
+            handoff_bytes=info.handoff_bytes,
             reason=reason or info.detail,
         )
         self.metrics.record_resize(rec)
@@ -378,7 +457,16 @@ class StreamExecutor:
             # tail chunk: fall back to the largest compatible degree
             self._fit_degree_for(m)
         t0 = self.metrics.clock.now()
-        self.state, out = self._step(self.degree)(self.state, chunk)
+        if self.adapter.has_live_state:
+            if not self._attached:
+                # first chunk (or first after a state write / restore):
+                # hydrate live shards once, then stop serializing per chunk
+                self.adapter.attach(self._state, self.degree)
+                self._attached = True
+                self._state = None
+            out = self.adapter.step_live(chunk)
+        else:
+            self._state, out = self._step(self.degree)(self._state, chunk)
         jax.block_until_ready(out)
         t1 = self.metrics.clock.now()
         self.metrics.record_chunk(

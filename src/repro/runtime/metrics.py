@@ -70,6 +70,8 @@ class ResizeRecord:
     protocol: str          # which §4.x transition ran
     handoff_items: int     # S2 slots moved; 0 for S3/S4/S5
     reason: str
+    handoff_rows: int = 0   # state rows physically shipped (DMA-path moves)
+    handoff_bytes: int = 0  # the same payload in bytes
 
 
 class MetricsBus:
@@ -149,6 +151,18 @@ class MetricsBus:
             return None
         return sum(r.collector_updates for r in recent) / items
 
+    def migration_volume(self) -> Dict[str, int]:
+        """Aggregate §4.2 handoff payload across all resizes: ownership
+        units (slots), physically shipped state rows, and bytes — what the
+        migration benchmark gates on (resize cost must scale with rows
+        moved, not with standing state)."""
+        return {
+            "resizes": len(self.resizes),
+            "slots": sum(r.handoff_items for r in self.resizes),
+            "rows": sum(r.handoff_rows for r in self.resizes),
+            "bytes": sum(r.handoff_bytes for r in self.resizes),
+        }
+
     def expected_service_time(self, n_w: int, t_a: float = 0.0) -> Optional[float]:
         """Paper §2 ``T_s(n_w)`` with the measured ``t_f_hat``: the analytic
         cross-check for what a resize to ``n_w`` should deliver."""
@@ -171,4 +185,5 @@ class MetricsBus:
             "utilization": self.utilization(),
             "collector_pressure": self.collector_pressure(),
             "resizes": len(self.resizes),
+            "migration": self.migration_volume(),
         }

@@ -71,13 +71,16 @@ class Supervisor:
         self.events.append(SupervisorEvent(i, kind, detail))
 
     def _checkpoint(self, i: int) -> None:
+        # snapshot barrier: live-state adapters (resident engine shards)
+        # serialize to the canonical merged form HERE and nowhere else —
+        # checkpoint cadence, not chunk cadence, bounds serialization cost
         ckpt_lib.save(
             self.ckpt_dir,
             i,
-            self.executor.state,
+            self.executor.snapshot_barrier(),
             metadata={"cursor": i, "degree": self.executor.degree},
         )
-        self._log(i, "ckpt", f"state at chunk {i}")
+        self._log(i, "ckpt", f"state at chunk {i} (snapshot barrier)")
 
     def _restore_latest(self) -> int:
         latest = ckpt_lib.latest_step(self.ckpt_dir)
@@ -89,8 +92,11 @@ class Supervisor:
             self._log(0, "restore", "no checkpoint; restarting stream")
             return 0
         state, meta = ckpt_lib.restore(
-            self.ckpt_dir, latest, self.executor.state
+            self.ckpt_dir, latest, self.executor.snapshot_barrier()
         )
+        # assigning through the state setter drops any live shards; the
+        # executor re-attaches them from this canonical snapshot (at the
+        # post-failure degree) on the next processed chunk
         self.executor.state = self.executor.place_state(state)
         self._log(latest, "restore", f"restored checkpoint at chunk {latest}")
         return int(meta["cursor"])

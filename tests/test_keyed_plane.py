@@ -1,0 +1,456 @@
+"""Tests for the sharded keyed state plane (`repro.keyed.runtime`).
+
+Acceptance contract (ISSUE 4): the live per-worker engine shards — items
+routed by ``hash_to_slot``, per-shard emissions merged deterministically,
+resizes done by row-level slot migration between shards — are **bit-exact**
+against :func:`repro.core.semantics.keyed_windows` across mid-stream
+grow/shrink at non-divisor worker counts AND supervisor checkpoint-replay,
+on both state backends.  Plus: the snapshot barrier equals the global
+engine's canonical snapshot, migration accounting (slots/rows/bytes) is
+exact, worker-item tallies fold (not truncate) on shrink, and early-firing
+triggers match the oracle.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import semantics
+from repro.keyed import (
+    KeyedWindowAdapter,
+    KeyedWindowEngine,
+    SlotMap,
+    WindowSpec,
+    fold_worker_items,
+    hash_to_slot,
+    migrated_rows,
+    synthetic_keyed_items,
+)
+from repro.runtime import (
+    Autoscaler,
+    FailurePlan,
+    QueueDepthPolicy,
+    StreamExecutor,
+    Supervisor,
+)
+
+NUM_SLOTS = 20  # degrees 3, 6, 7 do not divide this
+CHUNK = 16
+
+
+def _triples(items):
+    return [(int(r["key"]), int(r["value"]), int(r["ts"])) for r in items]
+
+
+def _rows(d, cols=("key", "start", "end", "value", "count")):
+    return [tuple(int(x) for x in row) for row in zip(*(d[k] for k in cols))]
+
+
+def _emissions(outs, channel="emissions"):
+    return [r for o in outs for r in _rows(o[channel])]
+
+
+def _late(outs):
+    return [
+        r for o in outs for r in _rows(o["late"], ("key", "value", "ts",
+                                                   "start"))
+    ]
+
+
+def _state_rows(state):
+    return [
+        tuple(int(x) for x in r)
+        for r in zip(
+            *(np.asarray(state[k]).tolist()
+              for k in ("w_key", "w_start", "w_end", "w_value", "w_count"))
+        )
+    ]
+
+
+def _spec_for(kind, early_every=0):
+    if kind == "tumbling":
+        return WindowSpec("tumbling", size=7, lateness=3, late_policy="side",
+                          early_every=early_every)
+    if kind == "sliding":
+        return WindowSpec("sliding", size=9, slide=4, lateness=3,
+                          late_policy="side", early_every=early_every)
+    return WindowSpec("session", gap=5, lateness=3, late_policy="side",
+                      early_every=early_every)
+
+
+def _executor(spec, *, degree=2, backend="host", live=True, **table_kw):
+    ad = KeyedWindowAdapter(
+        spec, num_slots=NUM_SLOTS, impl="segment", backend=backend,
+        live=live, **table_kw,
+    )
+    return ad, StreamExecutor(ad, degree=degree, chunk_size=CHUNK)
+
+
+def _chunks(items):
+    return [items[i: i + CHUNK] for i in range(0, len(items), CHUNK)]
+
+
+# ---------------------------------------------------------------------------
+# the sharded plane vs the serial oracle (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+class TestShardedPlaneBitExact:
+    @pytest.mark.parametrize("kind", ["tumbling", "sliding", "session"])
+    @pytest.mark.parametrize(
+        "backend,table_kw",
+        [("host", {}), ("device_table", dict(capacity=32, max_probes=4,
+                                             ttl=6))],
+        ids=["host", "device_table"],
+    )
+    def test_grow_shrink_nondivisor_degrees_bit_exact(
+        self, kind, backend, table_kw
+    ):
+        """Live shards with mid-stream grow (2->3->7) and shrink (7->2) at
+        degrees that do NOT divide num_slots=20, bit-exact vs the serial
+        fold — emissions, early firings, late records, final state."""
+        spec = _spec_for(kind, early_every=2)
+        items = synthetic_keyed_items(
+            11 * CHUNK + 9, num_keys=9, disorder=6, seed=13
+        )
+        ad, ex = _executor(spec, backend=backend, **table_kw)
+        outs = ex.run(_chunks(items), schedule={2: 3, 5: 7, 8: 2})
+        o_em, o_open, o_late, o_early = semantics.keyed_windows(
+            kind, _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        assert ad.shards is not None and len(ad.shards) == 2  # live, post-shrink
+        assert _emissions(outs) == o_em
+        assert _emissions(outs, "early") == o_early
+        assert _late(outs) == o_late
+        assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+        assert int(ex.state["late_count"]) == len(o_late)
+        assert all(
+            r.protocol == "S2-slotmap-handoff" for r in ex.metrics.resizes
+        )
+        # the migration plane actually shipped rows on the metrics bus
+        vol = ex.metrics.migration_volume()
+        assert vol["slots"] > 0 and vol["bytes"] == vol["rows"] * 56
+
+    @settings(max_examples=6, deadline=None)
+    @given(
+        st.sampled_from(["tumbling", "sliding", "session"]),
+        st.integers(0, 10_000),
+        st.integers(0, 10),
+        st.sampled_from([(2, 5), (3, 7), (6, 4)]),
+    )
+    def test_property_random_streams_and_resizes(
+        self, kind, seed, disorder, degrees
+    ):
+        """Property: random keyed streams with bounded disorder and random
+        grow/shrink between non-divisor degrees — the sharded plane agrees
+        with the oracle on every output channel, both backends."""
+        spec = _spec_for(kind, early_every=3)
+        items = synthetic_keyed_items(
+            8 * CHUNK + 5, num_keys=7, disorder=disorder, seed=seed
+        )
+        d0, d1 = degrees
+        o_em, o_open, o_late, o_early = semantics.keyed_windows(
+            kind, _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        for backend, kw in (
+            ("host", {}),
+            ("device_table", dict(capacity=16, max_probes=4, ttl=4)),
+        ):
+            ad, ex = _executor(spec, degree=d0, backend=backend, **kw)
+            outs = ex.run(_chunks(items), schedule={3: d1, 6: d0})
+            assert _emissions(outs) == o_em
+            assert _emissions(outs, "early") == o_early
+            assert _late(outs) == o_late
+            assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+
+    def test_shards_hold_only_owned_rows(self):
+        """Ownership is physical: every row a shard holds hashes to a slot
+        the slot map assigns it, and the shard union is the global state."""
+        spec = _spec_for("sliding")
+        items = synthetic_keyed_items(6 * CHUNK, num_keys=17, disorder=4,
+                                      seed=2)
+        ad, ex = _executor(spec, degree=3, backend="device_table",
+                           capacity=16, max_probes=2)
+        ex.run(_chunks(items), schedule={2: 7})
+        assert len(ad.shards) == 7
+        union = []
+        for w, eng in enumerate(ad.shards):
+            snap = eng.snapshot()
+            keys = np.asarray(snap["w_key"], np.int64)
+            slots = hash_to_slot(keys, NUM_SLOTS).astype(np.int64)
+            owners = np.asarray(ad._slot_map.table, np.int64)[slots]
+            assert (owners == w).all(), f"shard {w} holds foreign rows"
+            union.extend(_state_rows(snap))
+        assert sorted(union) == _state_rows(ex.state)
+
+    def test_barrier_snapshot_equals_global_engine(self):
+        """The merged barrier snapshot is THE canonical snapshot: a single
+        global engine fed the same stream serializes identically (host
+        backend: bit-identical on every key; device backend: identical on
+        all semantic columns — residency is placement, not meaning)."""
+        spec = _spec_for("tumbling", early_every=2)
+        items = synthetic_keyed_items(7 * CHUNK, num_keys=9, disorder=5,
+                                      seed=11)
+        eng = KeyedWindowEngine(spec, num_slots=NUM_SLOTS)
+        for c in _chunks(items):
+            eng.process_chunk(c)
+        want = eng.snapshot()
+        ad, ex = _executor(spec, degree=6)
+        ex.run(_chunks(items))
+        got = ex.snapshot_barrier()
+        # ownership table differs by design (degree 6 vs 1); rows must not
+        want = dict(want, slot_table=got["slot_table"],
+                    n_workers=got["n_workers"],
+                    worker_items=got["worker_items"])
+        assert set(got) == set(want)
+        for k in want:
+            np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+        # the work tallies sum to the same total the global engine counted
+        assert int(np.sum(got["worker_items"])) == int(np.sum(
+            eng.worker_items))
+
+    def test_state_write_detaches_and_reattach_replays(self):
+        """Writing executor.state (what checkpoint restore does) drops the
+        live shards; the next chunk re-attaches from the canonical form and
+        the continuation is bit-exact."""
+        spec = _spec_for("tumbling")
+        items = synthetic_keyed_items(8 * CHUNK, num_keys=8, disorder=4,
+                                      seed=5)
+        chunks = _chunks(items)
+        ad, ex = _executor(spec, degree=3)
+        outs = [ex.process(c) for c in chunks[:4]]
+        mid = ex.state
+        assert ad.shards is not None
+        ex.state = mid  # external state write
+        assert ad.shards is None
+        outs += [ex.process(c) for c in chunks[4:]]
+        o_em, o_open, _ = semantics.keyed_windows(
+            "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        assert _emissions(outs) == o_em
+        assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+
+
+# ---------------------------------------------------------------------------
+# row-level migration accounting
+# ---------------------------------------------------------------------------
+
+class TestRowMigration:
+    def test_live_resize_ships_exactly_the_moved_rows(self):
+        spec = WindowSpec("tumbling", size=64, lateness=4)
+        items = synthetic_keyed_items(CHUNK * 3, num_keys=12, disorder=2,
+                                      seed=1)
+        for backend, kw in (
+            ("host", {}),
+            ("device_table", dict(capacity=64)),
+        ):
+            ad, ex = _executor(spec, backend=backend, **kw)
+            for c in _chunks(items):
+                ex.process(c)
+            before = ex.snapshot_barrier()
+            slot_table = np.asarray(before["slot_table"], np.int32)
+            _, moved = SlotMap(
+                len(slot_table), int(before["n_workers"]), table=slot_table
+            ).rebalance(7)
+            want_rows = migrated_rows(before, moved)
+            rec = ex.set_degree(7)
+            assert rec.protocol == "S2-slotmap-handoff"
+            assert rec.handoff_items == len(moved)
+            assert rec.handoff_rows == want_rows > 0
+            assert rec.handoff_bytes == want_rows * 56
+            assert f"({want_rows} table rows)" in rec.reason
+            # migration moved rows without corrupting them
+            after = ex.snapshot_barrier()
+            assert _state_rows(after) == _state_rows(before)
+
+    def test_autoscaler_decision_carries_migration_volume(self):
+        spec = WindowSpec("tumbling", size=64, lateness=4)
+        items = synthetic_keyed_items(CHUNK * 4, num_keys=12, disorder=2,
+                                      seed=3)
+        ad, ex = _executor(spec, degree=2)
+        for c in _chunks(items):
+            ex.process(c)
+
+        class _Q:
+            depth, high_watermark, low_watermark = 99, 8, 1
+
+        sc = Autoscaler(QueueDepthPolicy(), [2, 3], cooldown_chunks=0)
+        d = sc.maybe_scale(ex, queue=_Q())
+        assert d is not None and d.applied
+        assert d.handoff_slots > 0
+        assert d.handoff_rows > 0
+        assert d.handoff_bytes == d.handoff_rows * 56
+
+    def test_supervisor_checkpoint_replay_over_live_shards(self, tmp_path):
+        """Failure -> rollback to a barrier checkpoint -> replay over
+        re-attached shards: bit-exact vs the oracle on both backends, with
+        early firing on."""
+        for backend, kw in (
+            ("host", {}),
+            ("device_table", dict(capacity=8, max_probes=2, ttl=4)),
+        ):
+            from repro.runtime import BoundedSource
+
+            spec = WindowSpec("tumbling", size=30, lateness=5,
+                              late_policy="side", early_every=2)
+            NCH = 6
+            items = synthetic_keyed_items(CHUNK * NCH, num_keys=7,
+                                          disorder=5, seed=3)
+            src = BoundedSource(items)
+
+            def chunk_fn(i):
+                src.seek(i * CHUNK)
+                return src.take(CHUNK)
+
+            ad = KeyedWindowAdapter(
+                spec, num_slots=10, impl="segment", backend=backend, **kw
+            )
+            ex = StreamExecutor(ad, degree=3, chunk_size=CHUNK)
+            sup = Supervisor(
+                ex, chunk_fn, num_chunks=NCH,
+                ckpt_dir=str(tmp_path / backend), ckpt_every=2,
+                failure_plan=FailurePlan(fail_at=3, recover_after=2),
+            )
+            outs = sup.run()
+            o_em, o_open, o_late, o_early = semantics.keyed_windows(
+                "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+            )
+            ordered = [outs[i] for i in range(NCH)]
+            assert _emissions(ordered) == o_em
+            assert _emissions(ordered, "early") == o_early
+            assert _late(ordered) == o_late
+            assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+            kinds = [e.kind for e in sup.events]
+            assert "failure" in kinds and "shrink" in kinds and "grow" in kinds
+            assert ad.shards is not None  # the replay ran live
+
+
+# ---------------------------------------------------------------------------
+# worker-item tallies fold on shrink (ISSUE satellite — regression)
+# ---------------------------------------------------------------------------
+
+class TestWorkerItemsFold:
+    def test_fold_preserves_sum_and_survivor_tallies(self):
+        sm = SlotMap(NUM_SLOTS, 5)
+        sm2, _ = sm.rebalance(2)
+        old = np.array([10, 20, 30, 40, 50], np.int64)
+        folded = fold_worker_items(old, sm.table, sm2.table, 2)
+        assert folded.sum() == old.sum()  # nothing truncated
+        assert (folded[:2] >= old[:2]).all()  # survivors only gain
+
+    def test_fold_is_proportional_and_deterministic(self):
+        # departing worker 2's four slots split 3 -> w0, 1 -> w1; its tally
+        # follows in proportion (survivors keep their own tallies)
+        old_table = np.array([0, 1, 2, 2, 2, 2], np.int64)
+        new_table = np.array([0, 1, 0, 0, 0, 1], np.int64)
+        folded = fold_worker_items(
+            np.array([5, 9, 100], np.int64), old_table, new_table, 2
+        )
+        assert folded.tolist() == [5 + 75, 9 + 25]
+        again = fold_worker_items(
+            np.array([5, 9, 100], np.int64), old_table, new_table, 2
+        )
+        assert folded.tolist() == again.tolist()
+
+    def test_fold_largest_remainder_conserves_odd_tallies(self):
+        old_table = np.array([0, 1, 1, 1], np.int64)
+        new_table = np.array([0, 0, 0, 0], np.int64)
+        folded = fold_worker_items(
+            np.array([0, 7], np.int64), old_table, new_table, 1
+        )
+        assert folded.tolist() == [7]
+
+    @pytest.mark.parametrize("live", [True, False])
+    def test_attach_at_different_degree_folds_tallies(self, live):
+        """Regression (review finding): hydrating a snapshot written at one
+        degree into an executor at another used to zero worker_items —
+        attach must conserve the work metric like a resize does."""
+        spec = WindowSpec("tumbling", size=7, lateness=3)
+        items = synthetic_keyed_items(4 * CHUNK, num_keys=9, disorder=3,
+                                      seed=6)
+        _, ex4 = _executor(spec, degree=4)
+        for c in _chunks(items):
+            ex4.process(c)
+        snap = ex4.state
+        total = int(np.sum(np.asarray(snap["worker_items"], np.int64)))
+        assert total > 0
+        ad, ex2 = _executor(spec, degree=2, live=live)
+        ex2.state = snap  # degree-4 snapshot into a degree-2 executor
+        out = ex2.process(items[:CHUNK])  # triggers alignment + one chunk
+        del out
+        after = np.asarray(ex2.state["worker_items"], np.int64)
+        assert len(after) == 2
+        assert int(after.sum()) >= total  # folded tallies + the new chunk's
+
+    @pytest.mark.parametrize("live", [True, False])
+    def test_shrink_resize_folds_not_truncates(self, live):
+        """Regression: a 7->2 shrink used to drop workers 2..6's tallies
+        from the snapshot (metrics undercounted the §4.2 work
+        distribution).  Both resize paths must conserve the total."""
+        spec = WindowSpec("tumbling", size=7, lateness=3)
+        items = synthetic_keyed_items(6 * CHUNK, num_keys=11, disorder=3,
+                                      seed=9)
+        ad, ex = _executor(spec, degree=7, live=live)
+        for c in _chunks(items):
+            ex.process(c)
+        before = np.asarray(ex.state["worker_items"], np.int64)
+        assert (before[2:] > 0).any()  # the departing workers did real work
+        ex.set_degree(2)
+        after = np.asarray(ex.state["worker_items"], np.int64)
+        assert len(after) == 2
+        assert after.sum() == before.sum()
+
+
+# ---------------------------------------------------------------------------
+# early-firing triggers (ISSUE satellite)
+# ---------------------------------------------------------------------------
+
+class TestEarlyFiring:
+    @pytest.mark.parametrize("kind", ["tumbling", "sliding", "session"])
+    def test_engine_matches_oracle(self, kind):
+        spec = _spec_for(kind, early_every=2)
+        items = synthetic_keyed_items(6 * CHUNK + 3, num_keys=8, disorder=4,
+                                      seed=21)
+        o_em, o_open, _, o_early = semantics.keyed_windows(
+            kind, _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        eng = KeyedWindowEngine(spec, num_slots=NUM_SLOTS)
+        outs = [eng.process_chunk(c) for c in _chunks(items)]
+        assert _emissions(outs) == o_em
+        assert _emissions(outs, "early") == o_early
+        assert len(o_early) > 0  # the trigger actually fired
+
+    def test_early_firing_is_provisional(self):
+        """Provisional panes never close windows: final emissions equal an
+        early_every=0 run's, and early rows carry the running partials."""
+        base = WindowSpec("tumbling", size=20, lateness=2)
+        early = WindowSpec("tumbling", size=20, lateness=2, early_every=1)
+        items = synthetic_keyed_items(4 * CHUNK, num_keys=5, disorder=2,
+                                      seed=8)
+        e0 = KeyedWindowEngine(base, num_slots=NUM_SLOTS)
+        e1 = KeyedWindowEngine(early, num_slots=NUM_SLOTS)
+        o0 = [e0.process_chunk(c) for c in _chunks(items)]
+        o1 = [e1.process_chunk(c) for c in _chunks(items)]
+        assert _emissions(o0) == _emissions(o1)
+        assert all(len(o["early"]["key"]) == 0 for o in o0)
+        assert any(len(o["early"]["key"]) > 0 for o in o1)
+
+    def test_ticks_survive_snapshot_restore(self):
+        spec = WindowSpec("tumbling", size=30, lateness=2, early_every=3)
+        items = synthetic_keyed_items(7 * CHUNK, num_keys=6, disorder=2,
+                                      seed=4)
+        chunks = _chunks(items)
+        a = KeyedWindowEngine(spec, num_slots=NUM_SLOTS)
+        for c in chunks[:4]:
+            a.process_chunk(c)
+        b = KeyedWindowEngine.restore(spec, a.snapshot())
+        assert b.wm_ticks == a.wm_ticks == 4
+        for c in chunks[4:]:
+            oa, ob = a.process_chunk(c), b.process_chunk(c)
+            assert _rows(oa["early"]) == _rows(ob["early"])
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            WindowSpec("tumbling", size=4, early_every=-1)
+        with pytest.raises(ValueError):
+            semantics.keyed_windows("tumbling", [], size=4, early_every=-2)

@@ -472,6 +472,63 @@ class TestSnapshotRestore:
         kinds = [e.kind for e in sup.events]
         assert "failure" in kinds and "shrink" in kinds and "grow" in kinds
 
+    def test_migrated_rows_empty_table_and_empty_moved_set(self):
+        """Edge cases: no open rows, or a no-op move set, must both report
+        zero handoff volume (and not trip on empty-array hashing)."""
+        spec = WindowSpec("tumbling", size=8, lateness=2)
+        fresh = KeyedWindowEngine(
+            spec, num_slots=NUM_SLOTS, backend="device_table", capacity=16
+        ).snapshot()
+        assert len(fresh["w_key"]) == 0
+        assert migrated_rows(fresh, np.arange(NUM_SLOTS)) == 0
+        eng = KeyedWindowEngine(spec, num_slots=NUM_SLOTS,
+                                backend="device_table", capacity=16)
+        eng.process_chunk(synthetic_keyed_items(CHUNK, num_keys=6, seed=0))
+        populated = eng.snapshot()
+        assert len(populated["w_key"]) > 0
+        assert migrated_rows(populated, np.zeros(0, np.int64)) == 0
+        assert migrated_rows(populated, []) == 0
+
+    def test_migrated_rows_counts_spill_tier_rows(self):
+        """Rows resident in the spill tier ride a slot migration exactly
+        like table-resident rows: migrated_rows counts by slot ownership,
+        never by placement — moving every slot moves every open row."""
+        spec = WindowSpec("tumbling", size=500, lateness=2)
+        eng = KeyedWindowEngine(
+            spec, num_slots=NUM_SLOTS, backend="device_table",
+            capacity=4, max_probes=1,  # force probe-window spill
+        )
+        items = synthetic_keyed_items(4 * CHUNK, num_keys=40, disorder=2,
+                                      seed=6)
+        for i in range(0, len(items), CHUNK):
+            eng.process_chunk(items[i: i + CHUNK])
+        snap = eng.snapshot()
+        assert eng.table.stats.spilled > 0
+        resident = np.asarray(snap["w_resident"], np.int64)
+        assert (resident == 0).any() and (resident == 1).any()  # both tiers
+        assert migrated_rows(snap, np.arange(NUM_SLOTS)) == len(snap["w_key"])
+        # a partial move counts exactly the rows of the moved slots,
+        # regardless of tier
+        from repro.keyed import hash_to_slot
+
+        moved = np.arange(NUM_SLOTS // 2)
+        keys = np.asarray(snap["w_key"], np.int64)
+        slots = np.asarray(hash_to_slot(keys, NUM_SLOTS), np.int64)
+        assert migrated_rows(snap, moved) == int(np.isin(slots, moved).sum())
+
+    def test_validate_degree_bounds(self):
+        """The slot-map adapter accepts every degree in [1, num_slots] at
+        any chunk size, and rejects both out-of-range ends."""
+        ad = KeyedWindowAdapter(
+            WindowSpec("tumbling", size=4), num_slots=NUM_SLOTS
+        )
+        for n_w in (1, 2, NUM_SLOTS - 1, NUM_SLOTS):
+            ad.validate_degree(CHUNK, n_w)       # chunk need not divide
+            ad.validate_degree(CHUNK + 1, n_w)
+        for bad in (0, -1, NUM_SLOTS + 1, 10 * NUM_SLOTS):
+            with pytest.raises(ValueError, match="worker count"):
+                ad.validate_degree(CHUNK, bad)
+
     def test_resize_accounting_reports_migrated_table_rows(self):
         spec = WindowSpec("tumbling", size=64, lateness=4)
         ad = KeyedWindowAdapter(
