@@ -17,7 +17,12 @@ Three gate kinds per suite:
   bands around measured performance, so a *perf* regression — not just a
   correctness flip — fails the build; bands are put on machine-relative
   ratios, which are far more stable across CI runners than absolute
-  wall-clock numbers).
+  wall-clock numbers);
+* ``ratio``  — the quotient of two report values (``num`` / ``den`` paths)
+  must respect a ``min`` floor and/or ``max`` ceiling.  This gates a
+  relative claim ("fused is >= 3x the per-shard loop") *directly*, instead
+  of approximating it with two absolute bands whose centers drift
+  independently across runners.
 
 Values are addressed by dotted paths with list indexing, e.g.
 ``hot_path[2].speedup`` or ``device_table.speedup``.
@@ -31,6 +36,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import re
 import sys
@@ -74,6 +80,25 @@ def check_suite(name: str, spec: dict, root: str) -> list:
         lo, hi = v * (1 - rtol), v * (1 + rtol)
         rows.append(("band", f"{name}:{p}", lo <= got <= hi,
                      f"got {got:.4g}, band [{lo:.4g}, {hi:.4g}]"))
+    for p, rule in spec.get("ratio", {}).items():
+        num = resolve(rep, rule["num"])
+        den = resolve(rep, rule["den"])
+        lo = rule.get("min", float("-inf"))
+        hi = rule.get("max", float("inf"))
+        try:
+            got = num / den
+            degenerate = not math.isfinite(got)
+        except (TypeError, ZeroDivisionError):
+            degenerate = True
+        if degenerate:
+            # fail closed: a zero/inf/NaN ratio means the benchmark is
+            # broken, not infinitely fast — it must not pass a min floor
+            rows.append(("ratio", f"{name}:{p}", False,
+                         f"got {num!r}/{den!r}: degenerate ratio"))
+            continue
+        rows.append(("ratio", f"{name}:{p}", lo <= got <= hi,
+                     f"got {num:.4g}/{den:.4g} = {got:.4g}, "
+                     f"bounds [{lo:.4g}, {hi:.4g}]"))
     return rows
 
 

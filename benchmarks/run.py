@@ -28,6 +28,7 @@ def main() -> None:
         "benchmarks.elastic_runtime",
         "benchmarks.keyed_throughput",
         "benchmarks.keyed_migration",
+        "benchmarks.keyed_fused",
         "benchmarks.kernel_bench",
         "benchmarks.roofline",
     ]

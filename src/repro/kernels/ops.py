@@ -140,6 +140,32 @@ def table_lookup(cell_keys, cell_starts, table_keys, table_starts, table_occ):
     )
 
 
+def batched_table_lookup(
+    cell_owners, cell_keys, cell_starts,
+    row_owners, table_keys, table_starts, table_occ,
+):
+    """Global row of each ``(owner, key, start)`` cell in an all-shard
+    batched window table (shard-major stacked planes; ``n_w * capacity`` =
+    miss) — ONE dispatch for every shard's cells, the fused plane's
+    replacement for ``n_w`` per-shard :func:`table_lookup` calls.  Owner ids
+    are small ints and ship as a single int32 plane; keys/starts split into
+    lo/hi int32 halves exactly like :func:`table_lookup`."""
+    cells = (np.asarray(cell_owners, np.int32),) \
+        + _split_i64(cell_keys) + _split_i64(cell_starts)
+    table = (np.asarray(row_owners, np.int32),) \
+        + _split_i64(table_keys) + _split_i64(table_starts)
+    occ = np.asarray(table_occ, np.int32)
+    mode = _kernel_enabled()
+    if mode is False:
+        return _ref.batched_table_lookup_ref(cells, table, occ)
+    return _ht.batched_table_lookup(
+        tuple(jnp.asarray(c) for c in cells),
+        tuple(jnp.asarray(t) for t in table),
+        jnp.asarray(occ),
+        interpret=mode is None,
+    )
+
+
 @jax.jit
 def scatter_add(table, ids, rows):
     mode = _kernel_enabled()

@@ -121,6 +121,31 @@ def table_lookup_ref(cell_lo_hi, table_lo_hi, occ):
     return jnp.min(jnp.where(m, idx, jnp.int32(capacity)), axis=1)
 
 
+def batched_table_lookup_ref(cell_planes, table_planes, occ):
+    """Five-plane variant of :func:`table_lookup_ref` for the batched
+    all-shard table: the extra leading plane is the shard id (cell owner vs
+    row owner), restricting matches to the owning shard's segment of the
+    stacked ``[n_w * capacity]`` planes.  Returns int32 [n] global rows
+    with ``n_w * capacity`` = miss."""
+    cown, cklo, ckhi, cslo, cshi = (
+        jnp.asarray(a, jnp.int32) for a in cell_planes
+    )
+    town, tklo, tkhi, tslo, tshi = (
+        jnp.asarray(a, jnp.int32) for a in table_planes
+    )
+    total = occ.shape[0]
+    m = (
+        (town[None, :] == cown[:, None])
+        & (tklo[None, :] == cklo[:, None])
+        & (tkhi[None, :] == ckhi[:, None])
+        & (tslo[None, :] == cslo[:, None])
+        & (tshi[None, :] == cshi[:, None])
+        & (jnp.asarray(occ, jnp.int32)[None, :] != 0)
+    )
+    idx = jnp.arange(total, dtype=jnp.int32)[None, :]
+    return jnp.min(jnp.where(m, idx, jnp.int32(total)), axis=1)
+
+
 def moe_gather_ref(x, row_token):
     """x [T, d]; row_token [R] int32 in [0, T] (T = dummy row -> zeros)."""
     x_pad = jnp.concatenate([x, jnp.zeros((1, x.shape[1]), x.dtype)], axis=0)

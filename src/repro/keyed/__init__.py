@@ -21,7 +21,7 @@ Layers (see README.md "Keyed windowed state"):
   serialization only at supervisor checkpoint barriers.
 """
 
-from repro.keyed.kernels import reduce_by_cell, sort_by_cell
+from repro.keyed.kernels import dedup_cells, reduce_by_cell, sort_by_cell
 from repro.keyed.runtime import (
     ITEM_DTYPE,
     KeyedWindowAdapter,
@@ -37,11 +37,17 @@ from repro.keyed.store import (
     hash_to_slot,
     plan_relocation,
 )
-from repro.keyed.table import DeviceWindowTable, TableStats, cell_hash
-from repro.keyed.windows import KeyedWindowEngine, WindowSpec
+from repro.keyed.table import (
+    BatchedWindowTable,
+    DeviceWindowTable,
+    TableStats,
+    cell_hash,
+)
+from repro.keyed.windows import KeyedWindowEngine, WindowSpec, expand_panes
 
 __all__ = [
     "ITEM_DTYPE",
+    "BatchedWindowTable",
     "DeviceWindowTable",
     "KeyedStore",
     "KeyedWindowAdapter",
@@ -51,6 +57,8 @@ __all__ = [
     "WindowSpec",
     "WindowState",
     "cell_hash",
+    "dedup_cells",
+    "expand_panes",
     "fold_worker_items",
     "hash_to_slot",
     "keyed_stream",

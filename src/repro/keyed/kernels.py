@@ -33,6 +33,34 @@ from repro.kernels import ops
 IMPLS = ("segment", "masked")
 
 
+def dedup_cells(keys, starts):
+    """Canonical duplicate-free cell batch over the ``(key, start)``
+    columns.  Returns ``(cells [n, 2] int64, inverse [m])`` with cells in
+    lexicographic ``(key, start)`` order — the canonical order every table
+    mutator requires.  Because ownership is a function of the key, the
+    global canonical order restricted to one shard IS that shard's
+    canonical order, which is what lets the fused all-shard plane dedup a
+    chunk once instead of once per shard.
+
+    Implemented as a lexsort + boundary flags rather than
+    ``np.unique(axis=0)``: the axis-unique path compares rows through a
+    void view (a memcmp per comparison), several times slower than two
+    keyed integer sorts for the same result — this is the hottest single
+    op of the per-chunk ingest.
+    """
+    k = np.asarray(keys, np.int64)
+    s = np.asarray(starts, np.int64)
+    if not len(k):
+        return np.zeros((0, 2), np.int64), np.zeros(0, np.int64)
+    order = np.lexsort((s, k))
+    ks, ss = k[order], s[order]
+    new = np.ones(len(ks), bool)
+    new[1:] = (ks[1:] != ks[:-1]) | (ss[1:] != ss[:-1])
+    inv = np.empty(len(ks), np.int64)
+    inv[order] = np.cumsum(new) - 1
+    return np.stack([ks[new], ss[new]], axis=1), inv
+
+
 def sort_by_cell(cell_ids, values):
     """Stable sort of (cell_ids, values) by cell id — the 'sort-by-key' half
     of the hot path; stability keeps equal-cell rows in stream order."""

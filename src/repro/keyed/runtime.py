@@ -30,6 +30,20 @@ fully-partitioned ownership made physical:
 
 ``live=False`` keeps the legacy snapshot-per-chunk executor path
 (``make_host_step``) — the migration benchmark measures the gap.
+
+PR 5 replaces the per-shard loop inside ``step_live`` with the **fused
+batched shard plane** (``fused=True``, the default): the ``n_w`` per-shard
+device tables stack into one shard-major
+:class:`~repro.keyed.table.BatchedWindowTable` and each chunk executes as
+ONE vectorized ingest→update→fire pass — route once, expand panes once,
+dedup cells once (ownership is a function of the key), a single batched
+lookup + scatter-add dispatch for all shards, and one global watermark
+close — so per-chunk host overhead is ~flat in ``n_w`` instead of linear
+(``benchmarks/keyed_fused.py`` gates the ratio).  The state-independent
+half of the pass (:meth:`KeyedWindowAdapter.prepare_chunk`) doubles as the
+executor's double-buffered pipeline stage: chunk ``k+1`` ingests while
+chunk ``k`` updates the plane.  ``fused=False`` keeps the per-shard loop —
+bit-identical outputs, measurably slower at high degree.
 """
 
 from __future__ import annotations
@@ -38,13 +52,20 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.keyed import kernels as kk
 from repro.keyed.store import (
     SlotMap,
     fold_worker_items,
     hash_to_slot,
 )
-from repro.keyed.table import TableStats
-from repro.keyed.windows import KeyedWindowEngine, WindowSpec
+from repro.keyed.table import BatchedWindowTable, TableStats
+from repro.keyed.windows import (
+    KeyedWindowEngine,
+    WindowSpec,
+    _emission_dict,
+    expand_panes,
+    merge_session_fragment,
+)
 from repro.runtime.executor import PatternAdapter, ResizeInfo
 
 #: structured dtype of one keyed stream item
@@ -94,8 +115,20 @@ def _take(chunk, idx):
 
 def _concat_sorted(parts: List[Dict[str, np.ndarray]], keys) -> Dict:
     """Merge per-shard emission dicts into global ``(end, start, key)``
-    fire order (shards hold disjoint cells, so a sort IS the merge)."""
-    cols = {k: np.concatenate([p[k] for p in parts]) for k in keys}
+    fire order (shards hold disjoint cells, so a sort IS the merge).
+
+    Empty donors short-circuit: on a typical chunk most shards emit
+    nothing, and ``n_w`` zero-length concatenations plus a lexsort per
+    channel was measurable per-chunk overhead that grew with the degree.
+    A single surviving part is already fire-ordered (the engine's
+    ``_merge_fire`` sorts), so it needs no merge at all.
+    """
+    live = [p for p in parts if len(p[keys[0]])]
+    if not live:
+        return {k: np.zeros(0, np.int64) for k in keys}
+    if len(live) == 1:
+        return {k: live[0][k] for k in keys}
+    cols = {k: np.concatenate([p[k] for p in live]) for k in keys}
     order = np.lexsort((cols["key"], cols["start"], cols["end"]))
     return {k: v[order] for k, v in cols.items()}
 
@@ -116,7 +149,8 @@ class KeyedWindowAdapter(PatternAdapter):
     def __init__(self, spec: WindowSpec, *, num_slots: int,
                  impl: str = "segment", backend: str = "host",
                  capacity: int = 1024, ttl: int | None = None,
-                 max_probes: int = 16, live: bool = True):
+                 max_probes: int = 16, live: bool = True,
+                 fused: bool = True):
         self.spec = spec
         self.num_slots = num_slots
         self.impl = impl
@@ -125,8 +159,14 @@ class KeyedWindowAdapter(PatternAdapter):
         self.ttl = ttl
         self.max_probes = max_probes
         self.has_live_state = bool(live)
+        #: fused=True executes each chunk as ONE vectorized pass over all
+        #: shards (route/expand/dedup/reduce once, a single batched table
+        #: update, one global watermark close); fused=False keeps the PR 4
+        #: per-shard loop for contrast — bit-identical outputs either way
+        self.fused = bool(fused)
         self._shards: Optional[List[KeyedWindowEngine]] = None
         self._slot_map: Optional[SlotMap] = None
+        self._batched: Optional[BatchedWindowTable] = None
 
     def _engine_kwargs(self):
         return dict(
@@ -193,10 +233,30 @@ class KeyedWindowAdapter(PatternAdapter):
             shards.append(eng)
         self._shards = shards
         self._slot_map = sm
+        self._rebuild_batched()
+
+    def _rebuild_batched(self) -> None:
+        """(Re)stack the per-shard table slabs into the fused plane's
+        ``(n_w, capacity)`` batched view — after attach and after a resize
+        changes the shard set.  Host backend and session windows have no
+        device tier, so no plane.
+
+        The restack is an ``O(n_w * capacity)`` memcpy regardless of moved
+        rows — a fixed per-resize cost on top of the row-proportional
+        handoff (sequential copy, well under one snapshot barrier; the
+        ``max_resize_vs_barrier`` gate bounds the sum).  An incremental
+        restack that reuses unmoved segments is a known follow-up
+        (ROADMAP)."""
+        self._batched = (
+            BatchedWindowTable([s.table for s in self._shards])
+            if self.fused and self._shards[0].table is not None
+            else None
+        )
 
     def detach(self) -> None:
         self._shards = None
         self._slot_map = None
+        self._batched = None
 
     def snapshot_barrier(self) -> Dict[str, np.ndarray]:
         """Merge per-shard snapshots into THE canonical snapshot: identical
@@ -225,17 +285,47 @@ class KeyedWindowAdapter(PatternAdapter):
             out[k] = np.int64(sum(int(s[k]) for s in snaps))
         return out
 
-    def step_live(self, chunk) -> Dict[str, Dict[str, np.ndarray]]:
-        """Route one chunk to the owning shards and merge their outputs
-        back into the oracle's deterministic order."""
+    # -- per-chunk execution ---------------------------------------------------
+    def prepare_chunk(self, chunk) -> Optional[Dict[str, Any]]:
+        """State-independent host ingest of one chunk — the pipeline stage.
+
+        Everything computed here depends only on the chunk and the
+        immutable spec (column extraction, pane expansion) and NEVER on
+        engine state or the slot map, so the executor's double-buffered
+        pipeline may run it for chunk ``k+1`` while chunk ``k`` is still
+        updating the plane: a resize or state write between the two cannot
+        invalidate it — ownership is resolved per deduped CELL against the
+        *current* slot table at step time (one gather over cells, not
+        items).
+        """
+        if not (self.has_live_state and self.fused):
+            return None
         keys = np.asarray(chunk["key"], np.int64)
-        n_w = len(self._shards)
+        values = np.asarray(chunk["value"], np.int64)
+        ts = np.asarray(chunk["ts"], np.int64)
+        prep: Dict[str, Any] = {
+            "keys": keys, "values": values, "ts": ts,
+            # the chunk's max(ts) is the shared watermark clock: every shard
+            # advances (and ticks) identically, even on an empty sub-chunk
+            "wm_ts": int(ts.max()) if len(keys) else None,
+        }
+        if self.spec.kind != "session" and len(keys):
+            prep["panes"] = expand_panes(
+                self.spec, keys, values, ts,
+                np.arange(len(keys), dtype=np.int64),
+            )
+        return prep
+
+    def step_live(self, chunk, prepared=None) -> Dict[str, Dict[str, np.ndarray]]:
+        """One chunk against the live plane: the fused all-shard pass, or
+        the per-shard loop when ``fused=False`` (bit-identical outputs)."""
+        if self.fused:
+            return self._step_fused(chunk, prepared)
+        keys = np.asarray(chunk["key"], np.int64)
         if len(keys):
             owners = np.asarray(self._slot_map.table, np.int64)[
                 hash_to_slot(keys, self.num_slots).astype(np.int64)
             ]
-            # the chunk's max(ts) is the shared watermark clock: every shard
-            # advances (and ticks) identically, even on an empty sub-chunk
             wm_ts = int(np.asarray(chunk["ts"], np.int64).max())
         else:
             owners = np.zeros(0, np.int64)
@@ -261,6 +351,222 @@ class KeyedWindowAdapter(PatternAdapter):
         order = np.argsort(late_cols.pop("pos"), kind="stable")
         late = {k: v[order] for k, v in late_cols.items()}
         return {"emissions": emissions, "late": late, "early": early}
+
+    # -- the fused all-shard pass ----------------------------------------------
+    def _step_fused(self, chunk, prep) -> Dict[str, Dict[str, np.ndarray]]:
+        """ONE vectorized ingest→update→fire pass for the whole plane.
+
+        The per-shard loop repeated host routing, pane expansion, cell
+        dedup, and kernel dispatch ``n_w`` times per chunk — per-chunk
+        latency *grew* with the degree.  Here the chunk is routed once,
+        expanded once, deduped once (ownership is a function of the key, so
+        the global canonical cell order restricted to a shard IS the
+        shard's canonical order), reduced once, and applied to the
+        :class:`~repro.keyed.table.BatchedWindowTable` with a single
+        lookup + scatter-add dispatch; watermark close / early firings /
+        late records are computed once from the batched due-row extraction.
+        Outputs and the barrier snapshot are bit-identical to the
+        ``fused=False`` loop and to the serial oracle.
+        """
+        if prep is None:
+            prep = self.prepare_chunk(chunk)
+        keys = prep["keys"]
+        wm_ts = prep["wm_ts"]
+        if len(keys):
+            if self.spec.kind == "session":
+                late = self._fused_sessions(prep)
+            else:
+                late = self._fused_panes(prep)
+        else:
+            z = np.zeros(0, np.int64)
+            late = (z, z, z, z)
+        emissions, early = self._fused_advance(
+            wm_ts, ticked=bool(len(keys)) or wm_ts is not None
+        )
+        self._shards[0].late_count += len(late[0])
+        if self.spec.late_policy == "side":
+            late_out = dict(
+                key=late[0], value=late[1], ts=late[2], start=late[3]
+            )
+        else:
+            z = np.zeros(0, np.int64)
+            late_out = dict(key=z, value=z, ts=z, start=z)
+        return {"emissions": emissions, "late": late_out, "early": early}
+
+    def _cell_owners(self, cell_keys: np.ndarray) -> np.ndarray:
+        return np.asarray(self._slot_map.table, np.int64)[
+            hash_to_slot(cell_keys, self.num_slots).astype(np.int64)
+        ]
+
+    def _merge_per_shard(self, owners, keys, starts, ends, values, counts):
+        """Route host-tier rows (spill / TTL eviction / host backend) to
+        their owning shards' stores — one vectorized merge per shard that
+        actually received rows, so physical ownership stays exact."""
+        for w in np.unique(np.asarray(owners, np.int64)).tolist():
+            m = owners == w
+            self._shards[int(w)]._merge_into_store(
+                keys[m], starts[m], ends[m], values[m], counts[m]
+            )
+
+    def _fused_panes(self, prep) -> Tuple[np.ndarray, ...]:
+        """Tumbling/sliding half of the fused pass; returns the late
+        assignment columns ``(key, value, ts, start)`` in stream order."""
+        size = self.spec.size
+        a_key, a_val, a_ts, a_pos, a_start = prep["panes"]
+        del a_pos  # stream order is already global in the fused pass
+        wm = self._shards[0].wm  # the shared watermark clock
+        late_m = (
+            (a_start + size) <= wm if wm is not None
+            else np.zeros(len(a_key), bool)
+        )
+        live = ~late_m
+        k_l, v_l, s_l = a_key[live], a_val[live], a_start[live]
+        if len(k_l):
+            cells, inv = kk.dedup_cells(k_l, s_l)
+            partial = np.asarray(
+                kk.reduce_by_cell(
+                    inv.astype(np.int32),
+                    np.stack([v_l, np.ones_like(v_l)], axis=1),
+                    len(cells),
+                    impl=self.impl,
+                ),
+                np.int64,
+            )
+            c_keys, c_starts = cells[:, 0], cells[:, 1]
+            c_owners = self._cell_owners(c_keys)
+            # the §4.2 work tally: one scatter for all shards (stream-global
+            # counters live on shard 0; the barrier sums per-shard vectors)
+            np.add.at(
+                self._shards[0].worker_items, c_owners, partial[:, 1]
+            )
+            if self._batched is not None:
+                spill = self._batched.update(
+                    c_owners, c_keys, c_starts, c_starts + size,
+                    partial[:, 0], partial[:, 1], touch_ts=prep["wm_ts"],
+                )
+                if spill is not None:
+                    self._merge_per_shard(*spill)
+            else:
+                self._merge_per_shard(
+                    c_owners, c_keys, c_starts, c_starts + size,
+                    partial[:, 0], partial[:, 1],
+                )
+        return (a_key[late_m], a_val[late_m], a_ts[late_m], a_start[late_m])
+
+    def _fused_sessions(self, prep) -> Tuple[np.ndarray, ...]:
+        """Session half of the fused pass: one global sort + fragment
+        reduce (fragments are per-key, keys are shard-disjoint, so global
+        fragmentation equals the union of per-shard fragmentations); the
+        interval merge targets each fragment's owning shard store."""
+        gap = self.spec.gap
+        keys, values, ts = prep["keys"], prep["values"], prep["ts"]
+        wm = self._shards[0].wm
+        late_m = (
+            (ts + gap) <= wm if wm is not None
+            else np.zeros(len(ts), bool)
+        )
+        live = ~late_m
+        k, v, t = keys[live], values[live], ts[live]
+        if len(k):
+            order = np.lexsort((t, k))
+            ks, vs, ts_s = k[order], v[order], t[order]
+            new_frag = np.ones(len(ks), bool)
+            chain = (ks[1:] == ks[:-1]) & ((ts_s[1:] - ts_s[:-1]) < gap)
+            new_frag[1:] = ~chain
+            frag_ids = np.cumsum(new_frag) - 1
+            nfrag = int(frag_ids[-1]) + 1
+            sums = np.asarray(
+                kk.reduce_by_cell(
+                    frag_ids.astype(np.int32),
+                    np.stack([vs, np.ones_like(vs)], axis=1),
+                    nfrag,
+                    impl=self.impl,
+                ),
+                np.int64,
+            )
+            first = np.flatnonzero(new_frag)
+            last = np.append(first[1:], len(ks)) - 1
+            frag_keys = ks[first]
+            frag_lo = ts_s[first]
+            frag_hi = ts_s[last] + gap
+            frag_owners = self._cell_owners(frag_keys)
+            np.add.at(
+                self._shards[0].worker_items, frag_owners, sums[:, 1]
+            )
+            for key, lo, hi, ow, (vsum, cnt) in zip(
+                frag_keys.tolist(), frag_lo.tolist(), frag_hi.tolist(),
+                frag_owners.tolist(), sums.tolist(),
+            ):
+                merge_session_fragment(
+                    self._shards[ow].store, key, lo, hi, vsum, cnt
+                )
+        return (keys[late_m], values[late_m], ts[late_m], ts[late_m])
+
+    def _fused_advance(
+        self, wm_ts: Optional[int], ticked: bool
+    ) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+        """Advance the shared watermark clock on every shard and fire due
+        windows ONCE: one batched due-row extraction over the stacked
+        table planes (plus the host tiers), one global merge into the
+        oracle's ``(end, start, key)`` fire order — no per-shard split and
+        re-merge.  TTL eviction is likewise one sweep, with the owner
+        column routing evicted rows back to their shard's host tier."""
+        shards = self._shards
+        s0 = shards[0]
+        if wm_ts is not None:
+            for eng in shards:
+                eng.max_ts = (
+                    wm_ts if eng.max_ts is None else max(eng.max_ts, wm_ts)
+                )
+        if s0.max_ts is None:
+            return _emission_dict([]), _emission_dict([])
+        new_wm = s0.max_ts - self.spec.lateness
+        for eng in shards:
+            eng.wm = new_wm if eng.wm is None else max(eng.wm, new_wm)
+        wm = s0.wm
+        rows = []
+        for eng in shards:
+            # skip shards whose host tier is empty (the common device-table
+            # case): the slot-dict walk was the residual O(n_w) term
+            if any(eng.store.slots):
+                rows.extend(eng._store_due())
+        if self._batched is not None:
+            d = self._batched.take_due(wm)
+            rows.extend(
+                zip(d[1].tolist(), d[2].tolist(), d[3].tolist(),
+                    d[4].tolist(), d[5].tolist())
+            )
+            if self.ttl is not None:
+                e = self._batched.evict_idle(wm, self.ttl)
+                # idle rows change tier, not value: host stores absorb them
+                self._merge_per_shard(e[0], e[1], e[2], e[3], e[4], e[5])
+        early = _emission_dict([])
+        if ticked:
+            for eng in shards:
+                eng.wm_ticks += 1
+            if (
+                self.spec.early_every
+                and s0.wm_ticks % self.spec.early_every == 0
+            ):
+                # provisional panes: host tiers walk per shard (usually
+                # empty), the device tier is ONE scan of the batched plane
+                open_rows = [
+                    (k, w.start, w.end, w.value, w.count)
+                    for eng in shards if any(eng.store.slots)
+                    for slot_dict in eng.store.slots
+                    for k, wins in slot_dict.items()
+                    for w in wins
+                ]
+                if self._batched is not None:
+                    t = self._batched.open_rows()
+                    open_rows.extend(
+                        zip(t[0].tolist(), t[1].tolist(), t[2].tolist(),
+                            t[3].tolist(), t[4].tolist())
+                    )
+                early = _emission_dict(
+                    KeyedWindowEngine._merge_fire(open_rows)
+                )
+        return _emission_dict(KeyedWindowEngine._merge_fire(rows)), early
 
     def resize_live(self, n_old: int, n_new: int) -> ResizeInfo:
         """Row-level slot migration between live shards.
@@ -293,6 +599,11 @@ class KeyedWindowAdapter(PatternAdapter):
             rows = self._shards[int(d)].extract_rows(
                 moved[old_owner[moved] == d]
             )
+            if not len(rows[0]):
+                # empty donor: its moved slots hold no open windows — skip
+                # the hashing/bucketing entirely so recipients never see
+                # zero-row parts (no (7, 0) concatenations downstream)
+                continue
             rows_moved += len(rows[0])
             row_recips = new_owner[
                 hash_to_slot(rows[0], self.num_slots).astype(np.int64)
@@ -332,6 +643,7 @@ class KeyedWindowAdapter(PatternAdapter):
                 self.num_slots, n_new, table=sm_new.table
             )
         self._slot_map = sm_new
+        self._rebuild_batched()
         return ResizeInfo(
             protocol="S2-slotmap-handoff",
             handoff_items=int(len(moved)),

@@ -46,7 +46,7 @@ Realizations (the CPU perf-cliff rule of :mod:`repro.keyed.kernels`)
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -76,6 +76,56 @@ def cell_hash(keys, starts, capacity: int) -> np.ndarray:
         return (
             (mix * np.uint64(HASH_MULTIPLIER)) % np.uint64(capacity)
         ).astype(np.int64)
+
+
+def _claim_rows(
+    key, start, end, value, count, touch, occ, cand, ck, cs, ce, stats,
+) -> np.ndarray:
+    """The open-addressing claim loop shared by the per-shard table and the
+    batched all-shard plane (the caller supplies the candidate-row matrix
+    ``cand`` — per-shard probe windows or owner-segment-offset global
+    windows — and the column arrays, slab or flattened-plane views).
+
+    Deterministic conflict rule: when several cells want the same empty row
+    in the same round, the first cell in canonical order wins; losers move
+    on to their next in-window empty row in the next round.  Every round
+    places at least the first still-active cell, so the loop is bounded by
+    the batch size.  ONE implementation serves both paths, so the
+    fused==loop placement bit-exactness cannot drift.
+    """
+    n = len(ck)
+    rows = np.full(n, -1, np.int64)
+    if not n:
+        return rows
+    active = np.arange(n)
+    while len(active):
+        free = ~occ[cand[active]]                        # [a, P]
+        has_free = free.any(axis=1)
+        spill = active[~has_free]
+        if len(spill):
+            stats.spilled += len(spill)
+        active = active[has_free]
+        if not len(active):
+            break
+        first = np.argmax(free[has_free], axis=1)
+        want = cand[active, first]
+        # first claimant (canonical cell order) per row wins this round
+        _, winner_pos = np.unique(want, return_index=True)
+        winners = active[winner_pos]
+        w_rows = want[winner_pos]
+        rows[winners] = w_rows
+        occ[w_rows] = True
+        key[w_rows] = ck[winners]
+        start[w_rows] = cs[winners]
+        end[w_rows] = ce[winners]
+        value[w_rows] = 0
+        count[w_rows] = 0
+        touch[w_rows] = _NEVER_TOUCHED
+        stats.inserted += len(winners)
+        keep = np.ones(len(active), bool)
+        keep[winner_pos] = False
+        active = active[keep]
+    return rows
 
 
 @dataclasses.dataclass
@@ -173,48 +223,14 @@ class DeviceWindowTable:
 
     # -- open-addressing claim -------------------------------------------------
     def _claim(self, ck, cs, ce) -> np.ndarray:
-        """Claim a row for each (absent) cell; ``-1`` = spill.
-
-        Deterministic conflict rule: when several cells want the same empty
-        row in the same round, the first cell in canonical order wins; losers
-        move on to their next in-window empty row in the next round.  Every
-        round places at least the first still-active cell, so the loop is
-        bounded by the batch size.
-        """
-        n = len(ck)
-        rows = np.full(n, -1, np.int64)
-        if not n:
-            return rows
-        cand = self._probe_window(cell_hash(ck, cs, self.capacity))
-        active = np.arange(n)
-        while len(active):
-            free = ~self.occ[cand[active]]                    # [a, P]
-            has_free = free.any(axis=1)
-            spill = active[~has_free]
-            if len(spill):
-                self.stats.spilled += len(spill)
-            active = active[has_free]
-            if not len(active):
-                break
-            first = np.argmax(free[has_free], axis=1)
-            want = cand[active, first]
-            # first claimant (canonical cell order) per row wins this round
-            _, winner_pos = np.unique(want, return_index=True)
-            winners = active[winner_pos]
-            w_rows = want[winner_pos]
-            rows[winners] = w_rows
-            self.occ[w_rows] = True
-            self.key[w_rows] = ck[winners]
-            self.start[w_rows] = cs[winners]
-            self.end[w_rows] = ce[winners]
-            self.value[w_rows] = 0
-            self.count[w_rows] = 0
-            self.touch[w_rows] = _NEVER_TOUCHED
-            self.stats.inserted += len(winners)
-            keep = np.ones(len(active), bool)
-            keep[winner_pos] = False
-            active = active[keep]
-        return rows
+        """Claim a row for each (absent) cell; ``-1`` = spill (the shared
+        deterministic claim loop — see :func:`_claim_rows`)."""
+        return _claim_rows(
+            self.key, self.start, self.end, self.value, self.count,
+            self.touch, self.occ,
+            self._probe_window(cell_hash(ck, cs, self.capacity)),
+            ck, cs, ce, self.stats,
+        )
 
     # -- the per-chunk fused update --------------------------------------------
     def update(
@@ -339,3 +355,203 @@ class DeviceWindowTable:
         idx = np.flatnonzero(self.occ)
         slots = hash_to_slot(self.key[idx], num_slots).astype(np.int64)
         return np.asarray(slot_table, np.int64)[slots]
+
+
+# ---------------------------------------------------------------------------
+# batched all-shard plane
+# ---------------------------------------------------------------------------
+
+class BatchedWindowTable:
+    """Shard-major stack of ``n_w`` per-shard tables: one ``(n_w, capacity)``
+    plane per column, driven by whole-chunk batched mutators.
+
+    Construction **adopts** the shards' slabs: each column is stacked into a
+    single ``(n_w, capacity)`` plane and every shard's
+    :class:`DeviceWindowTable` is re-pointed at its row of the stack, so the
+    per-shard tables become *views* — per-shard mutators (the ``fused=False``
+    loop, row-level slot migration) and the batched whole-plane mutators
+    below see the same storage, and the barrier snapshot / extract paths
+    keep working unchanged.
+
+    Addressing: a cell owned by shard ``w`` lives only in global rows
+    ``[w * capacity, (w + 1) * capacity)`` — the shard id is the leading
+    component of the cell address, and the probe window wraps *within* the
+    shard segment (``w * capacity + (home + p) % capacity``).  Claim
+    conflicts are therefore intra-shard only, and because the global
+    canonical cell order restricted to one shard equals that shard's own
+    canonical order, batched claims place every row exactly where the
+    per-shard loop would — the fused and loop paths are bit-identical by
+    construction, not by tolerance.
+
+    Placement stats accumulate on shard 0's :class:`TableStats` (the
+    stream-global counter home the sharded plane already uses); the barrier
+    sums per-shard counters, so fused and loop runs serialize identically.
+    """
+
+    def __init__(self, tables: List[DeviceWindowTable]):
+        if not tables:
+            raise ValueError("need at least one shard table")
+        cap = tables[0].capacity
+        if any(t.capacity != cap or t.max_probes != tables[0].max_probes
+               for t in tables):
+            raise ValueError("shard tables must agree on capacity/max_probes")
+        self.n_shards = len(tables)
+        self.capacity = cap
+        self.max_probes = tables[0].max_probes
+        self.key = np.stack([t.key for t in tables])
+        self.start = np.stack([t.start for t in tables])
+        self.end = np.stack([t.end for t in tables])
+        self.value = np.stack([t.value for t in tables])
+        self.count = np.stack([t.count for t in tables])
+        self.touch = np.stack([t.touch for t in tables])
+        self.occ = np.stack([t.occ for t in tables])
+        for w, t in enumerate(tables):
+            t.key, t.start, t.end = self.key[w], self.start[w], self.end[w]
+            t.value, t.count = self.value[w], self.count[w]
+            t.touch, t.occ = self.touch[w], self.occ[w]
+        # flat views over the C-contiguous stack: global row = w*cap + row
+        self._fkey = self.key.reshape(-1)
+        self._fstart = self.start.reshape(-1)
+        self._fend = self.end.reshape(-1)
+        self._fvalue = self.value.reshape(-1)
+        self._fcount = self.count.reshape(-1)
+        self._ftouch = self.touch.reshape(-1)
+        self._focc = self.occ.reshape(-1)
+        #: shard id of every global row — the kernel's 5th match plane
+        self.row_owner = np.repeat(
+            np.arange(self.n_shards, dtype=np.int32), cap
+        )
+        self.stats = tables[0].stats
+
+    @property
+    def total_rows(self) -> int:
+        return self.n_shards * self.capacity
+
+    def _probe_window(self, owners: np.ndarray, h: np.ndarray) -> np.ndarray:
+        """``[n, P]`` global candidate rows: the per-shard probe window
+        offset into each owner's segment (never crosses a shard boundary)."""
+        probes = (h[:, None] + np.arange(self.max_probes, dtype=np.int64)) \
+            % self.capacity
+        return owners[:, None] * self.capacity + probes
+
+    # -- batched lookup --------------------------------------------------------
+    def lookup(self, owners, cell_keys, cell_starts) -> np.ndarray:
+        """Global row of each ``(owner, key, start)`` cell, ``-1`` = absent.
+
+        One dispatch for ALL shards: the Pallas grid-over-shards full-scan
+        match kernel (:func:`repro.kernels.ops.batched_table_lookup`) when
+        the kernels are active, the numpy probe-window realization on CPU
+        (the XLA-CPU-cliff rule); both return the identical unique row.
+        """
+        ck = np.asarray(cell_keys, np.int64)
+        cs = np.asarray(cell_starts, np.int64)
+        ow = np.asarray(owners, np.int64)
+        if not len(ck):
+            return np.zeros(0, np.int64)
+        from repro.kernels import ops  # late import: keyed.store must not pull jax
+
+        if ops.kernels_active():
+            rows = np.asarray(
+                ops.batched_table_lookup(
+                    ow, ck, cs, self.row_owner, self._fkey, self._fstart,
+                    self._focc,
+                ),
+                np.int64,
+            )
+            return np.where(rows >= self.total_rows, np.int64(-1), rows)
+        cand = self._probe_window(ow, cell_hash(ck, cs, self.capacity))
+        m = (
+            self._focc[cand]
+            & (self._fkey[cand] == ck[:, None])
+            & (self._fstart[cand] == cs[:, None])
+        )
+        first = np.argmax(m, axis=1)
+        hit = m.any(axis=1)
+        rows = cand[np.arange(len(ck)), first]
+        return np.where(hit, rows, np.int64(-1))
+
+    # -- batched open-addressing claim -----------------------------------------
+    def _claim(self, owners, ck, cs, ce) -> np.ndarray:
+        """Claim a global row per (absent) cell; ``-1`` = spill.  THE same
+        claim loop as :meth:`DeviceWindowTable._claim` (shared
+        :func:`_claim_rows`), fed owner-segment candidate windows: probe
+        windows stay inside the owner's segment, so all conflicts are
+        intra-shard and resolve in the shard's own canonical cell order."""
+        return _claim_rows(
+            self._fkey, self._fstart, self._fend, self._fvalue,
+            self._fcount, self._ftouch, self._focc,
+            self._probe_window(owners, cell_hash(ck, cs, self.capacity)),
+            ck, cs, ce, self.stats,
+        )
+
+    # -- the whole-plane fused update ------------------------------------------
+    def update(
+        self, owners, cell_keys, cell_starts, cell_ends, value_sums, counts,
+        touch_ts: int,
+    ) -> Optional[Tuple[np.ndarray, ...]]:
+        """Accumulate ALL shards' per-cell partials in one pass: a single
+        lookup dispatch, a single claim loop, a single scatter-add over the
+        stacked planes.  Cells must be canonically sorted and duplicate-free
+        across the whole batch.  Returns the spill as ``(owner, key, start,
+        end, value, count)`` arrays (``None`` when nothing spilled) — the
+        caller merges each spilled cell into its owner's host tier."""
+        ow = np.asarray(owners, np.int64)
+        ck = np.asarray(cell_keys, np.int64)
+        cs = np.asarray(cell_starts, np.int64)
+        ce = np.asarray(cell_ends, np.int64)
+        vs = np.asarray(value_sums, np.int64)
+        cn = np.asarray(counts, np.int64)
+        if not len(ck):
+            return None
+        rows = self.lookup(ow, ck, cs)
+        miss = rows < 0
+        self.stats.hits += int((~miss).sum())
+        if miss.any():
+            rows[miss] = self._claim(ow[miss], ck[miss], cs[miss], ce[miss])
+        ok = rows >= 0
+        r = rows[ok]
+        np.add.at(self._fvalue, r, vs[ok])
+        np.add.at(self._fcount, r, cn[ok])
+        np.maximum.at(self._ftouch, r, np.int64(touch_ts))
+        if ok.all():
+            return None
+        sp = ~ok
+        return ow[sp], ck[sp], cs[sp], ce[sp], vs[sp], cn[sp]
+
+    # -- batched watermark close / TTL eviction --------------------------------
+    def _extract(self, mask: np.ndarray) -> Tuple[np.ndarray, ...]:
+        """Remove masked rows; returns ``(owner, key, start, end, value,
+        count, touch)`` in global (shard-major) row order — the same order
+        the per-shard loop produces shard by shard."""
+        idx = np.flatnonzero(mask)
+        out = (
+            self.row_owner[idx].astype(np.int64),
+            self._fkey[idx].copy(), self._fstart[idx].copy(),
+            self._fend[idx].copy(), self._fvalue[idx].copy(),
+            self._fcount[idx].copy(), self._ftouch[idx].copy(),
+        )
+        self._focc[idx] = False
+        return out
+
+    def take_due(self, watermark: int) -> Tuple[np.ndarray, ...]:
+        """Remove and return every due row of EVERY shard (``end <=
+        watermark``) in one mask over the stacked planes."""
+        return self._extract(self._focc & (self._fend <= watermark))
+
+    def evict_idle(self, watermark: int, ttl: int) -> Tuple[np.ndarray, ...]:
+        """One TTL sweep over all shards; the owner column routes each
+        evicted row back to its shard's host tier."""
+        out = self._extract(
+            self._focc & (self._ftouch + ttl <= watermark)
+        )
+        self.stats.evicted += len(out[0])
+        return out
+
+    def open_rows(self) -> Tuple[np.ndarray, ...]:
+        """Every occupied row of every shard (global row order), WITHOUT
+        removing — the early-firing provisional-pane source."""
+        idx = np.flatnonzero(self._focc)
+        return (
+            self._fkey[idx], self._fstart[idx], self._fend[idx],
+            self._fvalue[idx], self._fcount[idx],
+        )

@@ -51,6 +51,7 @@ to bit-identical emissions.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
@@ -118,6 +119,57 @@ def _emission_dict(rows: List[Tuple[int, int, int, int, int]]) -> Dict:
     cols = np.asarray(rows, np.int64).T
     return dict(key=cols[0], start=cols[1], end=cols[2], value=cols[3],
                 count=cols[4])
+
+
+def expand_panes(
+    spec: "WindowSpec", keys, values, ts, pos,
+) -> Tuple[np.ndarray, ...]:
+    """Expand items to their tumbling/sliding pane assignments in one
+    vectorized pass: item-major, newest pane first (the serial oracle's
+    per-item order), with the validity mask already applied.
+
+    Returns ``(key, value, ts, pos, start)`` int64 arrays — one row per
+    (item, pane) assignment.  This is the state-independent half of pane
+    processing (late classification needs the watermark), shared by
+    :meth:`KeyedWindowEngine._process_panes` and the fused all-shard plane,
+    and safe to run ahead of the owning chunk under the executor's
+    double-buffered pipeline.
+    """
+    size, slide = spec.size, spec.effective_slide
+    panes = -(-size // slide)
+    hi = (ts // slide) * slide
+    starts = hi[:, None] - np.arange(panes, dtype=np.int64)[None, :] * slide
+    sel = (starts > (ts - size)[:, None]).reshape(-1)
+
+    def rep(a):
+        return np.repeat(a, panes)[sel]
+
+    return rep(keys), rep(values), rep(ts), rep(pos), starts.reshape(-1)[sel]
+
+
+def merge_session_fragment(
+    store: KeyedStore, key: int, lo: int, hi: int, vsum: int, cnt: int,
+) -> None:
+    """Fold one session fragment ``[lo, hi)`` into ``store``'s window list
+    for ``key``: every open window it strictly overlaps (half-open
+    interval rule) is absorbed — bounds extend, aggregates sum — and the
+    key's list stays start-sorted.  Shared by the engine's per-shard
+    session pass and the fused all-shard pass so the two can never drift
+    apart semantically."""
+    wins = store.windows_of(key)
+    merged = WindowState(lo, hi, vsum, cnt)
+    keep = []
+    for w in wins:
+        if w.start < merged.end and merged.start < w.end:
+            merged.start = min(merged.start, w.start)
+            merged.end = max(merged.end, w.end)
+            merged.value += w.value
+            merged.count += w.count
+        else:
+            keep.append(w)
+    keep.append(merged)
+    keep.sort(key=lambda w: w.start)
+    store.slots[store.slot_of(key)][key] = keep
 
 
 class KeyedWindowEngine:
@@ -239,58 +291,83 @@ class KeyedWindowEngine:
 
     # -- host-store merge (the spill path and the host backend) ----------------
     def _merge_into_store(self, keys, starts, ends, vsums, counts) -> None:
-        """Fold per-cell partials into the host store (rows in canonical
-        cell order; per-key window lists stay start-sorted)."""
-        for key, start, end, vsum, cnt in zip(
-            np.asarray(keys).tolist(), np.asarray(starts).tolist(),
-            np.asarray(ends).tolist(), np.asarray(vsums).tolist(),
-            np.asarray(counts).tolist(),
-        ):
+        """Fold per-cell partials into the host store, grouped by key.
+
+        One lexsort groups the rows by ``(key, start)``; each key's
+        start-sorted batch then merges into that key's (start-sorted)
+        window list with a bisect match per row and ONE extend + sort for
+        the new windows — ``O(windows + batch·log windows)`` per key where
+        the old per-row loop paid an ``O(windows)`` linear scan per ROW,
+        which dominated the forced-spill regime.  The sweep stays on
+        Python ints (no per-key numpy calls), so the singleton-batch hits
+        regime of the host backend keeps its old cost.  Duplicate
+        ``(key, start)`` rows are adjacent after the sort and merge on the
+        fly (first-seen ``end`` wins), per-key lists stay start-sorted, and
+        the merged state is bit-identical to the old loop's.
+        """
+        keys = np.asarray(keys, np.int64)
+        n = len(keys)
+        if not n:
+            return
+        order = np.lexsort((np.asarray(starts, np.int64), keys))
+        ks = keys[order].tolist()
+        ss = np.asarray(starts, np.int64)[order].tolist()
+        es = np.asarray(ends, np.int64)[order].tolist()
+        vs = np.asarray(vsums, np.int64)[order].tolist()
+        cs = np.asarray(counts, np.int64)[order].tolist()
+        i = 0
+        while i < n:
+            key = ks[i]
+            j = i + 1
+            while j < n and ks[j] == key:
+                j += 1
             wins = self.store.windows_of(key)
-            for w in wins:
-                if w.start == start:
-                    w.value += vsum
-                    w.count += cnt
-                    break
-            else:
-                wins.append(WindowState(start, end, vsum, cnt))
+            wstarts = [w.start for w in wins]
+            fresh: List[WindowState] = []
+            for r in range(i, j):
+                s = ss[r]
+                p = bisect.bisect_left(wstarts, s)
+                if p < len(wstarts) and wstarts[p] == s:
+                    w = wins[p]
+                    w.value += vs[r]
+                    w.count += cs[r]
+                elif fresh and fresh[-1].start == s:
+                    # batch-internal duplicate: rows are start-sorted, so
+                    # it sits right behind the window it would have found
+                    fresh[-1].value += vs[r]
+                    fresh[-1].count += cs[r]
+                else:
+                    fresh.append(WindowState(s, es[r], vs[r], cs[r]))
+            if fresh:
+                wins.extend(fresh)
                 wins.sort(key=lambda w: w.start)
+            i = j
 
     # -- tumbling / sliding ----------------------------------------------------
     def _process_panes(self, keys, values, ts, pos) -> None:
-        size, slide = self.spec.size, self.spec.effective_slide
-        panes = -(-size // slide)
-        hi = (ts // slide) * slide
-        starts = hi[:, None] - np.arange(panes, dtype=np.int64)[None, :] * slide
-        valid = starts > (ts - size)[:, None]
+        size = self.spec.size
+        a_key, a_val, a_ts, a_pos, a_start = expand_panes(
+            self.spec, keys, values, ts, pos
+        )
         late = (
-            (starts + size) <= self.wm if self.wm is not None
-            else np.zeros_like(valid)
+            (a_start + size) <= self.wm if self.wm is not None
+            else np.zeros(len(a_key), bool)
         )
-        # flatten item-major, newest pane first — the oracle's per-item order
-        k_e = np.repeat(keys, panes).reshape(len(keys), panes)
-        v_e = np.repeat(values, panes).reshape(len(keys), panes)
-        t_e = np.repeat(ts, panes).reshape(len(keys), panes)
-        p_e = np.repeat(pos, panes).reshape(len(keys), panes)
-        late_sel = (valid & late).reshape(-1)
-        flat = lambda a: a.reshape(-1)[late_sel]
         self._chunk_late.extend(
-            zip(flat(k_e).tolist(), flat(v_e).tolist(), flat(t_e).tolist(),
-                starts.reshape(-1)[late_sel].tolist())
+            zip(a_key[late].tolist(), a_val[late].tolist(),
+                a_ts[late].tolist(), a_start[late].tolist())
         )
-        self._chunk_late_pos.extend(flat(p_e).tolist())
-        live = (valid & ~late).reshape(-1)
-        k_l = k_e.reshape(-1)[live]
-        v_l = v_e.reshape(-1)[live]
-        s_l = starts.reshape(-1)[live]
+        self._chunk_late_pos.extend(a_pos[late].tolist())
+        live = ~late
+        k_l = a_key[live]
+        v_l = a_val[live]
+        s_l = a_start[live]
         if not len(k_l):
             return
-        cells, inv = np.unique(
-            np.stack([k_l, s_l], axis=1), axis=0, return_inverse=True
-        )
+        cells, inv = kk.dedup_cells(k_l, s_l)
         partial = np.asarray(
             kk.reduce_by_cell(
-                inv.reshape(-1).astype(np.int32),
+                inv.astype(np.int32),
                 np.stack([v_l, np.ones_like(v_l)], axis=1),
                 len(cells),
                 impl=self.impl,
@@ -355,21 +432,7 @@ class KeyedWindowEngine:
             frag_keys.tolist(), frag_lo.tolist(), frag_hi.tolist(),
             sums.tolist(),
         ):
-            wins = self.store.windows_of(key)
-            merged = WindowState(lo, hi, vsum, cnt)
-            keep = []
-            for w in wins:
-                # strict overlap of half-open [start, end) intervals
-                if w.start < merged.end and merged.start < w.end:
-                    merged.start = min(merged.start, w.start)
-                    merged.end = max(merged.end, w.end)
-                    merged.value += w.value
-                    merged.count += w.count
-                else:
-                    keep.append(w)
-            keep.append(merged)
-            keep.sort(key=lambda w: w.start)
-            self.store.slots[self.store.slot_of(key)][key] = keep
+            merge_session_fragment(self.store, key, lo, hi, vsum, cnt)
 
     def _account_work(self, cell_keys, per_cell_counts) -> None:
         slots = hash_to_slot(cell_keys, self.store.num_slots).astype(np.int64)

@@ -24,6 +24,7 @@ correctness contract `tests/test_runtime.py` proves bit-exactly.
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
@@ -145,8 +146,21 @@ class PatternAdapter:
         live adapter pays serialization cost (checkpoints, state reads)."""
         raise NotImplementedError
 
-    def step_live(self, chunk):
-        """One chunk against the live resident state; returns the output."""
+    def prepare_chunk(self, chunk):
+        """Optional state-independent host ingest for ``has_live_state``
+        adapters (column extraction, pane expansion): the
+        executor's double-buffered chunk pipeline runs it for chunk ``k+1``
+        on a background worker while chunk ``k`` is still updating live
+        state.  MUST depend only on the chunk and immutable configuration
+        — never on adapter state — so that a resize or state write between
+        the two chunks cannot invalidate it.  Returns an opaque object
+        handed back to :meth:`step_live` (None = nothing to prepare)."""
+        return None
+
+    def step_live(self, chunk, prepared=None):
+        """One chunk against the live resident state; returns the output.
+        ``prepared`` is this chunk's :meth:`prepare_chunk` result when the
+        pipeline ran it ahead (None: the step ingests inline)."""
         raise NotImplementedError
 
     def resize_live(self, n_old: int, n_new: int) -> ResizeInfo:
@@ -339,6 +353,7 @@ class StreamExecutor:
         mesh_factory: Callable[[int, str], Mesh] = default_mesh_factory,
         metrics: Optional[MetricsBus] = None,
         max_degree: Optional[int] = None,
+        pipeline: bool = False,
     ):
         self.adapter = adapter
         self.axis = axis
@@ -350,6 +365,15 @@ class StreamExecutor:
         self._steps: Dict[int, Callable] = {}
         self.degree = degree
         adapter.validate_degree(chunk_size, degree)
+        #: overlap host ingest of chunk k+1 with chunk k's live update in
+        #: :meth:`run` (live-state adapters only; checkpoint barriers and
+        #: resizes drain the in-flight prepare first).  Opt-in: the overlap
+        #: pays when the plane update releases the host (async device
+        #: dispatch); on the CPU-only realization both stages fight for the
+        #: GIL and the benchmark shows it roughly break-even-to-negative —
+        #: ``benchmarks/keyed_fused.py`` records the measured ratio
+        self.pipeline = pipeline
+        self._inflight: Optional[concurrent.futures.Future] = None
         self._attached = False
         self.state = self.place_state(adapter.init_state())
         self.chunks_done = 0
@@ -370,15 +394,26 @@ class StreamExecutor:
         # an external state write (checkpoint restore, re-init) invalidates
         # live shards: drop them and re-attach lazily from the new canonical
         # state at the next chunk
+        self._drain_pipeline()
         if self._attached:
             self.adapter.detach()
             self._attached = False
         self._state = value
 
+    def _drain_pipeline(self) -> None:
+        """Pipeline barrier: wait out an in-flight chunk prepare before a
+        resize, checkpoint barrier, or state write proceeds.  Prepares are
+        state-independent by contract, so this is lifecycle hygiene (and
+        deterministic exception delivery), not a data-race fix."""
+        if self._inflight is not None:
+            concurrent.futures.wait([self._inflight])
+
     def snapshot_barrier(self):
         """Materialize the canonical checkpointable state.  For live-state
         adapters this is the supervisor's serialization point — the only
-        time resident shards are flattened between resizes."""
+        time resident shards are flattened between resizes.  Drains the
+        chunk pipeline first: a checkpoint is a full barrier."""
+        self._drain_pipeline()
         return self.state
 
     # -- degree / compile caches ---------------------------------------------
@@ -422,6 +457,7 @@ class StreamExecutor:
         if n_new == self.degree:
             return None
         self.adapter.validate_degree(self.chunk_size, n_new)
+        self._drain_pipeline()  # resizes are pipeline barriers
         n_old = self.degree
         if self._attached:
             info = self.adapter.resize_live(n_old, n_new)
@@ -444,12 +480,14 @@ class StreamExecutor:
         return rec
 
     # -- execution ------------------------------------------------------------
-    def process(self, chunk, *, queue_depth: int = 0):
+    def process(self, chunk, *, queue_depth: int = 0, prepared=None):
         """Run one chunk at the current degree; returns the chunk output.
 
         A chunk may be a single array, a pytree of arrays (leading axis =
         stream order), or — for host adapters — a structured record array
-        (e.g. keyed stream items)."""
+        (e.g. keyed stream items).  ``prepared`` is this chunk's
+        :meth:`PatternAdapter.prepare_chunk` result when :meth:`run`'s
+        pipeline computed it ahead of time."""
         if not self.adapter.is_host:
             chunk = jax.tree.map(jnp.asarray, chunk)
         m = int(len(jax.tree.leaves(chunk)[0]))
@@ -464,7 +502,7 @@ class StreamExecutor:
                 self.adapter.attach(self._state, self.degree)
                 self._attached = True
                 self._state = None
-            out = self.adapter.step_live(chunk)
+            out = self.adapter.step_live(chunk, prepared=prepared)
         else:
             self._state, out = self._step(self.degree)(self._state, chunk)
         jax.block_until_ready(out)
@@ -513,14 +551,53 @@ class StreamExecutor:
     ) -> List[Any]:
         """Process an iterable of chunks.  ``schedule`` maps chunk index ->
         degree (explicit resize points, used by tests/benchmarks);
-        ``autoscaler`` is consulted between chunks when given."""
+        ``autoscaler`` is consulted between chunks when given.
+
+        For live-state adapters (with :attr:`pipeline` on) this is the
+        **double-buffered chunk pipeline**: chunk ``k+1``'s
+        state-independent host ingest (:meth:`PatternAdapter.prepare_chunk`)
+        runs on a one-deep background worker while chunk ``k`` updates the
+        live plane; resizes and checkpoint barriers drain the in-flight
+        prepare first.  Outputs are bit-identical with the pipeline off —
+        the prepare stage is pure by contract.
+        """
         outs: List[Any] = []
-        for i, chunk in enumerate(chunks):
-            if schedule and i in schedule:
-                self.set_degree(schedule[i], reason=f"schedule@chunk{i}")
-            if autoscaler is not None:
-                autoscaler.maybe_scale(self, queue=queue)
-            outs.append(self.process(chunk))
+        if not (self.pipeline and self.adapter.has_live_state):
+            # no lookahead off-pipeline: a lazy chunk source (generator fed
+            # by a live queue) must see chunk k processed before chunk k+1
+            # is pulled
+            for i, chunk in enumerate(chunks):
+                if schedule and i in schedule:
+                    self.set_degree(schedule[i], reason=f"schedule@chunk{i}")
+                if autoscaler is not None:
+                    autoscaler.maybe_scale(self, queue=queue)
+                outs.append(self.process(chunk))
+            return outs
+        pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        done = object()  # sentinel: a None CHUNK must not truncate the run
+        try:
+            it = iter(chunks)
+            cur = next(it, done)
+            prepared = None
+            i = 0
+            while cur is not done:
+                nxt = next(it, done)
+                fut = None
+                if nxt is not done:
+                    fut = pool.submit(self.adapter.prepare_chunk, nxt)
+                    self._inflight = fut
+                if schedule and i in schedule:
+                    self.set_degree(schedule[i], reason=f"schedule@chunk{i}")
+                if autoscaler is not None:
+                    autoscaler.maybe_scale(self, queue=queue)
+                outs.append(self.process(cur, prepared=prepared))
+                prepared = fut.result() if fut is not None else None
+                self._inflight = None
+                cur = nxt
+                i += 1
+        finally:
+            self._inflight = None
+            pool.shutdown(wait=True)
         return outs
 
 

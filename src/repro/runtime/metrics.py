@@ -155,12 +155,17 @@ class MetricsBus:
         """Aggregate §4.2 handoff payload across all resizes: ownership
         units (slots), physically shipped state rows, and bytes — what the
         migration benchmark gates on (resize cost must scale with rows
-        moved, not with standing state)."""
+        moved, not with standing state).  ``handoffs`` counts only the
+        resizes that physically shipped rows: a resize over an empty plane
+        (or one whose moved slots hold no open windows) is a metadata-only
+        transition and must not read as a DMA-path handoff."""
+        shipped = [r for r in self.resizes if r.handoff_rows > 0]
         return {
             "resizes": len(self.resizes),
+            "handoffs": len(shipped),
             "slots": sum(r.handoff_items for r in self.resizes),
-            "rows": sum(r.handoff_rows for r in self.resizes),
-            "bytes": sum(r.handoff_bytes for r in self.resizes),
+            "rows": sum(r.handoff_rows for r in shipped),
+            "bytes": sum(r.handoff_bytes for r in shipped),
         }
 
     def expected_service_time(self, n_w: int, t_a: float = 0.0) -> Optional[float]:

@@ -1,0 +1,466 @@
+"""Tests for the fused batched shard plane (ISSUE 5).
+
+Acceptance contract: the fused all-shard pass — route once, expand panes
+once, dedup cells once, ONE batched table lookup + scatter dispatch, one
+global watermark close — is **bit-identical** to the ``fused=False``
+per-shard loop AND to :func:`repro.core.semantics.keyed_windows` across
+mid-stream grow/shrink at non-divisor degrees, forced spill / TTL
+eviction, and early-firing provisional panes, on both state backends.
+Plus the satellites: the vectorized host-store merge is bit-exact, the
+zero-row donor path allocates/ships nothing, and the executor's
+double-buffered chunk pipeline changes no output.
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import semantics
+from repro.keyed import (
+    BatchedWindowTable,
+    DeviceWindowTable,
+    KeyedWindowAdapter,
+    KeyedWindowEngine,
+    WindowSpec,
+    synthetic_keyed_items,
+)
+from repro.runtime import StreamExecutor
+
+NUM_SLOTS = 20  # degrees 3, 6, 7 do not divide this
+CHUNK = 16
+
+
+def _triples(items):
+    return [(int(r["key"]), int(r["value"]), int(r["ts"])) for r in items]
+
+
+def _rows(d, cols=("key", "start", "end", "value", "count")):
+    return [tuple(int(x) for x in row) for row in zip(*(d[k] for k in cols))]
+
+
+def _emissions(outs, channel="emissions"):
+    return [r for o in outs for r in _rows(o[channel])]
+
+
+def _late(outs):
+    return [
+        r for o in outs for r in _rows(o["late"], ("key", "value", "ts",
+                                                   "start"))
+    ]
+
+
+def _state_rows(state):
+    return [
+        tuple(int(x) for x in r)
+        for r in zip(
+            *(np.asarray(state[k]).tolist()
+              for k in ("w_key", "w_start", "w_end", "w_value", "w_count"))
+        )
+    ]
+
+
+def _spec_for(kind, early_every=0):
+    if kind == "tumbling":
+        return WindowSpec("tumbling", size=7, lateness=3, late_policy="side",
+                          early_every=early_every)
+    if kind == "sliding":
+        return WindowSpec("sliding", size=9, slide=4, lateness=3,
+                          late_policy="side", early_every=early_every)
+    return WindowSpec("session", gap=5, lateness=3, late_policy="side",
+                      early_every=early_every)
+
+
+def _chunks(items):
+    return [items[i: i + CHUNK] for i in range(0, len(items), CHUNK)]
+
+
+def _assert_outputs_equal(outs_a, outs_b):
+    assert len(outs_a) == len(outs_b)
+    for a, b in zip(outs_a, outs_b):
+        for ch in ("emissions", "late", "early"):
+            assert set(a[ch]) == set(b[ch])
+            for k in a[ch]:
+                np.testing.assert_array_equal(
+                    a[ch][k], b[ch][k], err_msg=f"{ch}/{k}"
+                )
+
+
+def _assert_states_equal(sa, sb):
+    assert set(sa) == set(sb)
+    for k in sa:
+        np.testing.assert_array_equal(sa[k], sb[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# fused plane == per-shard loop == serial oracle (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+class TestFusedBitExact:
+    @settings(max_examples=6, deadline=None)
+    @given(
+        st.sampled_from(["tumbling", "sliding", "session"]),
+        st.integers(0, 10_000),
+        st.integers(0, 10),
+        st.sampled_from([(2, 5), (3, 7), (6, 4)]),
+    )
+    def test_property_fused_equals_loop_and_oracle(
+        self, kind, seed, disorder, degrees
+    ):
+        """Property: random keyed streams with bounded disorder, grow AND
+        shrink at non-divisor degrees, early firing on, a device table tiny
+        enough to force spill and TTL eviction — the fused pass agrees with
+        the per-shard loop bit-for-bit on every output channel and every
+        barrier-snapshot key, and both match the serial oracle."""
+        spec = _spec_for(kind, early_every=3)
+        items = synthetic_keyed_items(
+            8 * CHUNK + 5, num_keys=7, disorder=disorder, seed=seed
+        )
+        d0, d1 = degrees
+        o_em, o_open, o_late, o_early = semantics.keyed_windows(
+            kind, _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        for backend, kw in (
+            ("host", {}),
+            ("device_table", dict(capacity=16, max_probes=2, ttl=4)),
+        ):
+            outs, states = {}, {}
+            for fused in (True, False):
+                ad = KeyedWindowAdapter(
+                    spec, num_slots=NUM_SLOTS, impl="segment",
+                    backend=backend, fused=fused, **kw,
+                )
+                ex = StreamExecutor(ad, degree=d0, chunk_size=CHUNK)
+                outs[fused] = ex.run(_chunks(items), schedule={3: d1, 6: d0})
+                states[fused] = ex.state
+            assert _emissions(outs[True]) == o_em
+            assert _emissions(outs[True], "early") == o_early
+            assert _late(outs[True]) == o_late
+            assert _state_rows(states[True]) == [tuple(t) for t in o_open]
+            _assert_outputs_equal(outs[True], outs[False])
+            _assert_states_equal(states[True], states[False])
+
+    def test_fused_shards_hold_only_owned_rows(self):
+        """The fused pass preserves physical ownership: after batched
+        updates, spills, and a resize, every row a shard holds hashes to a
+        slot the slot map assigns it."""
+        from repro.keyed import hash_to_slot
+
+        spec = _spec_for("sliding")
+        items = synthetic_keyed_items(6 * CHUNK, num_keys=17, disorder=4,
+                                      seed=2)
+        ad = KeyedWindowAdapter(
+            spec, num_slots=NUM_SLOTS, backend="device_table",
+            capacity=16, max_probes=2, fused=True,
+        )
+        ex = StreamExecutor(ad, degree=3, chunk_size=CHUNK)
+        ex.run(_chunks(items), schedule={2: 7})
+        union = []
+        for w, eng in enumerate(ad.shards):
+            snap = eng.snapshot()
+            keys = np.asarray(snap["w_key"], np.int64)
+            slots = hash_to_slot(keys, NUM_SLOTS).astype(np.int64)
+            owners = np.asarray(ad._slot_map.table, np.int64)[slots]
+            assert (owners == w).all(), f"shard {w} holds foreign rows"
+            union.extend(_state_rows(snap))
+        assert sorted(union) == _state_rows(ex.state)
+
+    def test_batched_plane_rebuilds_across_resize(self):
+        """grow/shrink re-stacks the batched view over the new shard set;
+        the plane keeps matching the per-shard tables row for row."""
+        spec = WindowSpec("tumbling", size=64, lateness=4)
+        items = synthetic_keyed_items(CHUNK * 3, num_keys=12, disorder=2,
+                                      seed=1)
+        ad = KeyedWindowAdapter(
+            spec, num_slots=NUM_SLOTS, backend="device_table", capacity=64,
+        )
+        ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+        for c in _chunks(items):
+            ex.process(c)
+        sem_keys = ("w_key", "w_start", "w_end", "w_value", "w_count",
+                    "wm", "wm_valid", "wm_ticks", "max_ts", "max_ts_valid",
+                    "late_count")
+        for n_new in (7, 3):
+            before = ex.snapshot_barrier()
+            ex.set_degree(n_new)
+            assert ad._batched is not None
+            assert ad._batched.n_shards == n_new
+            # plane storage IS the shard tables' storage
+            for eng in ad.shards:
+                assert eng.table.key.base is ad._batched.key
+            after = ex.snapshot_barrier()
+            # semantic state rides the migration unchanged (placement
+            # counters legitimately move: re-insertion counts as inserts)
+            for k in sem_keys:
+                np.testing.assert_array_equal(after[k], before[k],
+                                              err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# batched table + lookup kernel
+# ---------------------------------------------------------------------------
+
+class TestBatchedWindowTable:
+    def test_plane_is_a_view_over_shard_tables(self):
+        tables = [DeviceWindowTable(8, max_probes=4) for _ in range(2)]
+        bt = BatchedWindowTable(tables)
+        bt.update(
+            np.array([1], np.int64), np.array([42], np.int64),
+            np.array([0], np.int64), np.array([4], np.int64),
+            np.array([5], np.int64), np.array([1], np.int64), touch_ts=3,
+        )
+        # the batched write landed in shard 1's (view) table only
+        assert tables[0].occupancy == 0 and tables[1].occupancy == 1
+        row = tables[1].rows()[0]
+        assert row[0] == 42 and row[3] == 5 and row[5] == 3
+        # and a per-shard mutation is visible to the plane
+        tables[1].clear()
+        assert not bt._focc.any()
+
+    def test_batched_lookup_paths_agree(self):
+        """numpy probe window, jnp reference, and the Pallas interpret
+        kernel return the identical global row for hits and the miss
+        sentinel for absent cells — negative keys/starts included."""
+        from repro.kernels import ops
+
+        tables = [DeviceWindowTable(8, max_probes=4) for _ in range(3)]
+        bt = BatchedWindowTable(tables)
+        owners = np.array([0, 0, 1, 2, 2, 2], np.int64)
+        keys = np.array([-5, 3, 9, 7, 2, 11], np.int64)
+        starts = np.array([0, 4, 4, 8, 0, -12], np.int64)
+        spill = bt.update(owners, keys, starts, starts + 4,
+                          np.ones(6, np.int64), np.ones(6, np.int64),
+                          touch_ts=5)
+        assert spill is None
+        q_own = np.concatenate([owners, [1, 0]])
+        q_key = np.concatenate([keys, [999, -5]])
+        q_start = np.concatenate([starts, [0, 4]])  # two absent cells
+        got = {}
+        for mode in ("ref", "interpret"):
+            ops.use_kernels(mode)
+            try:
+                got[mode] = np.asarray(
+                    ops.batched_table_lookup(
+                        q_own, q_key, q_start, bt.row_owner, bt._fkey,
+                        bt._fstart, bt._focc,
+                    ),
+                    np.int64,
+                )
+            finally:
+                ops.use_kernels("auto")
+        np.testing.assert_array_equal(got["ref"], got["interpret"])
+        assert (got["ref"][-2:] == bt.total_rows).all()
+        probe = bt.lookup(q_own, q_key, q_start)
+        np.testing.assert_array_equal(
+            probe,
+            np.where(got["ref"] >= bt.total_rows, np.int64(-1), got["ref"]),
+        )
+        # every hit resolves inside the owner's shard segment
+        hits = probe[:-2]
+        assert (hits // bt.capacity == owners).all()
+
+
+# ---------------------------------------------------------------------------
+# vectorized host-store merge (ISSUE satellite — regression)
+# ---------------------------------------------------------------------------
+
+class TestMergeIntoStore:
+    def test_vectorized_merge_matches_scalar_reference(self):
+        """The grouped np.unique/searchsorted merge must produce exactly
+        the state the old per-row loop built: accumulate on (key, start)
+        match, first-seen end wins, per-key lists start-sorted."""
+        rng = np.random.default_rng(3)
+        eng = KeyedWindowEngine(
+            WindowSpec("tumbling", size=8), num_slots=NUM_SLOTS
+        )
+        ref = {}
+        for _ in range(25):
+            m = int(rng.integers(1, 12))
+            keys = rng.integers(-4, 5, m)
+            starts = rng.integers(0, 4, m) * 8
+            vals = rng.integers(0, 10, m)
+            cnts = rng.integers(1, 4, m)
+            eng._merge_into_store(keys, starts, starts + 8, vals, cnts)
+            for k, s, v, c in zip(keys.tolist(), starts.tolist(),
+                                  vals.tolist(), cnts.tolist()):
+                cell = ref.setdefault((k, s), [s + 8, 0, 0])
+                cell[1] += v
+                cell[2] += c
+        got = sorted(
+            (k, w.start, w.end, w.value, w.count)
+            for sd in eng.store.slots for k, wins in sd.items() for w in wins
+        )
+        want = sorted(
+            (k, s, e, v, c) for (k, s), (e, v, c) in ref.items()
+        )
+        assert got == want
+        for sd in eng.store.slots:
+            for wins in sd.values():
+                assert [w.start for w in wins] == sorted(
+                    w.start for w in wins
+                )
+
+    def test_forced_spill_eviction_engine_matches_oracle(self):
+        """Under a pathological table (capacity 4, 1 probe, ttl 1) every
+        chunk exercises the vectorized spill/evict merge — emissions and
+        final state must stay bit-exact against the serial oracle."""
+        spec = WindowSpec("sliding", size=9, slide=4, lateness=3,
+                          late_policy="side")
+        items = synthetic_keyed_items(7 * CHUNK, num_keys=11, disorder=4,
+                                      seed=17)
+        eng = KeyedWindowEngine(
+            spec, num_slots=NUM_SLOTS, backend="device_table", capacity=4,
+            max_probes=1, ttl=1,
+        )
+        outs = [eng.process_chunk(c) for c in _chunks(items)]
+        assert eng.table.stats.spilled > 0 or eng.table.stats.evicted > 0
+        o_em, o_open, o_late = semantics.keyed_windows(
+            "sliding", _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        assert _emissions(outs) == o_em
+        snap = eng.snapshot()
+        assert _state_rows(snap) == [tuple(t) for t in o_open]
+
+
+# ---------------------------------------------------------------------------
+# zero-row donors (ISSUE satellite — regression)
+# ---------------------------------------------------------------------------
+
+class TestZeroRowDonor:
+    def test_live_resize_with_empty_plane_ships_nothing(self, monkeypatch):
+        """A live resize whose moved slots hold no open windows must not
+        build any per-recipient batch: recipients' ingest_rows is never
+        called, and the ResizeInfo reports zero rows/bytes."""
+        spec = WindowSpec("tumbling", size=8, lateness=0)
+        ad = KeyedWindowAdapter(
+            spec, num_slots=NUM_SLOTS, backend="device_table", capacity=32,
+        )
+        ad.attach(ad.init_state(), 2)
+        calls = []
+        monkeypatch.setattr(
+            KeyedWindowEngine, "ingest_rows",
+            lambda self, *a, **k: calls.append(a),
+        )
+        info = ad.resize_live(2, 5)
+        assert calls == []
+        assert info.handoff_items > 0  # ownership still moved
+        assert info.handoff_rows == 0 and info.handoff_bytes == 0
+
+    def test_no_handoff_record_on_bus_when_rows_zero(self):
+        """migration_volume must not report a DMA-path handoff for a
+        metadata-only resize (rows == 0)."""
+        spec = WindowSpec("tumbling", size=1 << 30, lateness=0)
+        ad = KeyedWindowAdapter(spec, num_slots=NUM_SLOTS)
+        ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+        rec = ex.set_degree(5)  # empty canonical state: nothing to ship
+        assert rec.handoff_rows == 0
+        vol = ex.metrics.migration_volume()
+        assert vol["resizes"] == 1
+        assert vol["handoffs"] == 0
+        assert vol["rows"] == 0 and vol["bytes"] == 0
+        # ...and a resize that DOES ship rows is counted
+        items = synthetic_keyed_items(4 * CHUNK, num_keys=60, seed=4)
+        for c in _chunks(items):
+            ex.process(c)
+        rec = ex.set_degree(3)
+        assert rec.handoff_rows > 0
+        vol = ex.metrics.migration_volume()
+        assert vol["resizes"] == 2 and vol["handoffs"] == 1
+        assert vol["bytes"] == vol["rows"] * 56
+
+    def test_concat_sorted_empty_and_single_part_fast_paths(self):
+        from repro.keyed.runtime import _concat_sorted
+
+        keys = ("key", "start", "end", "value", "count")
+        empty = {k: np.zeros(0, np.int64) for k in keys}
+        out = _concat_sorted([empty, empty, empty], keys)
+        assert all(len(out[k]) == 0 for k in keys)
+        one = {k: np.array([1, 2], np.int64) for k in keys}
+        out = _concat_sorted([empty, one, empty], keys)
+        for k in keys:
+            np.testing.assert_array_equal(out[k], one[k])
+
+
+# ---------------------------------------------------------------------------
+# double-buffered chunk pipeline
+# ---------------------------------------------------------------------------
+
+class TestChunkPipeline:
+    def test_pipeline_outputs_bit_identical(self):
+        """The pipeline overlaps prepare(k+1) with step(k); outputs, resize
+        behavior, and the final barrier snapshot must be bit-identical to
+        the unpipelined run (the prepare stage is pure by contract)."""
+        spec = _spec_for("sliding", early_every=2)
+        items = synthetic_keyed_items(9 * CHUNK, num_keys=9, disorder=5,
+                                      seed=7)
+        res = {}
+        for pipe in (True, False):
+            ad = KeyedWindowAdapter(
+                spec, num_slots=NUM_SLOTS, backend="device_table",
+                capacity=32, max_probes=4, ttl=6,
+            )
+            ex = StreamExecutor(ad, degree=3, chunk_size=CHUNK,
+                                pipeline=pipe)
+            res[pipe] = (ex.run(_chunks(items), schedule={2: 7, 5: 2}),
+                         ex.state)
+        _assert_outputs_equal(res[True][0], res[False][0])
+        _assert_states_equal(res[True][1], res[False][1])
+
+    def test_prepared_ingest_survives_resize(self):
+        """prepare_chunk is state-independent: a prep computed BEFORE a
+        resize must drive the post-resize step to the identical output
+        (ownership resolves against the current slot table at step time)."""
+        spec = _spec_for("tumbling")
+        items = synthetic_keyed_items(4 * CHUNK, num_keys=8, disorder=3,
+                                      seed=2)
+        chunks = _chunks(items)
+        outs = {}
+        for stale in (True, False):
+            ad = KeyedWindowAdapter(spec, num_slots=NUM_SLOTS)
+            ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK,
+                                pipeline=False)
+            ex.process(chunks[0])
+            prep = ad.prepare_chunk(chunks[1]) if stale else None
+            ex.set_degree(7)
+            outs[stale] = ex.process(chunks[1], prepared=prep)
+        for ch in ("emissions", "late", "early"):
+            for k in outs[True][ch]:
+                np.testing.assert_array_equal(
+                    outs[True][ch][k], outs[False][ch][k]
+                )
+
+    def test_mid_run_barrier_under_pipeline(self):
+        """A checkpoint barrier (state read) between pipelined chunks
+        drains the in-flight prepare and serializes the canonical form;
+        the continuation stays oracle-exact."""
+        spec = _spec_for("tumbling", early_every=2)
+        items = synthetic_keyed_items(6 * CHUNK, num_keys=8, disorder=4,
+                                      seed=9)
+        chunks = _chunks(items)
+        ad = KeyedWindowAdapter(spec, num_slots=NUM_SLOTS)
+        ex = StreamExecutor(ad, degree=3, chunk_size=CHUNK)
+        outs = ex.run(chunks[:3])
+        snap = ex.snapshot_barrier()
+        assert ex._inflight is None
+        assert int(snap["wm_ticks"]) == 3
+        outs += ex.run(chunks[3:])
+        o_em, o_open, _, o_early = semantics.keyed_windows(
+            "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        assert _emissions(outs) == o_em
+        assert _emissions(outs, "early") == o_early
+        assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+
+    def test_tail_chunk_under_pipeline(self):
+        """A short tail chunk forces a degree fit mid-pipeline; outputs
+        stay oracle-exact."""
+        spec = _spec_for("tumbling")
+        items = synthetic_keyed_items(3 * CHUNK + 5, num_keys=6,
+                                      disorder=2, seed=11)
+        ad = KeyedWindowAdapter(spec, num_slots=NUM_SLOTS)
+        ex = StreamExecutor(ad, degree=4, chunk_size=CHUNK)
+        outs = ex.run(_chunks(items))
+        o_em, o_open, _ = semantics.keyed_windows(
+            "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+        )[:3]
+        assert _emissions(outs) == o_em
+        assert _state_rows(ex.state) == [tuple(t) for t in o_open]
