@@ -14,7 +14,12 @@ Two planes, cross-validated:
   reporting per-phase wall throughput, resize cost, and the compile-cache
   hit when a degree is revisited.
 
-Emits ``results/elastic_runtime.json`` plus the aggregator's CSV rows.
+Emits ``results/elastic_runtime.json`` plus the aggregator's CSV rows, and
+— because the simulated plane runs under a logical clock — a
+byte-deterministic Perfetto-loadable trace
+(``results/elastic_runtime_trace.json``: chunk spans, resize instants, a
+degree counter track) with its flat metrics snapshot
+(``results/elastic_runtime_metrics.json``).
 
 Run:  PYTHONPATH=src python -m benchmarks.elastic_runtime
 """
@@ -41,13 +46,23 @@ ENVELOPE_TOL = 0.10              # post-resize throughput within 10% of model
 
 
 def _simulated_phases():
-    """Drive the runtime control plane over the discrete-event data plane."""
+    """Drive the runtime control plane over the discrete-event data plane.
+
+    The control plane runs under a shared :class:`LogicalClock`, so the
+    exported Chrome trace (chunk spans, resize instants, degree counter
+    track) is deterministic byte-for-byte — the trace artifact is itself a
+    regression surface, not just a debugging aid.
+    """
     from repro.core import analytics, simulator
+    from repro.obs import MetricsRegistry, Tracer
     from repro.runtime.metrics import ChunkRecord, LogicalClock, MetricsBus, ResizeRecord
     from repro.core.patterns import PartitionedState
 
     clock = LogicalClock()
     bus = MetricsBus(clock=clock)
+    tracer = Tracer(clock=clock)   # one clock: spans line up with the bus
+    registry = MetricsRegistry()
+    service_hist = registry.histogram("elastic.chunk_service_s")
     degree = 2
     phases = []          # one entry per constant-degree phase
     current = {"degree": degree, "items": 0, "t0": 0.0, "chunks": 0}
@@ -79,18 +94,20 @@ def _simulated_phases():
         if i in SCHEDULE:
             close_phase()
             n_new = SCHEDULE[i]
+            handoff = PartitionedState.handoff_volume(64, degree, n_new)
             bus.record_resize(
                 ResizeRecord(
                     t=clock.now(),
                     n_old=degree,
                     n_new=n_new,
                     protocol="S2-block-handoff",
-                    handoff_items=PartitionedState.handoff_volume(
-                        64, degree, n_new
-                    ),
+                    handoff_items=handoff,
                     reason=f"schedule@chunk{i}",
                 )
             )
+            tracer.instant("resize", n_old=degree, n_new=n_new,
+                           protocol="S2-block-handoff",
+                           handoff_items=handoff)
             degree = n_new
             current = {"degree": degree, "items": 0, "t0": clock.now(),
                        "chunks": 0}
@@ -98,7 +115,10 @@ def _simulated_phases():
             CHUNK, degree, T_F, T_ACC, flush_every=FLUSH_EVERY
         )
         t0 = clock.now()
-        clock.advance(res.completion_time)
+        tracer.counter("degree", n_w=degree)
+        with tracer.span("chunk", m=CHUNK, degree=degree):
+            clock.advance(res.completion_time)
+        service_hist.record(res.completion_time)
         bus.record_chunk(
             ChunkRecord(
                 t_start=t0,
@@ -112,7 +132,14 @@ def _simulated_phases():
         current["items"] += CHUNK
         current["chunks"] += 1
     close_phase()
-    return phases, bus
+    for k, p in enumerate(phases):
+        registry.gauge(f"elastic.phase{k}.throughput").set(
+            p["throughput_measured"]
+        )
+        registry.gauge(f"elastic.phase{k}.n_w").set(p["degree"])
+    registry.counter("elastic.chunks").inc(NUM_CHUNKS)
+    registry.counter("elastic.resizes").inc(len(bus.resizes))
+    return phases, bus, tracer, registry
 
 
 def _real_spmd_rows():
@@ -145,7 +172,9 @@ def _real_spmd_rows():
 
 
 def run() -> list[Row]:
-    phases, bus = _simulated_phases()
+    from repro.obs import write_metrics, write_trace
+
+    phases, bus, tracer, registry = _simulated_phases()
     rows = []
     for k, p in enumerate(phases):
         rows.append(
@@ -181,8 +210,19 @@ def run() -> list[Row]:
         ],
         "all_within_envelope": all(p["within_envelope"] for p in phases),
         "real_spmd": spmd_records,
+        "trace_path": "results/elastic_runtime_trace.json",
+        "metrics_path": "results/elastic_runtime_metrics.json",
     }
     os.makedirs(os.path.join(_REPO, "results"), exist_ok=True)
+    # logical clock -> the trace artifact is byte-deterministic
+    write_trace(
+        os.path.join(_REPO, "results", "elastic_runtime_trace.json"),
+        tracer, registry=registry, process_name="elastic_runtime",
+    )
+    write_metrics(
+        os.path.join(_REPO, "results", "elastic_runtime_metrics.json"),
+        registry,
+    )
     out = os.path.join(_REPO, "results", "elastic_runtime.json")
     with open(out, "w") as f:
         json.dump(report, f, indent=2)

@@ -8,7 +8,9 @@ adds no serialized overhead as the degree grows.  The fused plane
 (``KeyedWindowAdapter(fused=True)``) executes each chunk as ONE vectorized
 pass over the :class:`~repro.keyed.table.BatchedWindowTable`.
 
-Three measurements, one JSON report (``results/keyed_fused.json``):
+Four measurements, one JSON report (``results/keyed_fused.json``) plus the
+Perfetto-loadable trace + metrics-snapshot artifacts
+(``results/keyed_fused_trace.json`` / ``_metrics.json``):
 
 * **Degree sweep** — per-chunk host time, fused vs the per-shard loop
   (``fused=False``), at ``n_w in {1, 2, 4, 8, 16}`` over the same standing
@@ -21,6 +23,11 @@ Three measurements, one JSON report (``results/keyed_fused.json``):
   double-buffered prepare pipeline on vs off at ``n_w=8`` (reported, not
   gated: thread overlap is CI-runner-sensitive; correctness of the
   pipeline is gated in tier-1 tests instead).
+* **Tracing** — per-chunk cost with a live tracer vs the default no-op
+  (``tracing_overhead``, gated ceiling), the six stage spans' share of the
+  ``chunk`` spans (``stage_coverage``, gated to within 10%), and exact
+  agreement of the exported per-shard health gauges with the engine's own
+  counters (``gauges_match_counters``, gated exact).
 * **Correctness rides along** — a resized fused run (grow + shrink at
   non-divisor degrees, early firing, forced spill + TTL) must match the
   serial oracle (``resized_run_matches_oracle``).
@@ -69,7 +76,8 @@ def _spec():
     return WindowSpec("tumbling", size=1 << 40, lateness=8)
 
 
-def _make_executor(fused: bool, degree: int, *, pipeline: bool = False):
+def _make_executor(fused: bool, degree: int, *, pipeline: bool = False,
+                   tracer=None):
     from repro.keyed import KeyedWindowAdapter
     from repro.runtime import StreamExecutor
 
@@ -78,7 +86,8 @@ def _make_executor(fused: bool, degree: int, *, pipeline: bool = False):
         backend="device_table", capacity=CAPACITY, fused=fused,
     )
     return ad, StreamExecutor(
-        ad, degree=degree, chunk_size=CHUNK, pipeline=pipeline
+        ad, degree=degree, chunk_size=CHUNK, pipeline=pipeline,
+        tracer=tracer,
     )
 
 
@@ -187,6 +196,100 @@ def _pipeline_section():
     }
 
 
+STAGES = ("route", "expand_panes", "dedup_cells", "reduce_by_cell",
+          "table_update", "close")
+
+
+def _tracing_section():
+    """Observability cost + fidelity at the gated degree, one pass:
+
+    * **overhead** — per-chunk host time with a live :class:`~repro.obs.
+      Tracer` vs the default :data:`~repro.obs.NULL_TRACER`, interleaved
+      best-of-N like the sweep (``tracing_overhead`` is gated with a
+      ceiling); the NULL-tracer side also cross-checks the sweep's fused
+      number (``disabled_overhead`` ~ 1.0), which the committed PR 5 band
+      on ``sweep[3].speedup`` then transitively bounds against the
+      pre-instrumentation baseline;
+    * **coverage** — the six fused-stage spans must sum to within 10% of
+      the enclosing ``chunk`` spans (``stage_coverage``, gated min/max):
+      the trace accounts for the chunk service time, it does not decorate
+      a fraction of it;
+    * **fidelity** — per-shard health gauges exported off the live plane
+      must equal the engine's own counters exactly
+      (``gauges_match_counters``, gated exact);
+    * **artifacts** — the Perfetto-loadable trace (with the metrics
+      snapshot riding along) and the flat metrics snapshot, which CI
+      uploads next to the JSON reports.
+    """
+    from repro.obs import MetricsRegistry, Tracer, write_metrics, write_trace
+
+    items = _standing_stream(WARM_CHUNKS + MEAS_CHUNKS)
+    chunks = [items[i: i + CHUNK] for i in range(0, len(items), CHUNK)]
+    tracer = Tracer()
+    execs, ads, per_mode = {}, {}, {}
+    for traced in (True, False):
+        ad, ex = _make_executor(
+            True, GATED_DEGREE, tracer=tracer if traced else None
+        )
+        for c in chunks[:WARM_CHUNKS]:
+            ex.process(c)
+        execs[traced], ads[traced], per_mode[traced] = ex, ad, None
+    tracer.reset()  # drop warmup spans: coverage is over measured chunks
+    for _ in range(REPEATS):
+        for traced in (True, False):
+            ex = execs[traced]
+            t0 = time.perf_counter()
+            for c in chunks[WARM_CHUNKS:]:
+                ex.process(c)
+            dt = 1e6 * (time.perf_counter() - t0) / MEAS_CHUNKS
+            best = per_mode[traced]
+            per_mode[traced] = dt if best is None else min(best, dt)
+
+    totals = tracer.total_by_name()
+    stage_us = {s: 1e6 * totals[s][1] for s in STAGES if s in totals}
+    chunk_us = 1e6 * totals["chunk"][1]
+    coverage = sum(stage_us.values()) / chunk_us
+
+    # gauges vs engine counters: exact equality, not tolerance
+    ad = ads[True]
+    registry = MetricsRegistry()
+    ad.export_health(registry)
+    snap = registry.snapshot()
+    occ = ad._batched.per_shard_occupancy()
+    barrier = execs[True].snapshot_barrier()
+    gauges_match = all(
+        snap["gauges"][f"keyed.shard{w}.occupancy"] == int(occ[w])
+        and snap["gauges"][f"keyed.shard{w}.spill_rows"]
+        == ad.shards[w].store.num_rows()
+        for w in range(GATED_DEGREE)
+    ) and all(
+        snap["counters"][f"keyed.table.{k}"] == int(barrier[f"t_{k}"])
+        for k in ("inserted", "hits", "spilled", "evicted")
+    )
+
+    os.makedirs(os.path.join(_REPO, "results"), exist_ok=True)
+    trace_path = os.path.join(_REPO, "results", "keyed_fused_trace.json")
+    write_trace(trace_path, tracer, registry=registry,
+                process_name="keyed_fused")
+    write_metrics(
+        os.path.join(_REPO, "results", "keyed_fused_metrics.json"), registry
+    )
+    return {
+        "degree": GATED_DEGREE,
+        "traced_us_per_chunk": per_mode[True],
+        "untraced_us_per_chunk": per_mode[False],
+        "tracing_overhead": per_mode[True] / per_mode[False],
+        "stage_coverage": coverage,
+        "stage_totals_us": stage_us,
+        "chunk_total_us": chunk_us,
+        "spans": sum(c for c, _ in totals.values()),
+        "dropped_events": tracer.dropped,
+        "gauges_match_counters": gauges_match,
+        "trace_path": "results/keyed_fused_trace.json",
+        "metrics_path": "results/keyed_fused_metrics.json",
+    }
+
+
 def _oracle_section():
     """A resized fused run (non-divisor degrees, early firing, forced
     spill + TTL) vs the serial oracle — the correctness flag the gates
@@ -240,6 +343,7 @@ def _oracle_section():
 def run() -> list[Row]:
     rows, sweep = _sweep_section()
     pipeline = _pipeline_section()
+    tracing = _tracing_section()
     exact = _oracle_section()
     gated = sweep["sweep"][DEGREES.index(GATED_DEGREE)]
     report = {
@@ -250,6 +354,7 @@ def run() -> list[Row]:
         },
         **sweep,
         "pipeline": pipeline,
+        "tracing": tracing,
         "resized_run_matches_oracle": exact,
     }
     os.makedirs(os.path.join(_REPO, "results"), exist_ok=True)
@@ -264,6 +369,9 @@ def run() -> list[Row]:
                 fused_flat=sweep["fused_flat"],
                 loop_growth=sweep["loop_growth"],
                 pipeline_speedup=pipeline["pipeline_speedup"],
+                tracing_overhead=tracing["tracing_overhead"],
+                stage_coverage=tracing["stage_coverage"],
+                gauges_exact=int(tracing["gauges_match_counters"]),
                 oracle_exact=int(exact),
                 path="results/keyed_fused.json",
             ),

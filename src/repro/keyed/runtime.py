@@ -285,6 +285,65 @@ class KeyedWindowAdapter(PatternAdapter):
             out[k] = np.int64(sum(int(s[k]) for s in snaps))
         return out
 
+    # -- observability ---------------------------------------------------------
+    def export_health(self, registry) -> None:
+        """Publish the live plane's health to a
+        :class:`~repro.obs.metrics.MetricsRegistry`: per-shard gauges
+        (device-tier occupancy / load factor / probe-distance stats,
+        resident vs spill-tier row counts) plus the stream-global placement
+        counters (inserted / hits / spilled / evicted, summed across shards
+        exactly as the barrier snapshot sums them).  Values are read
+        straight off the engine structures, so the gauges match the
+        engine's own counters by construction — the benchmark asserts the
+        equality exactly."""
+        if self._shards is None:
+            return
+        n_w = len(self._shards)
+        registry.gauge("keyed.plane.n_shards").set(n_w)
+        healths = (
+            self._batched.per_shard_health()
+            if self._batched is not None
+            else [
+                s.table.health() if s.table is not None else None
+                for s in self._shards
+            ]
+        )
+        total_resident = 0
+        total_spill = 0
+        for w, eng in enumerate(self._shards):
+            h = healths[w]
+            spill_rows = eng.store.num_rows()
+            resident = h["occupancy"] if h is not None else 0
+            total_resident += resident
+            total_spill += spill_rows
+            g = registry.gauge
+            g(f"keyed.shard{w}.resident_rows").set(resident)
+            g(f"keyed.shard{w}.spill_rows").set(spill_rows)
+            if h is not None:
+                g(f"keyed.shard{w}.occupancy").set(h["occupancy"])
+                g(f"keyed.shard{w}.load_factor").set(h["load_factor"])
+                g(f"keyed.shard{w}.probe_mean").set(h["probe_mean"])
+                g(f"keyed.shard{w}.probe_max").set(h["probe_max"])
+        registry.gauge("keyed.plane.resident_rows").set(total_resident)
+        registry.gauge("keyed.plane.spill_rows").set(total_spill)
+        # stream-global placement counters: per-shard stats sum exactly as
+        # the barrier does (shard 0 carries the fused-pass accumulation)
+        stats = [
+            s.table.stats for s in self._shards if s.table is not None
+        ]
+        for attr, name in (
+            ("inserted", "keyed.table.inserted"),
+            ("hits", "keyed.table.hits"),
+            ("spilled", "keyed.table.spilled"),
+            ("evicted", "keyed.table.evicted"),
+        ):
+            registry.counter(name).value = sum(
+                getattr(st, attr) for st in stats
+            )
+        registry.counter("keyed.late").value = sum(
+            s.late_count for s in self._shards
+        )
+
     # -- per-chunk execution ---------------------------------------------------
     def prepare_chunk(self, chunk) -> Optional[Dict[str, Any]]:
         """State-independent host ingest of one chunk — the pipeline stage.
@@ -300,45 +359,49 @@ class KeyedWindowAdapter(PatternAdapter):
         """
         if not (self.has_live_state and self.fused):
             return None
-        keys = np.asarray(chunk["key"], np.int64)
-        values = np.asarray(chunk["value"], np.int64)
-        ts = np.asarray(chunk["ts"], np.int64)
-        prep: Dict[str, Any] = {
-            "keys": keys, "values": values, "ts": ts,
-            # the chunk's max(ts) is the shared watermark clock: every shard
-            # advances (and ticks) identically, even on an empty sub-chunk
-            "wm_ts": int(ts.max()) if len(keys) else None,
-        }
-        if self.spec.kind != "session" and len(keys):
-            prep["panes"] = expand_panes(
-                self.spec, keys, values, ts,
-                np.arange(len(keys), dtype=np.int64),
-            )
-        return prep
+        with self.tracer.span("expand_panes"):
+            keys = np.asarray(chunk["key"], np.int64)
+            values = np.asarray(chunk["value"], np.int64)
+            ts = np.asarray(chunk["ts"], np.int64)
+            prep: Dict[str, Any] = {
+                "keys": keys, "values": values, "ts": ts,
+                # the chunk's max(ts) is the shared watermark clock: every
+                # shard advances (and ticks) identically, even on an empty
+                # sub-chunk
+                "wm_ts": int(ts.max()) if len(keys) else None,
+            }
+            if self.spec.kind != "session" and len(keys):
+                prep["panes"] = expand_panes(
+                    self.spec, keys, values, ts,
+                    np.arange(len(keys), dtype=np.int64),
+                )
+            return prep
 
     def step_live(self, chunk, prepared=None) -> Dict[str, Dict[str, np.ndarray]]:
         """One chunk against the live plane: the fused all-shard pass, or
         the per-shard loop when ``fused=False`` (bit-identical outputs)."""
         if self.fused:
             return self._step_fused(chunk, prepared)
-        keys = np.asarray(chunk["key"], np.int64)
-        if len(keys):
-            owners = np.asarray(self._slot_map.table, np.int64)[
-                hash_to_slot(keys, self.num_slots).astype(np.int64)
-            ]
-            wm_ts = int(np.asarray(chunk["ts"], np.int64).max())
-        else:
-            owners = np.zeros(0, np.int64)
-            wm_ts = None
+        with self.tracer.span("route"):
+            keys = np.asarray(chunk["key"], np.int64)
+            if len(keys):
+                owners = np.asarray(self._slot_map.table, np.int64)[
+                    hash_to_slot(keys, self.num_slots).astype(np.int64)
+                ]
+                wm_ts = int(np.asarray(chunk["ts"], np.int64).max())
+            else:
+                owners = np.zeros(0, np.int64)
+                wm_ts = None
         em_parts, early_parts, late_parts = [], [], []
-        for w, eng in enumerate(self._shards):
-            sel = np.flatnonzero(owners == w)
-            out = eng.process_chunk(
-                _take(chunk, sel), wm_ts=wm_ts, positions=sel
-            )
-            em_parts.append(out["emissions"])
-            early_parts.append(out["early"])
-            late_parts.append(out["late"])
+        with self.tracer.span("shard_loop", n_shards=len(self._shards)):
+            for w, eng in enumerate(self._shards):
+                sel = np.flatnonzero(owners == w)
+                out = eng.process_chunk(
+                    _take(chunk, sel), wm_ts=wm_ts, positions=sel
+                )
+                em_parts.append(out["emissions"])
+                early_parts.append(out["early"])
+                late_parts.append(out["late"])
         fire_keys = ("key", "start", "end", "value", "count")
         emissions = _concat_sorted(em_parts, fire_keys)
         early = _concat_sorted(early_parts, fire_keys)
@@ -380,17 +443,18 @@ class KeyedWindowAdapter(PatternAdapter):
         else:
             z = np.zeros(0, np.int64)
             late = (z, z, z, z)
-        emissions, early = self._fused_advance(
-            wm_ts, ticked=bool(len(keys)) or wm_ts is not None
-        )
-        self._shards[0].late_count += len(late[0])
-        if self.spec.late_policy == "side":
-            late_out = dict(
-                key=late[0], value=late[1], ts=late[2], start=late[3]
+        with self.tracer.span("close"):
+            emissions, early = self._fused_advance(
+                wm_ts, ticked=bool(len(keys)) or wm_ts is not None
             )
-        else:
-            z = np.zeros(0, np.int64)
-            late_out = dict(key=z, value=z, ts=z, start=z)
+            self._shards[0].late_count += len(late[0])
+            if self.spec.late_policy == "side":
+                late_out = dict(
+                    key=late[0], value=late[1], ts=late[2], start=late[3]
+                )
+            else:
+                z = np.zeros(0, np.int64)
+                late_out = dict(key=z, value=z, ts=z, start=z)
         return {"emissions": emissions, "late": late_out, "early": early}
 
     def _cell_owners(self, cell_keys: np.ndarray) -> np.ndarray:
@@ -414,43 +478,50 @@ class KeyedWindowAdapter(PatternAdapter):
         size = self.spec.size
         a_key, a_val, a_ts, a_pos, a_start = prep["panes"]
         del a_pos  # stream order is already global in the fused pass
-        wm = self._shards[0].wm  # the shared watermark clock
-        late_m = (
-            (a_start + size) <= wm if wm is not None
-            else np.zeros(len(a_key), bool)
-        )
-        live = ~late_m
-        k_l, v_l, s_l = a_key[live], a_val[live], a_start[live]
+        with self.tracer.span("route"):
+            wm = self._shards[0].wm  # the shared watermark clock
+            late_m = (
+                (a_start + size) <= wm if wm is not None
+                else np.zeros(len(a_key), bool)
+            )
+            live = ~late_m
+            k_l, v_l, s_l = a_key[live], a_val[live], a_start[live]
         if len(k_l):
-            cells, inv = kk.dedup_cells(k_l, s_l)
-            partial = np.asarray(
-                kk.reduce_by_cell(
-                    inv.astype(np.int32),
-                    np.stack([v_l, np.ones_like(v_l)], axis=1),
-                    len(cells),
-                    impl=self.impl,
-                ),
-                np.int64,
-            )
-            c_keys, c_starts = cells[:, 0], cells[:, 1]
-            c_owners = self._cell_owners(c_keys)
-            # the §4.2 work tally: one scatter for all shards (stream-global
-            # counters live on shard 0; the barrier sums per-shard vectors)
-            np.add.at(
-                self._shards[0].worker_items, c_owners, partial[:, 1]
-            )
-            if self._batched is not None:
-                spill = self._batched.update(
-                    c_owners, c_keys, c_starts, c_starts + size,
-                    partial[:, 0], partial[:, 1], touch_ts=prep["wm_ts"],
+            with self.tracer.span("dedup_cells"):
+                cells, inv = kk.dedup_cells(k_l, s_l)
+            with self.tracer.span("reduce_by_cell"):
+                partial = np.asarray(
+                    kk.reduce_by_cell(
+                        inv.astype(np.int32),
+                        np.stack([v_l, np.ones_like(v_l)], axis=1),
+                        len(cells),
+                        impl=self.impl,
+                    ),
+                    np.int64,
                 )
-                if spill is not None:
-                    self._merge_per_shard(*spill)
-            else:
-                self._merge_per_shard(
-                    c_owners, c_keys, c_starts, c_starts + size,
-                    partial[:, 0], partial[:, 1],
+            with self.tracer.span("route"):
+                c_keys, c_starts = cells[:, 0], cells[:, 1]
+                c_owners = self._cell_owners(c_keys)
+                # the §4.2 work tally: one scatter for all shards
+                # (stream-global counters live on shard 0; the barrier sums
+                # per-shard vectors)
+                np.add.at(
+                    self._shards[0].worker_items, c_owners, partial[:, 1]
                 )
+            with self.tracer.span("table_update"):
+                if self._batched is not None:
+                    spill = self._batched.update(
+                        c_owners, c_keys, c_starts, c_starts + size,
+                        partial[:, 0], partial[:, 1],
+                        touch_ts=prep["wm_ts"],
+                    )
+                    if spill is not None:
+                        self._merge_per_shard(*spill)
+                else:
+                    self._merge_per_shard(
+                        c_owners, c_keys, c_starts, c_starts + size,
+                        partial[:, 0], partial[:, 1],
+                    )
         return (a_key[late_m], a_val[late_m], a_ts[late_m], a_start[late_m])
 
     def _fused_sessions(self, prep) -> Tuple[np.ndarray, ...]:
@@ -460,46 +531,51 @@ class KeyedWindowAdapter(PatternAdapter):
         interval merge targets each fragment's owning shard store."""
         gap = self.spec.gap
         keys, values, ts = prep["keys"], prep["values"], prep["ts"]
-        wm = self._shards[0].wm
-        late_m = (
-            (ts + gap) <= wm if wm is not None
-            else np.zeros(len(ts), bool)
-        )
-        live = ~late_m
-        k, v, t = keys[live], values[live], ts[live]
+        with self.tracer.span("route"):
+            wm = self._shards[0].wm
+            late_m = (
+                (ts + gap) <= wm if wm is not None
+                else np.zeros(len(ts), bool)
+            )
+            live = ~late_m
+            k, v, t = keys[live], values[live], ts[live]
         if len(k):
-            order = np.lexsort((t, k))
-            ks, vs, ts_s = k[order], v[order], t[order]
-            new_frag = np.ones(len(ks), bool)
-            chain = (ks[1:] == ks[:-1]) & ((ts_s[1:] - ts_s[:-1]) < gap)
-            new_frag[1:] = ~chain
-            frag_ids = np.cumsum(new_frag) - 1
-            nfrag = int(frag_ids[-1]) + 1
-            sums = np.asarray(
-                kk.reduce_by_cell(
-                    frag_ids.astype(np.int32),
-                    np.stack([vs, np.ones_like(vs)], axis=1),
-                    nfrag,
-                    impl=self.impl,
-                ),
-                np.int64,
-            )
-            first = np.flatnonzero(new_frag)
-            last = np.append(first[1:], len(ks)) - 1
-            frag_keys = ks[first]
-            frag_lo = ts_s[first]
-            frag_hi = ts_s[last] + gap
-            frag_owners = self._cell_owners(frag_keys)
-            np.add.at(
-                self._shards[0].worker_items, frag_owners, sums[:, 1]
-            )
-            for key, lo, hi, ow, (vsum, cnt) in zip(
-                frag_keys.tolist(), frag_lo.tolist(), frag_hi.tolist(),
-                frag_owners.tolist(), sums.tolist(),
-            ):
-                merge_session_fragment(
-                    self._shards[ow].store, key, lo, hi, vsum, cnt
+            with self.tracer.span("dedup_cells"):
+                order = np.lexsort((t, k))
+                ks, vs, ts_s = k[order], v[order], t[order]
+                new_frag = np.ones(len(ks), bool)
+                chain = (ks[1:] == ks[:-1]) & ((ts_s[1:] - ts_s[:-1]) < gap)
+                new_frag[1:] = ~chain
+                frag_ids = np.cumsum(new_frag) - 1
+                nfrag = int(frag_ids[-1]) + 1
+            with self.tracer.span("reduce_by_cell"):
+                sums = np.asarray(
+                    kk.reduce_by_cell(
+                        frag_ids.astype(np.int32),
+                        np.stack([vs, np.ones_like(vs)], axis=1),
+                        nfrag,
+                        impl=self.impl,
+                    ),
+                    np.int64,
                 )
+            with self.tracer.span("route"):
+                first = np.flatnonzero(new_frag)
+                last = np.append(first[1:], len(ks)) - 1
+                frag_keys = ks[first]
+                frag_lo = ts_s[first]
+                frag_hi = ts_s[last] + gap
+                frag_owners = self._cell_owners(frag_keys)
+                np.add.at(
+                    self._shards[0].worker_items, frag_owners, sums[:, 1]
+                )
+            with self.tracer.span("table_update"):
+                for key, lo, hi, ow, (vsum, cnt) in zip(
+                    frag_keys.tolist(), frag_lo.tolist(), frag_hi.tolist(),
+                    frag_owners.tolist(), sums.tolist(),
+                ):
+                    merge_session_fragment(
+                        self._shards[ow].store, key, lo, hi, vsum, cnt
+                    )
         return (keys[late_m], values[late_m], ts[late_m], ts[late_m])
 
     def _fused_advance(

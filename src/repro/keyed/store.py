@@ -236,6 +236,13 @@ class KeyedStore:
     def n_workers(self) -> int:
         return self.slot_map.n_workers
 
+    def num_rows(self) -> int:
+        """Open windows held in this (host/spill) tier — the gauge the
+        observability plane reports as ``spill_rows``."""
+        return sum(
+            len(wins) for slot in self.slots for wins in slot.values()
+        )
+
     def extract_slot_rows(self, slots) -> List[Tuple[int, int, int, int, int]]:
         """Remove and return every open window of ``slots`` as
         ``(key, start, end, value, count)`` tuples sorted by

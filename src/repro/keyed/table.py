@@ -184,6 +184,29 @@ class DeviceWindowTable:
             axis=1,
         )
 
+    def probe_distances(self) -> np.ndarray:
+        """Displacement of every occupied row from its cell's home slot
+        (``(row - home) % capacity``) — the open-addressing clustering
+        signal the health gauges summarize (mean/max probe distance)."""
+        idx = np.flatnonzero(self.occ)
+        if not len(idx):
+            return np.zeros(0, np.int64)
+        home = cell_hash(self.key[idx], self.start[idx], self.capacity)
+        return (idx - home) % self.capacity
+
+    def health(self) -> dict:
+        """Flat health snapshot: occupancy/load plus probe-distance stats
+        (zeros on an empty table) — what ``export_health`` turns into
+        per-shard gauges."""
+        d = self.probe_distances()
+        return {
+            "capacity": self.capacity,
+            "occupancy": self.occupancy,
+            "load_factor": self.load_factor,
+            "probe_mean": float(d.mean()) if len(d) else 0.0,
+            "probe_max": int(d.max()) if len(d) else 0,
+        }
+
     # -- probe-window lookup ---------------------------------------------------
     def _probe_window(self, h: np.ndarray) -> np.ndarray:
         """``[n, P]`` candidate rows for home slots ``h`` (wrapping)."""
@@ -555,3 +578,30 @@ class BatchedWindowTable:
             self._fkey[idx], self._fstart[idx], self._fend[idx],
             self._fvalue[idx], self._fcount[idx],
         )
+
+    def per_shard_occupancy(self) -> np.ndarray:
+        """Occupied-row count per shard — one reduction over the stacked
+        occupancy plane."""
+        return self.occ.sum(axis=1).astype(np.int64)
+
+    def per_shard_health(self) -> List[dict]:
+        """One :meth:`DeviceWindowTable.health`-shaped snapshot per shard,
+        computed over the stacked planes (probe distances are intra-segment:
+        a row's home is within its shard's own ``capacity`` ring)."""
+        out = []
+        for w in range(self.n_shards):
+            idx = np.flatnonzero(self.occ[w])
+            if len(idx):
+                home = cell_hash(self.key[w][idx], self.start[w][idx],
+                                 self.capacity)
+                d = (idx - home) % self.capacity
+            else:
+                d = np.zeros(0, np.int64)
+            out.append({
+                "capacity": self.capacity,
+                "occupancy": int(len(idx)),
+                "load_factor": len(idx) / self.capacity,
+                "probe_mean": float(d.mean()) if len(d) else 0.0,
+                "probe_max": int(d.max()) if len(d) else 0,
+            })
+        return out

@@ -1,0 +1,44 @@
+"""`repro.obs` — structured observability for the elastic runtime.
+
+The instrument panel the scaling roadmap reads: nested span tracing over
+the fused keyed pipeline / executor / serving engine
+(:mod:`repro.obs.trace`), a counters/gauges/log-bucket-histogram registry
+(:mod:`repro.obs.metrics`), Chrome/Perfetto trace export
+(:mod:`repro.obs.export`), and a markdown report renderer
+(``python -m repro.obs.report``).
+
+Disabled by default everywhere: instrumented hot paths hold
+:data:`~repro.obs.trace.NULL_TRACER` and pay one attribute load + no-op
+call per stage (CI gates the overhead against the un-instrumented
+baselines).
+"""
+
+from repro.obs.clock import LogicalClock, WallClock
+from repro.obs.export import chrome_trace, write_metrics, write_trace
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import (
+    NULL_TRACER,
+    CounterRecord,
+    InstantRecord,
+    NullTracer,
+    SpanRecord,
+    Tracer,
+)
+
+__all__ = [
+    "NULL_TRACER",
+    "Counter",
+    "CounterRecord",
+    "Gauge",
+    "Histogram",
+    "InstantRecord",
+    "LogicalClock",
+    "MetricsRegistry",
+    "NullTracer",
+    "SpanRecord",
+    "Tracer",
+    "WallClock",
+    "chrome_trace",
+    "write_metrics",
+    "write_trace",
+]

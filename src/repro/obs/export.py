@@ -1,0 +1,100 @@
+"""Trace/metrics export: Chrome trace-event JSON (Perfetto-loadable).
+
+``chrome_trace`` renders a :class:`~repro.obs.trace.Tracer`'s buffers into
+the Chrome trace-event format (the JSON flavor ``chrome://tracing`` and
+https://ui.perfetto.dev load directly):
+
+* spans -> ``ph:"X"`` complete events (``ts``/``dur`` in microseconds);
+* instants -> ``ph:"i"`` thread-scoped instant events;
+* counter samples -> ``ph:"C"`` counter tracks (stacked series in the UI);
+* one ``thread_name`` metadata event per track so the executor's main loop
+  and the pipeline's prepare worker are labeled.
+
+Timestamps are ``clock.now()`` seconds scaled to integer-ish microseconds;
+under a :class:`~repro.obs.clock.LogicalClock` one logical unit = one
+second, so simulated traces are deterministic byte-for-byte.
+
+A metrics registry snapshot can ride along under ``otherData`` (a documented
+extension point of the format that viewers ignore), so one artifact carries
+both the timeline and the flat gauges/counters/percentiles.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+_US = 1e6  # seconds (or logical units) -> microseconds
+
+
+def _args(d) -> Optional[Dict]:
+    if not d:
+        return None
+    return {k: (v if isinstance(v, (int, float, str, bool)) else repr(v))
+            for k, v in d.items()}
+
+
+def chrome_trace(tracer, *, registry=None, pid: int = 0,
+                 process_name: str = "repro") -> Dict:
+    """Render ``tracer`` (and optionally a metrics registry) to one dict in
+    Chrome trace-event JSON object form."""
+    events: List[Dict] = []
+    tids = set()
+    for s in tracer.spans:
+        ev = {
+            "name": s.name, "ph": "X", "pid": pid, "tid": s.tid,
+            "ts": s.t0 * _US, "dur": (s.t1 - s.t0) * _US,
+        }
+        a = _args(s.args)
+        if a:
+            ev["args"] = a
+        events.append(ev)
+        tids.add(s.tid)
+    for i in tracer.instants:
+        ev = {
+            "name": i.name, "ph": "i", "s": "t", "pid": pid, "tid": i.tid,
+            "ts": i.t * _US,
+        }
+        a = _args(i.args)
+        if a:
+            ev["args"] = a
+        events.append(ev)
+        tids.add(i.tid)
+    for c in tracer.counters:
+        events.append({
+            "name": c.name, "ph": "C", "pid": pid, "tid": 0,
+            "ts": c.t * _US, "args": _args(c.values) or {},
+        })
+    events.sort(key=lambda e: (e["ts"], e["tid"]))
+    meta: List[Dict] = [{
+        "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+        "args": {"name": process_name},
+    }]
+    for tid in sorted(tids):
+        meta.append({
+            "name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+            "args": {"name": "main" if tid == 0 else f"worker-{tid}"},
+        })
+    out = {
+        "traceEvents": meta + events,
+        "displayTimeUnit": "ms",
+        "otherData": {"dropped_events": tracer.dropped},
+    }
+    if registry is not None:
+        out["otherData"]["metrics"] = registry.snapshot()
+    return out
+
+
+def write_trace(path: str, tracer, *, registry=None,
+                process_name: str = "repro") -> Dict:
+    """Write the Perfetto-loadable trace artifact; returns the dict."""
+    doc = chrome_trace(tracer, registry=registry, process_name=process_name)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return doc
+
+
+def write_metrics(path: str, registry) -> None:
+    """Write the flat metrics-snapshot artifact."""
+    registry.write(path)

@@ -34,6 +34,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import patterns
+from repro.obs.trace import NULL_TRACER
 from repro.runtime.metrics import ChunkRecord, MetricsBus, ResizeRecord
 
 
@@ -70,6 +71,12 @@ class PatternAdapter:
     #: per-worker granularity: each worker's local chunk slice must be a
     #: multiple of this (1 except for flush/sync-period patterns)
     granularity: int = 1
+
+    #: observability hook: adapters wrap their internal stages in
+    #: ``self.tracer.span(...)``.  The default is the process-wide no-op
+    #: tracer (one branchless call per stage); the executor re-points this
+    #: at its own tracer when one is supplied
+    tracer = NULL_TRACER
 
     #: host-driven adapters (e.g. the keyed window engine) run their step as
     #: plain host code: no mesh is built, the step is not jitted, and state
@@ -354,12 +361,20 @@ class StreamExecutor:
         metrics: Optional[MetricsBus] = None,
         max_degree: Optional[int] = None,
         pipeline: bool = False,
+        tracer=None,
     ):
         self.adapter = adapter
         self.axis = axis
         self.chunk_size = chunk_size
         self.mesh_factory = mesh_factory
         self.metrics = metrics if metrics is not None else MetricsBus()
+        #: span tracer: defaults to the shared no-op (the hot path pays one
+        #: attribute load + no-op call per stage); a real Tracer is also
+        #: propagated to the adapter so its internal stages nest under the
+        #: executor's "chunk" spans
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if tracer is not None:
+            adapter.tracer = tracer
         self.max_degree = max_degree
         self._meshes: Dict[int, Mesh] = {}
         self._steps: Dict[int, Callable] = {}
@@ -413,8 +428,9 @@ class StreamExecutor:
         adapters this is the supervisor's serialization point — the only
         time resident shards are flattened between resizes.  Drains the
         chunk pipeline first: a checkpoint is a full barrier."""
-        self._drain_pipeline()
-        return self.state
+        with self.tracer.span("barrier"):
+            self._drain_pipeline()
+            return self.state
 
     # -- degree / compile caches ---------------------------------------------
     def _mesh(self, n: int) -> Mesh:
@@ -457,15 +473,20 @@ class StreamExecutor:
         if n_new == self.degree:
             return None
         self.adapter.validate_degree(self.chunk_size, n_new)
-        self._drain_pipeline()  # resizes are pipeline barriers
-        n_old = self.degree
-        if self._attached:
-            info = self.adapter.resize_live(n_old, n_new)
-            self.degree = n_new
-        else:
-            self._state, info = self.adapter.resize(self._state, n_old, n_new)
-            self.degree = n_new
-            self._state = self.place_state(self._state)
+        with self.tracer.span("resize", n_old=self.degree, n_new=n_new):
+            self._drain_pipeline()  # resizes are pipeline barriers
+            n_old = self.degree
+            if self._attached:
+                info = self.adapter.resize_live(n_old, n_new)
+                self.degree = n_new
+            else:
+                self._state, info = self.adapter.resize(self._state, n_old, n_new)
+                self.degree = n_new
+                self._state = self.place_state(self._state)
+        self.tracer.instant(
+            "resize", n_old=n_old, n_new=n_new, protocol=info.protocol,
+            rows=info.handoff_rows, bytes=info.handoff_bytes,
+        )
         rec = ResizeRecord(
             t=self.metrics.clock.now(),
             n_old=n_old,
@@ -495,17 +516,23 @@ class StreamExecutor:
             # tail chunk: fall back to the largest compatible degree
             self._fit_degree_for(m)
         t0 = self.metrics.clock.now()
-        if self.adapter.has_live_state:
-            if not self._attached:
-                # first chunk (or first after a state write / restore):
-                # hydrate live shards once, then stop serializing per chunk
-                self.adapter.attach(self._state, self.degree)
-                self._attached = True
-                self._state = None
-            out = self.adapter.step_live(chunk, prepared=prepared)
-        else:
-            self._state, out = self._step(self.degree)(self._state, chunk)
-        jax.block_until_ready(out)
+        with self.tracer.span(
+            "chunk", m=m, degree=self.degree, queue_depth=queue_depth
+        ):
+            if self.adapter.has_live_state:
+                if not self._attached:
+                    # first chunk (or first after a state write / restore):
+                    # hydrate live shards once, then stop serializing per chunk
+                    self.adapter.attach(self._state, self.degree)
+                    self._attached = True
+                    self._state = None
+                out = self.adapter.step_live(chunk, prepared=prepared)
+            else:
+                self._state, out = self._step(self.degree)(self._state, chunk)
+            if not (self.adapter.is_host and self.adapter.has_live_state):
+                # host live-state adapters return materialized numpy — the
+                # pytree walk would be a pure no-op costing ~15us per chunk
+                jax.block_until_ready(out)
         t1 = self.metrics.clock.now()
         self.metrics.record_chunk(
             ChunkRecord(
@@ -540,6 +567,13 @@ class StreamExecutor:
                 self.chunk_size = saved
             return
         raise ValueError(f"no degree can process a tail chunk of {m} items")
+
+    def _traced_prepare(self, chunk):
+        """Pipeline-pool entry point: the prepare worker runs on its own
+        thread, so its span lands on a separate Perfetto track and visibly
+        overlaps the main loop's "chunk" spans."""
+        with self.tracer.span("prepare"):
+            return self.adapter.prepare_chunk(chunk)
 
     def run(
         self,
@@ -584,7 +618,7 @@ class StreamExecutor:
                 nxt = next(it, done)
                 fut = None
                 if nxt is not done:
-                    fut = pool.submit(self.adapter.prepare_chunk, nxt)
+                    fut = pool.submit(self._traced_prepare, nxt)
                     self._inflight = fut
                 if schedule and i in schedule:
                     self.set_degree(schedule[i], reason=f"schedule@chunk{i}")

@@ -15,37 +15,32 @@ with the *measured* ``t_f_hat`` plugged in, which is how the elastic
 benchmark validates post-resize throughput against the analytic envelope.
 
 Clocks are pluggable so the same bus serves real wall-clock runs and
-discrete-event simulations (:class:`LogicalClock` advances only when told).
+discrete-event simulations (:class:`LogicalClock` advances only when told);
+the clock classes live in :mod:`repro.obs.clock` (re-exported here) so the
+tracer and the bus share one implementation.
+
+Memory is **bounded**: the per-record lists (``chunks`` / ``resizes`` /
+``depth_samples``) are rolling windows of the newest ``history`` records,
+while every aggregate the bus reports — ``summary()``'s chunk/item totals,
+``migration_volume()``'s handoff sums, the service-time percentiles — is
+maintained cumulatively, so a long-running serving process neither grows
+without limit nor loses its lifetime totals.  Service-time percentiles come
+from a fixed-bucket log-scale histogram (:class:`repro.obs.metrics.
+Histogram`): p50/p95/p99 without storing samples.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, List, Optional
 
 from repro.core import analytics
+from repro.obs.clock import LogicalClock, WallClock
+from repro.obs.metrics import Histogram
 
-
-class WallClock:
-    def now(self) -> float:
-        return time.perf_counter()
-
-
-class LogicalClock:
-    """Deterministic clock for simulated runs: advances only via `advance`."""
-
-    def __init__(self, t0: float = 0.0):
-        self._t = t0
-
-    def now(self) -> float:
-        return self._t
-
-    def advance(self, dt: float) -> float:
-        if dt < 0:
-            raise ValueError("time cannot go backwards")
-        self._t += dt
-        return self._t
+__all__ = [
+    "ChunkRecord", "LogicalClock", "MetricsBus", "ResizeRecord", "WallClock",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,18 +70,53 @@ class ResizeRecord:
 
 
 class MetricsBus:
-    def __init__(self, *, clock=None, ewma_alpha: float = 0.3, window: int = 16):
+    def __init__(self, *, clock=None, ewma_alpha: float = 0.3,
+                 window: int = 16, history: int = 4096):
+        """``window`` bounds the sliding window the derived signals read;
+        ``history`` bounds how many raw records the rolling lists retain
+        (aggregates are cumulative and unaffected by trimming)."""
+        if history < window:
+            raise ValueError(
+                f"history={history} must be >= window={window}"
+            )
         self.clock = clock if clock is not None else WallClock()
         self.chunks: List[ChunkRecord] = []
         self.resizes: List[ResizeRecord] = []
         self.depth_samples: List[int] = []
         self._alpha = ewma_alpha
         self._window = window
+        self._history = history
         self._t_f_hat: Optional[float] = None
+        # cumulative aggregates: exact over the whole run, however far the
+        # rolling record lists have been trimmed
+        self._total_chunks = 0
+        self._total_items = 0
+        self._total_collector_updates = 0
+        self._total_resizes = 0
+        self._total_handoffs = 0          # resizes that shipped rows
+        self._total_handoff_slots = 0
+        self._total_handoff_rows = 0
+        self._total_handoff_bytes = 0
+        #: lifetime chunk-service-time distribution (log-bucket histogram:
+        #: p50/p95/p99 without storing samples)
+        self.service_hist = Histogram(lo=1e-7, hi=1e4, bins_per_decade=8)
+
+    @staticmethod
+    def _trim(lst: List) -> None:
+        """Amortized rolling-window trim: drop the oldest half-window at
+        once so appends stay O(1) amortized."""
+        del lst[: len(lst) // 2]
 
     # -- recording -----------------------------------------------------------
     def record_chunk(self, rec: ChunkRecord) -> None:
         self.chunks.append(rec)
+        if len(self.chunks) > 2 * self._history:
+            self._trim(self.chunks)
+        self._total_chunks += 1
+        self._total_items += rec.m
+        self._total_collector_updates += rec.collector_updates
+        if rec.service_time > 0:
+            self.service_hist.record(rec.service_time)
         if rec.m > 0 and rec.service_time > 0:
             sample = rec.service_time * rec.n_workers / rec.m
             if self._t_f_hat is None:
@@ -98,9 +128,19 @@ class MetricsBus:
 
     def record_resize(self, rec: ResizeRecord) -> None:
         self.resizes.append(rec)
+        if len(self.resizes) > 2 * self._history:
+            self._trim(self.resizes)
+        self._total_resizes += 1
+        self._total_handoff_slots += rec.handoff_items
+        if rec.handoff_rows > 0:
+            self._total_handoffs += 1
+            self._total_handoff_rows += rec.handoff_rows
+            self._total_handoff_bytes += rec.handoff_bytes
 
     def record_depth(self, depth: int) -> None:
         self.depth_samples.append(depth)
+        if len(self.depth_samples) > 2 * self._history:
+            self._trim(self.depth_samples)
 
     # -- derived signals -----------------------------------------------------
     @property
@@ -112,10 +152,27 @@ class MetricsBus:
         return self.chunks[-self._window :]
 
     def throughput(self) -> Optional[float]:
+        """Completed items per unit time over the window.
+
+        The time base is the **union of the chunk intervals**, not
+        ``recent[-1].t_end - recent[0].t_start``: under the double-buffered
+        pipeline chunk ``k+1``'s interval overlaps chunk ``k``'s, records
+        land in completion order (so the last record need not hold the
+        latest ``t_end``), and idle gaps between chunks are not processing
+        time — the naive span arithmetic mis-counts all three."""
         recent = self._recent()
         if not recent:
             return None
-        span = recent[-1].t_end - recent[0].t_start
+        ivs = sorted((r.t_start, r.t_end) for r in recent)
+        span = 0.0
+        cur_s, cur_e = ivs[0]
+        for s, e in ivs[1:]:
+            if s > cur_e:
+                span += cur_e - cur_s
+                cur_s, cur_e = s, e
+            else:
+                cur_e = max(cur_e, e)
+        span += cur_e - cur_s
         if span <= 0:
             return None
         return sum(r.m for r in recent) / span
@@ -158,15 +215,36 @@ class MetricsBus:
         moved, not with standing state).  ``handoffs`` counts only the
         resizes that physically shipped rows: a resize over an empty plane
         (or one whose moved slots hold no open windows) is a metadata-only
-        transition and must not read as a DMA-path handoff."""
-        shipped = [r for r in self.resizes if r.handoff_rows > 0]
+        transition and must not read as a DMA-path handoff.  Sums are
+        cumulative over the whole run — they survive the rolling-window
+        trim of ``self.resizes``."""
         return {
-            "resizes": len(self.resizes),
-            "handoffs": len(shipped),
-            "slots": sum(r.handoff_items for r in self.resizes),
-            "rows": sum(r.handoff_rows for r in shipped),
-            "bytes": sum(r.handoff_bytes for r in shipped),
+            "resizes": self._total_resizes,
+            "handoffs": self._total_handoffs,
+            "slots": self._total_handoff_slots,
+            "rows": self._total_handoff_rows,
+            "bytes": self._total_handoff_bytes,
         }
+
+    def resize_timeline(self) -> List[Dict[str, Any]]:
+        """The retained resize events as a flat timeline (one dict per
+        event, same payload accounting as :meth:`migration_volume`) — what
+        the trace export renders as instant events and the report renderer
+        tables."""
+        return [
+            {
+                "t": r.t, "n_old": r.n_old, "n_new": r.n_new,
+                "protocol": r.protocol, "slots": r.handoff_items,
+                "rows": r.handoff_rows, "bytes": r.handoff_bytes,
+                "reason": r.reason,
+            }
+            for r in self.resizes
+        ]
+
+    def percentiles(self) -> Dict[str, Optional[float]]:
+        """Lifetime chunk-service-time p50/p95/p99 (from the log-bucket
+        histogram — no samples stored)."""
+        return self.service_hist.percentiles()
 
     def expected_service_time(self, n_w: int, t_a: float = 0.0) -> Optional[float]:
         """Paper §2 ``T_s(n_w)`` with the measured ``t_f_hat``: the analytic
@@ -179,16 +257,20 @@ class MetricsBus:
 
     def summary(self) -> Dict[str, Any]:
         recent = self._recent()
+        pct = self.percentiles()
         return {
-            "chunks": len(self.chunks),
-            "items": sum(r.m for r in self.chunks),
+            "chunks": self._total_chunks,
+            "items": self._total_items,
             "degree": recent[-1].n_workers if recent else None,
             "queue_depth": self.depth_samples[-1] if self.depth_samples else 0,
             "throughput": self.throughput(),
             "mean_service_time": self.mean_service_time(),
+            "service_p50": pct["p50"],
+            "service_p95": pct["p95"],
+            "service_p99": pct["p99"],
             "t_f_hat": self._t_f_hat,
             "utilization": self.utilization(),
             "collector_pressure": self.collector_pressure(),
-            "resizes": len(self.resizes),
+            "resizes": self._total_resizes,
             "migration": self.migration_volume(),
         }

@@ -74,30 +74,34 @@ class Supervisor:
         # snapshot barrier: live-state adapters (resident engine shards)
         # serialize to the canonical merged form HERE and nowhere else —
         # checkpoint cadence, not chunk cadence, bounds serialization cost
-        ckpt_lib.save(
-            self.ckpt_dir,
-            i,
-            self.executor.snapshot_barrier(),
-            metadata={"cursor": i, "degree": self.executor.degree},
-        )
+        with self.executor.tracer.span("ckpt", chunk=i):
+            ckpt_lib.save(
+                self.ckpt_dir,
+                i,
+                self.executor.snapshot_barrier(),
+                metadata={"cursor": i, "degree": self.executor.degree},
+            )
         self._log(i, "ckpt", f"state at chunk {i} (snapshot barrier)")
 
     def _restore_latest(self) -> int:
+        tracer = self.executor.tracer
         latest = ckpt_lib.latest_step(self.ckpt_dir)
         if latest is None:
             # no checkpoint yet: restart the stream from the initial state
-            self.executor.state = self.executor.place_state(
-                self.executor.adapter.init_state()
-            )
+            with tracer.span("restore", chunk=0):
+                self.executor.state = self.executor.place_state(
+                    self.executor.adapter.init_state()
+                )
             self._log(0, "restore", "no checkpoint; restarting stream")
             return 0
-        state, meta = ckpt_lib.restore(
-            self.ckpt_dir, latest, self.executor.snapshot_barrier()
-        )
-        # assigning through the state setter drops any live shards; the
-        # executor re-attaches them from this canonical snapshot (at the
-        # post-failure degree) on the next processed chunk
-        self.executor.state = self.executor.place_state(state)
+        with tracer.span("restore", chunk=latest):
+            state, meta = ckpt_lib.restore(
+                self.ckpt_dir, latest, self.executor.snapshot_barrier()
+            )
+            # assigning through the state setter drops any live shards; the
+            # executor re-attaches them from this canonical snapshot (at the
+            # post-failure degree) on the next processed chunk
+            self.executor.state = self.executor.place_state(state)
         self._log(latest, "restore", f"restored checkpoint at chunk {latest}")
         return int(meta["cursor"])
 
@@ -149,6 +153,7 @@ class Supervisor:
                     self._checkpoint(i)
             except WorkerFailure as e:
                 self._log(i, "failure", str(e))
+                self.executor.tracer.instant("failure", chunk=i, detail=str(e))
                 cursor = self._restore_latest()
                 target = self._shrink_for_failure(healthy)
                 rec = self.executor.set_degree(

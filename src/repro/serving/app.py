@@ -77,8 +77,17 @@ class ServingRuntime:
         policy: Optional[Policy] = None,
         cooldown_ticks: int = 2,
         metrics: Optional[MetricsBus] = None,
+        tracer=None,
+        registry=None,
     ):
         self.engine = engine
+        # thread the observability hooks into the engine so its
+        # prefill/decode spans + latency histograms land in one trace
+        if tracer is not None:
+            engine.tracer = tracer
+        if registry is not None:
+            engine.registry = registry
+        self.tracer = engine.tracer
         self.source = source
         self.arrivals = arrivals
         self.queue = BackpressureQueue(
@@ -145,7 +154,11 @@ class ServingRuntime:
                 self.engine.submit(req)
         t0 = self.metrics.clock.now()
         toks_before = self.engine.tokens_out
-        self.engine.step()
+        with self.tracer.span(
+            "tick", t=self.t, active=len(self.engine.active),
+            queue_depth=self.queue.depth,
+        ):
+            self.engine.step()
         t1 = self.metrics.clock.now()
         produced = self.engine.tokens_out - toks_before
         self.metrics.record_chunk(

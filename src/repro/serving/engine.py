@@ -36,6 +36,7 @@ import numpy as np
 from repro.keyed.store import hash_to_slot, plan_relocation
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -61,10 +62,16 @@ class ServingEngine:
         s_max: int,
         policy: str = "ondemand",
         seed: int = 0,
+        tracer=None,
+        registry=None,
     ):
         assert policy in ("ondemand", "hash")
         self.cfg = cfg
         self.params = params
+        #: observability: prefill/decode spans + latency histograms are
+        #: no-ops unless a tracer/registry is supplied
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.registry = registry
         self.num_slots = num_slots
         self.s_max = s_max
         self.policy = policy
@@ -174,7 +181,18 @@ class ServingEngine:
             raise ValueError(f"num_slots must be >= 1, got {new_num_slots}")
         if new_num_slots == self.num_slots:
             return 0
+        with self.tracer.span(
+            "resize", n_old=self.num_slots, n_new=new_num_slots
+        ):
+            moved = self._resize_impl(new_num_slots)
+        ev = self.resize_events[-1]
+        self.tracer.instant(
+            "resize", n_old=ev["old"], n_new=ev["new"],
+            relocated=ev["relocated"], requeued=ev["requeued"],
+        )
+        return moved
 
+    def _resize_impl(self, new_num_slots: int) -> int:
         old_active = dict(self.active)
         # the keyed store plans the §4.2 handoff: sessions are keys, decode
         # slots are the partitions (hash re-hashes to the new modulus with
@@ -239,10 +257,20 @@ class ServingEngine:
                  np.asarray(req.generated, np.int32)]
             ) if req.generated else np.asarray(req.prompt, np.int32)
             plen = len(prefix)
-            tok, one = self._prefill(
-                self.params, self._one_caches, jnp.asarray(prefix)[None, :]
-            )
-            req.generated.append(int(tok[0]))
+            t0 = self.tracer.clock.now()
+            with self.tracer.span("prefill", rid=req.rid, plen=plen):
+                tok, one = self._prefill(
+                    self.params, self._one_caches,
+                    jnp.asarray(prefix)[None, :],
+                )
+                # int() forces the device sync, so the span/histogram
+                # measure the whole prefill, not the async dispatch
+                first_tok = int(tok[0])
+            if self.registry is not None:
+                self.registry.histogram("serving.prefill_s").record(
+                    self.tracer.clock.now() - t0
+                )
+            req.generated.append(first_tok)
             self.tokens_out += 1
             if req.done:
                 # a requeued session can complete at the replay prefill
@@ -253,7 +281,7 @@ class ServingEngine:
             req.slot = slot
             self.active[slot] = req
             self.lengths[slot] = plen
-            self.last_token[slot] = int(tok[0])
+            self.last_token[slot] = first_tok
         self.waiting = still_waiting
 
     def step(self) -> None:
@@ -261,10 +289,19 @@ class ServingEngine:
         self._admit()
         if not self.active:
             return
-        tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]
-        index = jnp.asarray(self.lengths, jnp.int32)
-        next_tok, self.caches = self._decode(self.params, self.caches, tokens, index)
-        next_np = np.asarray(next_tok)
+        t0 = self.tracer.clock.now()
+        with self.tracer.span("decode", batch=len(self.active)):
+            tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]
+            index = jnp.asarray(self.lengths, jnp.int32)
+            next_tok, self.caches = self._decode(
+                self.params, self.caches, tokens, index
+            )
+            # np.asarray forces the device sync inside the span
+            next_np = np.asarray(next_tok)
+        if self.registry is not None:
+            self.registry.histogram("serving.decode_step_s").record(
+                self.tracer.clock.now() - t0
+            )
         self.steps += 1
         for slot, req in list(self.active.items()):
             self.lengths[slot] += 1

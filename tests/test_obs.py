@@ -1,0 +1,291 @@
+"""Tests for the observability plane (repro.obs): tracer semantics,
+histogram percentiles, Chrome trace export, instrumented runtime spans, and
+gauge/engine-counter agreement."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.keyed.runtime import KeyedWindowAdapter, synthetic_keyed_items
+from repro.keyed.windows import WindowSpec
+from repro.obs import (
+    NULL_TRACER,
+    Histogram,
+    LogicalClock,
+    MetricsRegistry,
+    NullTracer,
+    Tracer,
+    chrome_trace,
+    write_trace,
+)
+from repro.obs import report as report_mod
+from repro.runtime.executor import StreamExecutor
+
+STAGES = ("route", "expand_panes", "dedup_cells", "reduce_by_cell",
+          "table_update", "close")
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_nested_spans_depth_and_determinism(self):
+        clk = LogicalClock()
+        tr = Tracer(clock=clk)
+        with tr.span("outer", m=3):
+            clk.advance(1.0)
+            with tr.span("inner"):
+                clk.advance(2.0)
+            clk.advance(0.5)
+        assert [s.name for s in tr.spans] == ["inner", "outer"]  # exit order
+        inner, outer = tr.spans
+        assert (inner.t0, inner.t1, inner.depth) == (1.0, 3.0, 1)
+        assert (outer.t0, outer.t1, outer.depth) == (0.0, 3.5, 0)
+        assert outer.args == {"m": 3}
+        # same thread -> same dense tid
+        assert inner.tid == outer.tid == 0
+
+    def test_total_by_name_sums_repeats(self):
+        clk = LogicalClock()
+        tr = Tracer(clock=clk)
+        for _ in range(3):
+            with tr.span("s"):
+                clk.advance(2.0)
+        assert tr.total_by_name() == {"s": (3, 6.0)}
+
+    def test_instants_and_counters(self):
+        clk = LogicalClock(t0=5.0)
+        tr = Tracer(clock=clk)
+        tr.instant("resize", n_old=2, n_new=4)
+        tr.counter("queue", depth=7)
+        assert tr.instants[0].t == 5.0
+        assert tr.instants[0].args == {"n_old": 2, "n_new": 4}
+        assert tr.counters[0].values == {"depth": 7}
+
+    def test_bounded_buffer_counts_drops(self):
+        clk = LogicalClock()
+        tr = Tracer(clock=clk, max_events=2)
+        for _ in range(5):
+            with tr.span("s"):
+                clk.advance(1.0)
+        assert len(tr.spans) == 2 and tr.dropped == 3
+        tr.reset()
+        assert tr.spans == [] and tr.dropped == 0
+
+    def test_null_tracer_is_inert_and_shared(self):
+        nt = NullTracer()
+        s1 = nt.span("x", a=1)
+        s2 = NULL_TRACER.span("y")
+        assert s1 is s2  # one shared singleton context manager
+        with s1:
+            pass
+        nt.instant("e")
+        nt.counter("c", v=1)
+        assert nt.spans == [] and nt.total_by_name() == {}
+        assert not nt.enabled
+        # carries a usable clock for code that times itself via the tracer
+        assert isinstance(nt.clock.now(), float)
+
+
+# ---------------------------------------------------------------------------
+# histogram percentiles
+# ---------------------------------------------------------------------------
+
+class TestHistogram:
+    def test_percentiles_close_to_numpy(self):
+        rng = np.random.default_rng(0)
+        samples = rng.lognormal(mean=-6.0, sigma=1.0, size=20_000)
+        h = Histogram(lo=1e-6, hi=1e3, bins_per_decade=8)
+        for v in samples:
+            h.record(float(v))
+        for q in (0.50, 0.95, 0.99):
+            exact = float(np.quantile(samples, q))
+            approx = h.percentile(q)
+            # log-bucket resolution: 8 bins/decade -> ~33% worst-case bucket
+            # width; interpolation keeps it much tighter in practice
+            assert approx == pytest.approx(exact, rel=0.35)
+        assert h.count == len(samples)
+        assert h.mean == pytest.approx(float(samples.mean()), rel=1e-9)
+
+    def test_degenerate_and_out_of_range(self):
+        h = Histogram(lo=1e-3, hi=1e3)
+        assert h.percentile(0.5) is None  # empty
+        for _ in range(10):
+            h.record(42.0)
+        assert h.percentile(0.0) == 42.0
+        assert h.percentile(1.0) == 42.0
+        # all-underflow resolves to the exact min, not a bucket edge
+        h2 = Histogram(lo=1.0, hi=10.0)
+        h2.record(1e-9)
+        h2.record(1e-9)
+        assert h2.percentile(0.5) == 1e-9
+        # overflow resolves to the exact max
+        h2.record(1e6)
+        assert h2.percentile(1.0) == 1e6
+
+    def test_rejects_bad_construction(self):
+        with pytest.raises(ValueError):
+            Histogram(lo=1.0, hi=0.5)
+        with pytest.raises(ValueError):
+            Histogram(bins_per_decade=0)
+
+
+# ---------------------------------------------------------------------------
+# export
+# ---------------------------------------------------------------------------
+
+class TestExport:
+    def _traced(self):
+        clk = LogicalClock()
+        tr = Tracer(clock=clk)
+        with tr.span("chunk", m=4):
+            clk.advance(0.25)
+            with tr.span("route"):
+                clk.advance(0.5)
+        tr.instant("resize", n_old=1, n_new=2)
+        tr.counter("queue", depth=3)
+        return tr
+
+    def test_chrome_trace_structure(self):
+        tr = self._traced()
+        reg = MetricsRegistry()
+        reg.gauge("g").set(1.5)
+        reg.counter("c").inc(7)
+        doc = chrome_trace(tr, registry=reg)
+        phs = [e["ph"] for e in doc["traceEvents"]]
+        assert phs.count("X") == 2 and phs.count("i") == 1
+        assert phs.count("C") == 1 and phs.count("M") >= 2
+        xs = {e["name"]: e for e in doc["traceEvents"] if e["ph"] == "X"}
+        # logical seconds scale to microseconds
+        assert xs["route"]["ts"] == pytest.approx(0.25e6)
+        assert xs["route"]["dur"] == pytest.approx(0.5e6)
+        assert xs["chunk"]["dur"] == pytest.approx(0.75e6)
+        # nesting is by timestamp containment on the same track
+        assert xs["chunk"]["ts"] <= xs["route"]["ts"]
+        assert (xs["route"]["ts"] + xs["route"]["dur"]
+                <= xs["chunk"]["ts"] + xs["chunk"]["dur"])
+        assert doc["otherData"]["metrics"]["gauges"]["g"] == 1.5
+        assert doc["otherData"]["metrics"]["counters"]["c"] == 7
+        json.dumps(doc)  # fully JSON-serializable
+
+    def test_write_trace_and_report_render(self, tmp_path):
+        path = tmp_path / "trace.json"
+        write_trace(str(path), self._traced())
+        doc = report_mod.load(str(path))
+        md = report_mod.render(doc, title="t")
+        assert "chunk" in md and "route" in md and "resize" in md
+        out = tmp_path / "report.md"
+        assert report_mod.main([str(path), "-o", str(out)]) == 0
+        assert "Per-stage time breakdown" in out.read_text()
+
+    def test_deterministic_under_logical_clock(self):
+        a = json.dumps(chrome_trace(self._traced()), sort_keys=True)
+        b = json.dumps(chrome_trace(self._traced()), sort_keys=True)
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# instrumented runtime
+# ---------------------------------------------------------------------------
+
+def _run_fused(tracer, *, degree=4, n_chunks=6, chunk=128, pipeline=False):
+    spec = WindowSpec(kind="tumbling", size=8, lateness=2)
+    ad = KeyedWindowAdapter(spec, num_slots=64, backend="device_table",
+                            capacity=256, ttl=64)
+    ex = StreamExecutor(ad, degree=degree, chunk_size=chunk, tracer=tracer,
+                        pipeline=pipeline)
+    items = synthetic_keyed_items(chunk * n_chunks, num_keys=512,
+                                  disorder=2, seed=3)
+    ex.run([items[i * chunk:(i + 1) * chunk] for i in range(n_chunks)],
+           schedule={3: degree * 2})
+    return ad, ex
+
+
+class TestInstrumentedRuntime:
+    def test_fused_run_emits_all_stage_spans(self):
+        tr = Tracer()
+        ad, ex = _run_fused(tr)
+        names = tr.total_by_name()
+        for stage in STAGES:
+            assert stage in names, f"missing stage span {stage}"
+        assert names["chunk"][0] == 6
+        # the schedule's resize produced a span and an instant event
+        assert "resize" in names
+        assert any(i.name == "resize" for i in tr.instants)
+        # adapter got re-pointed at the executor's tracer
+        assert ad.tracer is tr
+
+    def test_stage_spans_nest_inside_chunk_spans(self):
+        tr = Tracer()
+        _run_fused(tr)
+        chunks = [s for s in tr.spans if s.name == "chunk"]
+        for s in tr.spans:
+            if s.name in STAGES:
+                assert s.depth >= 1
+                assert any(c.t0 <= s.t0 and s.t1 <= c.t1 for c in chunks)
+
+    def test_stage_coverage_of_chunk_time(self):
+        tr = Tracer()
+        _run_fused(tr, n_chunks=8, chunk=256)
+        tb = tr.total_by_name()
+        stage_total = sum(tb[s][1] for s in STAGES if s in tb)
+        chunk_total = tb["chunk"][1]
+        assert 0.5 <= stage_total / chunk_total <= 1.0
+
+    def test_pipeline_prepare_gets_its_own_thread_track(self):
+        tr = Tracer()
+        _run_fused(tr, pipeline=True)
+        prepares = [s for s in tr.spans if s.name == "prepare"]
+        assert prepares
+        main_tid = [s for s in tr.spans if s.name == "chunk"][0].tid
+        assert all(s.tid != main_tid for s in prepares)
+
+    def test_untraced_run_is_bit_identical(self):
+        spec = WindowSpec(kind="tumbling", size=8, lateness=2)
+        outs = []
+        for tracer in (None, Tracer()):
+            ad = KeyedWindowAdapter(spec, num_slots=64,
+                                    backend="device_table", capacity=256)
+            ex = StreamExecutor(ad, degree=4, chunk_size=128, tracer=tracer)
+            items = synthetic_keyed_items(512, num_keys=256, seed=7)
+            outs.append(ex.run([items[i * 128:(i + 1) * 128]
+                                for i in range(4)]))
+        for a, b in zip(*outs):
+            for ch in ("emissions", "late", "early"):
+                for k in a[ch]:
+                    np.testing.assert_array_equal(a[ch][k], b[ch][k])
+
+    def test_health_gauges_match_engine_counters_exactly(self):
+        tr = Tracer()
+        ad, ex = _run_fused(tr, n_chunks=8, chunk=256)
+        reg = MetricsRegistry()
+        ad.export_health(reg)
+        snap = reg.snapshot()
+        # per-shard device-tier occupancy == the batched plane's row counts
+        occ = ad._batched.per_shard_occupancy()
+        n_w = ex.degree
+        for w in range(n_w):
+            assert snap["gauges"][f"keyed.shard{w}.occupancy"] == int(occ[w])
+            assert snap["gauges"][f"keyed.shard{w}.resident_rows"] == int(occ[w])
+            assert snap["gauges"][f"keyed.shard{w}.spill_rows"] == \
+                ad.shards[w].store.num_rows()
+        assert snap["gauges"]["keyed.plane.resident_rows"] == int(occ.sum())
+        # counters == the exact sums the barrier snapshot serializes
+        barrier = ex.snapshot_barrier()
+        assert snap["counters"]["keyed.table.inserted"] == int(barrier["t_inserted"])
+        assert snap["counters"]["keyed.table.hits"] == int(barrier["t_hits"])
+        assert snap["counters"]["keyed.table.spilled"] == int(barrier["t_spilled"])
+        assert snap["counters"]["keyed.table.evicted"] == int(barrier["t_evicted"])
+        assert snap["counters"]["keyed.late"] == int(barrier["late_count"])
+
+    def test_probe_distances_are_consistent(self):
+        ad, _ = _run_fused(Tracer(), n_chunks=8, chunk=256)
+        healths = ad._batched.per_shard_health()
+        for w, h in enumerate(healths):
+            t = ad.shards[w].table
+            assert h["occupancy"] == t.occupancy
+            th = t.health()
+            assert h["probe_mean"] == pytest.approx(th["probe_mean"])
+            assert h["probe_max"] == th["probe_max"]

@@ -34,7 +34,7 @@ from repro.runtime import (
     UtilizationPolicy,
     pump,
 )
-from repro.runtime.metrics import ChunkRecord
+from repro.runtime.metrics import ChunkRecord, ResizeRecord
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
 _REPO = os.path.dirname(_HERE)
@@ -179,6 +179,134 @@ class TestMetricsBus:
     def test_summary_fields(self):
         s = _feed(MetricsBus(clock=LogicalClock())).summary()
         assert s["chunks"] == 8 and s["items"] == 8 * 16 and s["degree"] == 4
+
+    def test_summary_service_percentiles(self):
+        s = _feed(MetricsBus(clock=LogicalClock())).summary()
+        # every chunk took exactly 2.0 -> all percentiles are exact
+        for k in ("service_p50", "service_p95", "service_p99"):
+            assert s[k] == pytest.approx(2.0)
+
+    def test_throughput_unions_overlapping_chunk_intervals(self):
+        # the double-buffered pipeline: chunk k+1's interval overlaps chunk
+        # k's.  [0,2] and [1,3] cover a union of 3 time units, not 2+2
+        bus = MetricsBus(clock=LogicalClock())
+        for t0, t1 in ((0.0, 2.0), (1.0, 3.0)):
+            bus.record_chunk(ChunkRecord(t_start=t0, t_end=t1, m=10,
+                                         n_workers=2, queue_depth=0))
+        assert bus.throughput() == pytest.approx(20 / 3.0)
+
+    def test_throughput_excludes_idle_gaps(self):
+        # [0,2] then [10,12]: 8 idle units between chunks are not
+        # processing time — the span is 4, not 12
+        bus = MetricsBus(clock=LogicalClock())
+        for t0, t1 in ((0.0, 2.0), (10.0, 12.0)):
+            bus.record_chunk(ChunkRecord(t_start=t0, t_end=t1, m=10,
+                                         n_workers=2, queue_depth=0))
+        assert bus.throughput() == pytest.approx(20 / 4.0)
+
+    def test_throughput_handles_completion_order_records(self):
+        # records land in COMPLETION order: a long chunk started first can
+        # finish last, so recent[-1].t_end - recent[0].t_start is wrong in
+        # both directions.  [1,2] completes before [0,3]; union span = 3
+        bus = MetricsBus(clock=LogicalClock())
+        for t0, t1 in ((1.0, 2.0), (0.0, 3.0)):
+            bus.record_chunk(ChunkRecord(t_start=t0, t_end=t1, m=6,
+                                         n_workers=2, queue_depth=0))
+        assert bus.throughput() == pytest.approx(12 / 3.0)
+
+    def test_throughput_edge_cases(self):
+        bus = MetricsBus(clock=LogicalClock())
+        assert bus.throughput() is None            # empty window
+        assert bus.mean_service_time() is None
+        assert bus.utilization() is None
+        bus.record_chunk(ChunkRecord(t_start=1.0, t_end=1.0, m=4,
+                                     n_workers=2, queue_depth=0))
+        assert bus.throughput() is None            # zero-duration span
+        assert bus.t_f_hat is None                 # no usable service sample
+        assert bus.summary()["chunks"] == 1        # still counted
+
+    def test_utilization_explicit_vs_inferred_arrival_rate(self):
+        bus = _feed(MetricsBus(clock=LogicalClock()))  # t_f_hat=0.5, n_w=4
+        # inferred: throughput 8 items/s -> 8 * 0.5 / 4 = 1.0
+        assert bus.utilization() == pytest.approx(1.0)
+        # explicit offered load overrides the measured lower bound
+        assert bus.utilization(arrival_rate=4.0) == pytest.approx(0.5)
+        assert bus.utilization(arrival_rate=16.0) == pytest.approx(2.0)
+
+    def test_expected_service_time_matches_core_analytics(self):
+        from repro.core import analytics
+
+        bus = _feed(MetricsBus(clock=LogicalClock()))  # t_f_hat = 0.5
+        for n_w in (1, 2, 4, 8, 16):
+            for t_a in (0.0, 0.1, 1.0):
+                assert bus.expected_service_time(n_w, t_a=t_a) == \
+                    pytest.approx(analytics.service_time(t_a, 0.5, n_w))
+
+    def test_rolling_history_bounds_memory_but_keeps_aggregates(self):
+        bus = MetricsBus(clock=LogicalClock(), window=4, history=16)
+        n = 1000
+        for i in range(n):
+            bus.record_chunk(ChunkRecord(t_start=float(i), t_end=i + 1.0,
+                                         m=10, n_workers=2, queue_depth=i,
+                                         collector_updates=2))
+            bus.record_depth(i)
+            bus.record_resize(ResizeRecord(
+                t=float(i), n_old=2, n_new=2, protocol="p",
+                handoff_items=3, reason="r", handoff_rows=5,
+                handoff_bytes=40,
+            ))
+        # raw record lists are rolling windows ...
+        assert len(bus.chunks) <= 2 * 16
+        assert len(bus.resizes) <= 2 * 16
+        assert len(bus.depth_samples) <= 2 * 16
+        # ... while every aggregate stays exact over the whole run
+        s = bus.summary()
+        assert s["chunks"] == n and s["items"] == 10 * n
+        assert s["resizes"] == n
+        assert s["service_p50"] == pytest.approx(1.0)
+        mv = bus.migration_volume()
+        assert mv == {"resizes": n, "handoffs": n, "slots": 3 * n,
+                      "rows": 5 * n, "bytes": 40 * n}
+        # windowed signals keep working on the retained tail
+        assert bus.throughput() == pytest.approx(10.0)
+        assert s["collector_pressure"] == pytest.approx(0.2)
+
+    def test_trim_preserves_summary_and_migration_outputs_exactly(self):
+        # regression: the same stream through a trimming bus and an
+        # effectively-unbounded one must report identical aggregates
+        small = MetricsBus(clock=LogicalClock(), window=4, history=8)
+        big = MetricsBus(clock=LogicalClock(), window=4, history=10_000)
+        for i in range(500):
+            rec = ChunkRecord(t_start=float(i), t_end=i + 0.5, m=7,
+                              n_workers=3, queue_depth=0)
+            small.record_chunk(rec)
+            big.record_chunk(rec)
+            if i % 10 == 0:
+                rr = ResizeRecord(t=float(i), n_old=3, n_new=3,
+                                  protocol="p", handoff_items=2, reason="r",
+                                  handoff_rows=i % 3, handoff_bytes=8 * (i % 3))
+                small.record_resize(rr)
+                big.record_resize(rr)
+        assert small.migration_volume() == big.migration_volume()
+        s, b = small.summary(), big.summary()
+        for k in ("chunks", "items", "resizes", "throughput", "t_f_hat",
+                  "service_p50", "service_p95", "service_p99"):
+            assert s[k] == pytest.approx(b[k]), k
+
+    def test_resize_timeline_shape(self):
+        bus = MetricsBus(clock=LogicalClock())
+        bus.record_resize(ResizeRecord(t=1.0, n_old=2, n_new=4,
+                                       protocol="S2-slotmap-handoff",
+                                       handoff_items=8, reason="grow",
+                                       handoff_rows=12, handoff_bytes=672))
+        (ev,) = bus.resize_timeline()
+        assert ev == {"t": 1.0, "n_old": 2, "n_new": 4,
+                      "protocol": "S2-slotmap-handoff", "slots": 8,
+                      "rows": 12, "bytes": 672, "reason": "grow"}
+
+    def test_history_must_cover_window(self):
+        with pytest.raises(ValueError, match="history"):
+            MetricsBus(clock=LogicalClock(), window=32, history=8)
 
 
 # ---------------------------------------------------------------------------
