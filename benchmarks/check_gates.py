@@ -23,6 +23,13 @@ Three gate kinds per suite:
   relative claim ("fused is >= 3x the per-shard loop") *directly*, instead
   of approximating it with two absolute bands whose centers drift
   independently across runners.
+* ``stage_profile`` — per-stage medians from a fresh Chrome-trace artifact
+  (e.g. ``results/keyed_fused_trace.json``) vs committed baselines: each
+  stage's median duration as a share of the anchor span's median must stay
+  within a multiplicative ``factor`` of the committed share.  Shares are
+  machine-relative (a faster runner speeds every stage alike), so this
+  catches a *single stage* regressing even when total chunk time still
+  fits its band; ``--update`` refreshes the committed shares.
 
 Values are addressed by dotted paths with list indexing, e.g.
 ``hot_path[2].speedup`` or ``device_table.speedup``.
@@ -52,6 +59,51 @@ def resolve(obj, path: str):
     for name, idx in _TOKEN.findall(path):
         obj = obj[int(idx)] if idx else obj[name]
     return obj
+
+
+def _stage_medians(doc: dict) -> dict:
+    """Median duration per span name over a Chrome-trace document."""
+    durs: dict = {}
+    for ev in doc.get("traceEvents", []):
+        if ev.get("ph") != "X":
+            continue
+        durs.setdefault(ev["name"], []).append(float(ev.get("dur", 0.0)))
+    out = {}
+    for name, ds in durs.items():
+        ds.sort()
+        n = len(ds)
+        out[name] = ds[n // 2] if n % 2 else 0.5 * (ds[n // 2 - 1] + ds[n // 2])
+    return out
+
+
+def check_stage_profile(name: str, prof: dict, root: str) -> list:
+    """Per-stage median shares of the anchor vs the committed profile."""
+    rows = []
+    tpath = os.path.join(root, prof["trace"])
+    if not os.path.exists(tpath):
+        return [("stage", f"{name}:{prof['trace']}", False,
+                 "trace missing — run the benchmark")]
+    with open(tpath) as f:
+        doc = json.load(f)
+    med = _stage_medians(doc)
+    anchor = prof.get("anchor", "chunk")
+    factor = prof.get("factor", 2.0)
+    a = med.get(anchor)
+    if not a:
+        # fail closed: without the anchor there is no denominator, and a
+        # trace that lost its anchor spans is itself a regression
+        return [("stage", f"{name}:{anchor}", False,
+                 f"anchor span {anchor!r} absent or zero in trace")]
+    for s, want in prof["stages"].items():
+        got = med.get(s)
+        if got is None:
+            rows.append(("stage", f"{name}:{s}", False, "no spans in trace"))
+            continue
+        share = got / a
+        lo, hi = want / factor, want * factor
+        rows.append(("stage", f"{name}:{s}", lo <= share <= hi,
+                     f"median share {share:.4g}, band [{lo:.4g}, {hi:.4g}]"))
+    return rows
 
 
 def check_suite(name: str, spec: dict, root: str) -> list:
@@ -99,18 +151,32 @@ def check_suite(name: str, spec: dict, root: str) -> list:
         rows.append(("ratio", f"{name}:{p}", lo <= got <= hi,
                      f"got {num:.4g}/{den:.4g} = {got:.4g}, "
                      f"bounds [{lo:.4g}, {hi:.4g}]"))
+    if "stage_profile" in spec:
+        rows.extend(check_stage_profile(name, spec["stage_profile"], root))
     return rows
 
 
 def update_bands(baselines: dict, root: str) -> None:
     for spec in baselines.values():
         path = os.path.join(root, spec["file"])
-        if not os.path.exists(path):
-            continue
-        with open(path) as f:
-            rep = json.load(f)
-        for p, band in spec.get("band", {}).items():
-            band["value"] = resolve(rep, p)
+        if os.path.exists(path):
+            with open(path) as f:
+                rep = json.load(f)
+            for p, band in spec.get("band", {}).items():
+                band["value"] = resolve(rep, p)
+        prof = spec.get("stage_profile")
+        if prof:
+            tpath = os.path.join(root, prof["trace"])
+            if not os.path.exists(tpath):
+                continue
+            with open(tpath) as f:
+                med = _stage_medians(json.load(f))
+            a = med.get(prof.get("anchor", "chunk"))
+            if not a:
+                continue
+            for s in list(prof["stages"]):
+                if med.get(s):
+                    prof["stages"][s] = med[s] / a
 
 
 def main(argv=None) -> int:

@@ -196,10 +196,6 @@ def _pipeline_section():
     }
 
 
-STAGES = ("route", "expand_panes", "dedup_cells", "reduce_by_cell",
-          "table_update", "close")
-
-
 def _tracing_section():
     """Observability cost + fidelity at the gated degree, one pass:
 
@@ -221,6 +217,7 @@ def _tracing_section():
       snapshot riding along) and the flat metrics snapshot, which CI
       uploads next to the JSON reports.
     """
+    from repro.keyed import FUSED_STAGES as STAGES
     from repro.obs import MetricsRegistry, Tracer, write_metrics, write_trace
 
     items = _standing_stream(WARM_CHUNKS + MEAS_CHUNKS)

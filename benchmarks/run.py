@@ -29,6 +29,7 @@ def main() -> None:
         "benchmarks.keyed_throughput",
         "benchmarks.keyed_migration",
         "benchmarks.keyed_fused",
+        "benchmarks.slo_loop",
         "benchmarks.kernel_bench",
         "benchmarks.roofline",
     ]

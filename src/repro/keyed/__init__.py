@@ -23,6 +23,7 @@ Layers (see README.md "Keyed windowed state"):
 
 from repro.keyed.kernels import dedup_cells, reduce_by_cell, sort_by_cell
 from repro.keyed.runtime import (
+    FUSED_STAGES,
     ITEM_DTYPE,
     KeyedWindowAdapter,
     keyed_stream,
@@ -46,6 +47,7 @@ from repro.keyed.table import (
 from repro.keyed.windows import KeyedWindowEngine, WindowSpec, expand_panes
 
 __all__ = [
+    "FUSED_STAGES",
     "ITEM_DTYPE",
     "BatchedWindowTable",
     "DeviceWindowTable",

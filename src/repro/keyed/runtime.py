@@ -82,6 +82,14 @@ _ROW_COLS = (
 )
 _STAT_KEYS = ("t_inserted", "t_hits", "t_spilled", "t_evicted")
 
+#: the six fused-pipeline stage span names, in execution order — the single
+#: source of truth for stage-coverage accounting, the per-stage regression
+#: detector (repro.obs.detect), and the CI stage-profile gate
+FUSED_STAGES = (
+    "route", "expand_panes", "dedup_cells", "reduce_by_cell",
+    "table_update", "close",
+)
+
 
 def keyed_stream(keys, values, ts) -> np.ndarray:
     """Pack columns into the keyed item record array sources/queues carry."""

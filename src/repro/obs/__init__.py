@@ -4,8 +4,12 @@ The instrument panel the scaling roadmap reads: nested span tracing over
 the fused keyed pipeline / executor / serving engine
 (:mod:`repro.obs.trace`), a counters/gauges/log-bucket-histogram registry
 (:mod:`repro.obs.metrics`), Chrome/Perfetto trace export
-(:mod:`repro.obs.export`), and a markdown report renderer
-(``python -m repro.obs.report``).
+(:mod:`repro.obs.export`), a markdown report renderer
+(``python -m repro.obs.report``), and — the load-bearing half — declarative
+SLOs with error-budget burn rates (:mod:`repro.obs.slo`), an online
+per-stage regression detector over the span stream
+(:mod:`repro.obs.detect`), and the :class:`~repro.obs.trace.FlightRecorder`
+black box the supervisor dumps on failure.
 
 Disabled by default everywhere: instrumented hot paths hold
 :data:`~repro.obs.trace.NULL_TRACER` and pay one attribute load + no-op
@@ -14,11 +18,15 @@ baselines).
 """
 
 from repro.obs.clock import LogicalClock, WallClock
+from repro.obs.detect import RegressionDetector, StageBaseline, StageRegression
 from repro.obs.export import chrome_trace, write_metrics, write_trace
 from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.slo import SLOEngine, SLOSpec, SLOStatus, SLOTracker
 from repro.obs.trace import (
+    FLIGHT_RECORDER,
     NULL_TRACER,
     CounterRecord,
+    FlightRecorder,
     InstantRecord,
     NullTracer,
     SpanRecord,
@@ -26,16 +34,25 @@ from repro.obs.trace import (
 )
 
 __all__ = [
+    "FLIGHT_RECORDER",
     "NULL_TRACER",
     "Counter",
     "CounterRecord",
+    "FlightRecorder",
     "Gauge",
     "Histogram",
     "InstantRecord",
     "LogicalClock",
     "MetricsRegistry",
     "NullTracer",
+    "RegressionDetector",
+    "SLOEngine",
+    "SLOSpec",
+    "SLOStatus",
+    "SLOTracker",
     "SpanRecord",
+    "StageBaseline",
+    "StageRegression",
     "Tracer",
     "WallClock",
     "chrome_trace",

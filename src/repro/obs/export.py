@@ -35,9 +35,13 @@ def _args(d) -> Optional[Dict]:
 
 
 def chrome_trace(tracer, *, registry=None, pid: int = 0,
-                 process_name: str = "repro") -> Dict:
+                 process_name: str = "repro",
+                 extra: Optional[Dict] = None) -> Dict:
     """Render ``tracer`` (and optionally a metrics registry) to one dict in
-    Chrome trace-event JSON object form."""
+    Chrome trace-event JSON object form.  ``tracer`` is duck-typed: anything
+    with ``spans`` / ``instants`` / ``counters`` / ``dropped`` works — a
+    :class:`~repro.obs.trace.FlightRecorder` dump uses the same path.
+    ``extra`` merges additional keys under ``otherData``."""
     events: List[Dict] = []
     tids = set()
     for s in tracer.spans:
@@ -80,15 +84,27 @@ def chrome_trace(tracer, *, registry=None, pid: int = 0,
         "displayTimeUnit": "ms",
         "otherData": {"dropped_events": tracer.dropped},
     }
+    for kind in ("spans", "instants", "counters"):
+        n = getattr(tracer, f"dropped_{kind}", None)
+        if n is not None:
+            out["otherData"][f"dropped_{kind}"] = n
     if registry is not None:
+        # saturation must be visible in the snapshot, not just the trace
+        export_drops = getattr(tracer, "export_drops", None)
+        if export_drops is not None:
+            export_drops(registry)
         out["otherData"]["metrics"] = registry.snapshot()
+    if extra:
+        out["otherData"].update(extra)
     return out
 
 
 def write_trace(path: str, tracer, *, registry=None,
-                process_name: str = "repro") -> Dict:
+                process_name: str = "repro",
+                extra: Optional[Dict] = None) -> Dict:
     """Write the Perfetto-loadable trace artifact; returns the dict."""
-    doc = chrome_trace(tracer, registry=registry, process_name=process_name)
+    doc = chrome_trace(tracer, registry=registry, process_name=process_name,
+                       extra=extra)
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
         f.write("\n")

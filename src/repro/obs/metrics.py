@@ -22,6 +22,8 @@ import json
 import math
 from typing import Dict, Optional
 
+import numpy as np
+
 
 class Counter:
     """Monotonic event count."""
@@ -98,6 +100,40 @@ class Histogram:
         else:
             self.counts[idx] += 1
 
+    def record_many(self, values) -> None:
+        """Vectorized :meth:`record` for the hot path: one ``log`` + one
+        ``bincount`` over the whole batch instead of a Python loop.  Produces
+        bit-identical state to recording each value individually."""
+        v = np.asarray(values, dtype=np.float64).ravel()
+        if v.size == 0:
+            return
+        self.count += int(v.size)
+        self.total += float(v.sum())
+        vmin, vmax = float(v.min()), float(v.max())
+        if self.min is None or vmin < self.min:
+            self.min = vmin
+        if self.max is None or vmax > self.max:
+            self.max = vmax
+        under = v < self.lo
+        idx = np.zeros(v.shape, dtype=np.int64)
+        ok = ~under
+        if ok.any():
+            idx[ok] = 1 + (np.log(v[ok] / self.lo) * self._scale).astype(np.int64)
+        idx = np.minimum(idx, len(self.counts) - 1)
+        binned = np.bincount(idx, minlength=len(self.counts))
+        for i in np.nonzero(binned)[0]:
+            self.counts[i] += int(binned[i])
+
+    @property
+    def underflow(self) -> int:
+        """Samples below ``lo`` (kept in their own bin, not clamped)."""
+        return self.counts[0]
+
+    @property
+    def overflow(self) -> int:
+        """Samples at or above ``hi`` (kept in their own bin, not clamped)."""
+        return self.counts[-1]
+
     def percentile(self, q: float) -> Optional[float]:
         """Value at quantile ``q`` in [0, 1] (None while empty)."""
         if not self.count:
@@ -137,7 +173,9 @@ class Histogram:
     def snapshot(self) -> Dict[str, Optional[float]]:
         return {
             "count": self.count, "total": self.total, "mean": self.mean,
-            "min": self.min, "max": self.max, **self.percentiles(),
+            "min": self.min, "max": self.max,
+            "underflow": self.underflow, "overflow": self.overflow,
+            **self.percentiles(),
         }
 
 

@@ -62,7 +62,13 @@ def stage_table(doc: Dict, *, anchor: str = "chunk") -> List[str]:
         return ["(no spans in trace)"]
     wall = (t_hi - t_lo) if t_hi is not None else 0.0
     anchor_total = sum(spans.get(anchor, [])) or None
-    lines = [
+    lines = []
+    if anchor_total is None:
+        # serving traces anchor on "tick", partial flight-recorder dumps may
+        # hold no anchor at all — report absolute/wall shares, don't divide
+        lines += [f"(anchor span {anchor!r} absent — "
+                  f"shares of {anchor} unavailable)", ""]
+    lines += [
         f"| stage | count | total | mean | p50 | p95 | p99 | "
         f"% of {anchor} | % of wall |",
         "|---|---|---|---|---|---|---|---|---|",
@@ -120,14 +126,15 @@ def metrics_tables(doc: Dict) -> List[str]:
     return lines
 
 
-def render(doc: Dict, *, title: str = "Trace report") -> str:
+def render(doc: Dict, *, title: str = "Trace report",
+           anchor: str = "chunk") -> str:
     dropped = (doc.get("otherData") or {}).get("dropped_events", 0)
     lines = [f"# {title}", ""]
     if dropped:
         lines += [f"**WARNING: {dropped} events dropped "
                   f"(tracer buffer full)**", ""]
     lines += ["## Per-stage time breakdown", ""]
-    lines += stage_table(doc)
+    lines += stage_table(doc, anchor=anchor)
     lines += instant_table(doc)
     lines += metrics_tables(doc)
     return "\n".join(lines) + "\n"
@@ -139,9 +146,13 @@ def main(argv=None) -> int:
     ap.add_argument("-o", "--out", default=None,
                     help="write markdown here (default: stdout)")
     ap.add_argument("--title", default=None)
+    ap.add_argument("--anchor", default="chunk",
+                    help="span name shares are computed against "
+                         "(default: chunk; serving traces use tick)")
     args = ap.parse_args(argv)
     doc = load(args.trace)
-    md = render(doc, title=args.title or f"Trace report — {args.trace}")
+    md = render(doc, title=args.title or f"Trace report — {args.trace}",
+                anchor=args.anchor)
     if args.out:
         with open(args.out, "w") as f:
             f.write(md)

@@ -22,12 +22,23 @@ Overhead contract
 
 Event buffers are bounded (``max_events``): a long-running serving process
 keeps the newest events and counts the drop, it never grows without limit.
+Drops are counted **per kind** (``dropped_spans`` / ``dropped_instants`` /
+``dropped_counters``) and :meth:`Tracer.export_drops` publishes them as
+registry counters so buffer saturation is visible in the metrics snapshot
+instead of silent.
+
+A :class:`FlightRecorder` is the complementary bound: a ring that keeps the
+**newest** events (the main buffers keep the oldest), so the moments just
+before a failure survive even on a saturated tracer.  The supervisor dumps
+it as a Chrome-trace "black box" artifact on worker failure and
+checkpoint-restore.
 """
 
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Tuple
+from collections import deque
+from typing import Dict, List, Optional, Tuple
 
 from repro.obs.clock import WallClock
 
@@ -135,17 +146,29 @@ class Tracer:
 
     enabled = True
 
-    def __init__(self, *, clock=None, max_events: int = 1_000_000):
+    def __init__(self, *, clock=None, max_events: int = 1_000_000,
+                 recorder: Optional["FlightRecorder"] = "default"):  # type: ignore[assignment]
         self.clock = clock if clock is not None else WallClock()
         self.max_events = max_events
         self.spans: List[SpanRecord] = []
         self.instants: List[InstantRecord] = []
         self.counters: List[CounterRecord] = []
-        self.dropped = 0
+        self.dropped_spans = 0
+        self.dropped_instants = 0
+        self.dropped_counters = 0
+        # every enabled tracer feeds the process-wide black box by default
+        # (pass recorder=None to opt out); the ring keeps NEWEST events, so
+        # it still sees what a saturated main buffer drops
+        self.recorder = FLIGHT_RECORDER if recorder == "default" else recorder
         self._lock = threading.Lock()
         self._local = threading.local()
         self._next_tid = 0
         self._n_events = 0
+
+    @property
+    def dropped(self) -> int:
+        """Total events dropped by the bounded buffers (all kinds)."""
+        return self.dropped_spans + self.dropped_instants + self.dropped_counters
 
     # -- recording -----------------------------------------------------------
     def span(self, name: str, **args) -> _ActiveSpan:
@@ -178,9 +201,19 @@ class Tracer:
         return state
 
     def _append(self, buf: List, rec) -> None:
+        recorder = self.recorder
+        if recorder is not None:
+            # before the drop check: the black box keeps newest events even
+            # when the main buffer is saturated
+            recorder.push(rec)
         with self._lock:
             if self._n_events >= self.max_events:
-                self.dropped += 1
+                if type(rec) is SpanRecord:
+                    self.dropped_spans += 1
+                elif type(rec) is InstantRecord:
+                    self.dropped_instants += 1
+                else:
+                    self.dropped_counters += 1
                 return
             self._n_events += 1
             buf.append(rec)
@@ -192,8 +225,18 @@ class Tracer:
             self.spans.clear()
             self.instants.clear()
             self.counters.clear()
-            self.dropped = 0
+            self.dropped_spans = 0
+            self.dropped_instants = 0
+            self.dropped_counters = 0
             self._n_events = 0
+
+    def export_drops(self, registry) -> None:
+        """Publish per-kind drop counts as registry counters
+        (``obs.tracer.dropped_spans`` / ``..._instants`` / ``..._counters``),
+        so buffer saturation shows up in the metrics snapshot."""
+        registry.counter("obs.tracer.dropped_spans").value = self.dropped_spans
+        registry.counter("obs.tracer.dropped_instants").value = self.dropped_instants
+        registry.counter("obs.tracer.dropped_counters").value = self.dropped_counters
 
     def total_by_name(self) -> Dict[str, Tuple[int, float]]:
         """``name -> (count, total duration)`` over the buffered spans."""
@@ -249,6 +292,67 @@ class NullTracer:
     def total_by_name(self) -> Dict[str, Tuple[int, float]]:
         return {}
 
+    def export_drops(self, registry) -> None:
+        return None
+
 
 #: the process-wide disabled tracer — instrumented modules default to this
 NULL_TRACER = NullTracer()
+
+
+class FlightRecorder:
+    """Bounded ring of the **newest** spans / instants / counter samples,
+    plus a short ring of metrics snapshots — the runtime's black box.
+
+    The main tracer buffers keep the *oldest* ``max_events`` events and count
+    drops; the recorder inverts that, so the timeline leading *into* a
+    failure is always available.  :meth:`dump` writes a Chrome-trace artifact
+    (the recorder duck-types the `Tracer` surface `chrome_trace` reads), and
+    the supervisor calls it on worker failure and checkpoint-restore.
+    """
+
+    def __init__(self, capacity: int = 4096, metrics_capacity: int = 16):
+        self.capacity = capacity
+        self.spans = deque(maxlen=capacity)
+        self.instants = deque(maxlen=capacity)
+        self.counters = deque(maxlen=capacity)
+        self.metrics_ring = deque(maxlen=metrics_capacity)
+        self.dropped = 0   # rings overwrite, they never silently drop
+
+    def push(self, rec) -> None:
+        """Called by `Tracer._append` for every event (even dropped ones)."""
+        if type(rec) is SpanRecord:
+            self.spans.append(rec)
+        elif type(rec) is InstantRecord:
+            self.instants.append(rec)
+        else:
+            self.counters.append(rec)
+
+    def sample_metrics(self, registry, t: Optional[float] = None) -> None:
+        """Append one registry snapshot to the (short) metrics ring."""
+        self.metrics_ring.append({"t": t, "snapshot": registry.snapshot()})
+
+    def reset(self) -> None:
+        self.spans.clear()
+        self.instants.clear()
+        self.counters.clear()
+        self.metrics_ring.clear()
+
+    def __len__(self) -> int:
+        return len(self.spans) + len(self.instants) + len(self.counters)
+
+    def dump(self, path: str, *, registry=None,
+             process_name: str = "blackbox") -> dict:
+        """Write the ring as a Chrome-trace JSON "black box" and return the
+        document.  ``registry`` adds a final metrics snapshot; the rolling
+        :attr:`metrics_ring` rides along under ``otherData``."""
+        from repro.obs.export import write_trace
+
+        doc = write_trace(path, self, registry=registry,
+                          process_name=process_name,
+                          extra={"metrics_ring": list(self.metrics_ring)})
+        return doc
+
+
+#: the process-wide black box every enabled `Tracer` feeds by default
+FLIGHT_RECORDER = FlightRecorder()

@@ -18,11 +18,20 @@ discussion cares about:
 * :class:`ThroughputTargetPolicy` — model-driven: pick the smallest degree
   whose analytic service time (paper §2, with measured ``t_f_hat``) meets a
   throughput target.
+
+:class:`SLOLatencyPolicy` closes the observability loop (PR 7): it plans
+against a **latency percentile objective** instead of a throughput target,
+reading the bus's rolling chunk records (optionally cross-checked by an
+:class:`~repro.obs.slo.SLOTracker` burn rate fed from obs histograms) and
+proposing the smallest degree whose modeled p-quantile latency meets the
+objective.  Every applied :class:`Decision` is annotated on the executor's
+tracer with the triggering signal.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional, Sequence
 
 from repro.core import analytics
@@ -104,6 +113,115 @@ class ThroughputTargetPolicy(Policy):
         return max(candidates)
 
 
+def _pquant(xs: List[float], q: float) -> Optional[float]:
+    """Exact interpolated quantile (xs need not be sorted)."""
+    if not xs:
+        return None
+    xs = sorted(xs)
+    if len(xs) == 1:
+        return xs[0]
+    pos = q * (len(xs) - 1)
+    i = int(math.floor(pos))
+    if i + 1 >= len(xs):
+        return xs[-1]
+    frac = pos - i
+    return xs[i] * (1 - frac) + xs[i + 1] * frac
+
+
+@dataclasses.dataclass
+class SLOLatencyPolicy(Policy):
+    """Smallest degree whose modeled p-quantile latency meets the objective.
+
+    **Partitioned mode** (the default, for chunked farms): each rolling
+    chunk record is degree-normalized into *work* ``service_time *
+    n_workers`` — valid under the paper's §2 model ``T(n) = max(t_a,
+    work/n)`` and robust across resizes inside the window.  The policy takes
+    the q-quantile of the work distribution and picks the smallest candidate
+    ``n`` with ``max(t_a, work_q / n) <= objective * headroom`` — shrinking
+    all the way down when over-provisioned, growing when breaching.  When an
+    attached :class:`~repro.obs.slo.SLOTracker` reports a burn-rate breach
+    that the model disagrees with (its samples may come from elsewhere, e.g.
+    registry histograms), the policy still steps up one rung: the budget is
+    the promise, the model only a predictor.
+
+    **Serving mode** (``mode="serving"``): tick latency does not scale like
+    ``1/slots`` (decode cost *grows* with batch), so the policy is
+    directional: breach or burn -> step the slot count down (smaller
+    batches, faster ticks), healthy + queue pressure -> step up, else hold.
+
+    If ``histogram`` is set (e.g. the serving ``decode_step_s`` registry
+    histogram), each ``target()`` call first folds its new samples into the
+    tracker — obs telemetry feeding the control loop directly.  The last
+    decision rationale is published as ``last_signal``; the autoscaler
+    stamps it onto every :class:`Decision` and the trace.
+    """
+
+    objective: float
+    q: float = 0.99
+    window: int = 16                 # rolling chunk records consulted
+    headroom: float = 1.0            # plan against objective * headroom
+    t_a: float = 0.0
+    mode: str = "partitioned"        # "partitioned" | "serving"
+    tracker: Optional[object] = None     # repro.obs.slo.SLOTracker
+    histogram: Optional[object] = None   # repro.obs.metrics.Histogram
+    last_signal: str = ""
+
+    def _slo_verdict(self) -> str:
+        if self.tracker is None:
+            return "none"
+        if self.histogram is not None:
+            self.tracker.ingest_histogram(self.histogram)
+        return self.tracker.evaluate().verdict
+
+    def target(self, bus, current, candidates, queue=None) -> int:
+        verdict = self._slo_verdict()
+        recs = [r for r in bus.recent_chunks(self.window)
+                if r.service_time > 0 and r.m > 0]
+        if not recs:
+            self.last_signal = f"hold: no chunk records (slo={verdict})"
+            return current
+        if self.mode == "serving":
+            return self._serving_target(recs, verdict, current, candidates,
+                                        queue)
+        work_q = _pquant([r.service_time * r.n_workers for r in recs], self.q)
+        budget = self.objective * self.headroom
+        fits = [n for n in candidates
+                if max(self.t_a, work_q / n) <= budget]
+        predicted = max(self.t_a, work_q / current)
+        if verdict == "breach" and (not fits or min(fits) <= current):
+            # budget burning faster than the model explains: grow one rung
+            n = _step_up(candidates, current)
+            why = "burn-rate breach overrides model"
+        elif fits:
+            n = min(fits)
+            why = "smallest modeled fit"
+        else:
+            n = max(candidates)
+            why = "no candidate fits; max degree"
+        self.last_signal = (
+            f"p{self.q * 100:g}(work)={work_q:.4g} predicted(T@{current})="
+            f"{predicted:.4g} objective={self.objective:.4g} "
+            f"slo={verdict} -> {why}: {current}->{n}")
+        return n
+
+    def _serving_target(self, recs, verdict, current, candidates, queue) -> int:
+        p = _pquant([r.service_time for r in recs], self.q)
+        if p > self.objective * self.headroom or verdict == "breach":
+            n = _step_down(candidates, current)
+            why = "tick latency over objective; shrink batch"
+        elif (queue is not None and queue.depth >= queue.high_watermark
+              and verdict == "ok"):
+            n = _step_up(candidates, current)
+            why = "healthy + queue pressure; grow"
+        else:
+            n = current
+            why = "hold"
+        self.last_signal = (
+            f"p{self.q * 100:g}(tick)={p:.4g} objective={self.objective:.4g} "
+            f"slo={verdict} -> {why}: {current}->{n}")
+        return n
+
+
 @dataclasses.dataclass
 class Decision:
     chunk_index: int
@@ -116,6 +234,9 @@ class Decision:
     handoff_slots: int = 0
     handoff_rows: int = 0
     handoff_bytes: int = 0
+    # the telemetry that triggered the decision (policy's last_signal) —
+    # every Decision is traceable back to the numbers that caused it
+    signal: str = ""
 
 
 class Autoscaler:
@@ -209,6 +330,7 @@ class Autoscaler:
             reason=f"{type(self.policy).__name__}: {current}->{target}",
         )
         self.notify_resized()
+        signal = getattr(self.policy, "last_signal", "")
         d = Decision(
             chunk_index=executor.chunks_done,
             current=current,
@@ -218,6 +340,14 @@ class Autoscaler:
             handoff_slots=rec.handoff_items if rec else 0,
             handoff_rows=rec.handoff_rows if rec else 0,
             handoff_bytes=rec.handoff_bytes if rec else 0,
+            signal=signal,
         )
+        tracer = getattr(executor, "tracer", None)
+        if tracer is not None:
+            tracer.instant(
+                "autoscale.decision", chunk=d.chunk_index, current=current,
+                proposed=target, applied=d.applied,
+                policy=type(self.policy).__name__, signal=signal or d.reason,
+            )
         self.decisions.append(d)
         return d

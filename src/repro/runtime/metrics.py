@@ -151,6 +151,13 @@ class MetricsBus:
     def _recent(self) -> List[ChunkRecord]:
         return self.chunks[-self._window :]
 
+    def recent_chunks(self, k: Optional[int] = None) -> List[ChunkRecord]:
+        """The newest ``min(k, window)`` chunk records — the rolling view
+        latency policies plan from (each record carries ``n_workers``, so a
+        consumer can degree-normalize across resizes inside the window)."""
+        k = self._window if k is None else min(k, self._window)
+        return self.chunks[-k:]
+
     def throughput(self) -> Optional[float]:
         """Completed items per unit time over the window.
 

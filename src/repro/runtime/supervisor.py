@@ -10,6 +10,13 @@ farm lost capacity), and after ``recover_after`` healthy chunks the degree
 is restored (recovery => grow).  The deterministic chunk source makes replay
 bit-exact; outputs are keyed by chunk index so a replayed chunk overwrites
 rather than duplicates — the output stream is never dropped or reordered.
+
+Every recovery gets a timeline: when the executor's tracer feeds a
+:class:`~repro.obs.trace.FlightRecorder` (enabled tracers do by default),
+the supervisor dumps the ring as a Chrome-trace "black box" artifact under
+``<ckpt_dir>/blackbox/`` on worker failure and after checkpoint-restore —
+the last moments before the failure and the restore that followed, even if
+the main trace buffer saturated long before.
 """
 
 from __future__ import annotations
@@ -53,10 +60,19 @@ class Supervisor:
         ckpt_every: int = 1,
         failure_plan: Optional[FailurePlan] = None,
         degraded_degree: Optional[int] = None,
+        flight_recorder: Any = "default",
+        blackbox_dir: Optional[str] = None,
+        registry: Any = None,
     ):
         """``chunk_fn(i)`` regenerates chunk ``i`` (the deterministic-stream
         contract); ``degraded_degree`` is the post-failure degree (default:
-        the next-smaller compiled-or-valid power of the current degree)."""
+        the next-smaller compiled-or-valid power of the current degree).
+
+        ``flight_recorder`` is the black box dumped on failure/restore —
+        the default inherits whatever ring the executor's tracer feeds
+        (``None`` on a NULL_TRACER run, so dumping costs nothing when
+        tracing is off); pass ``None`` to disable explicitly.  ``registry``
+        (optional) rides along in every dump as a metrics snapshot."""
         self.executor = executor
         self.chunk_fn = chunk_fn
         self.num_chunks = num_chunks
@@ -64,11 +80,32 @@ class Supervisor:
         self.ckpt_every = max(1, ckpt_every)
         self.failure_plan = failure_plan
         self.degraded_degree = degraded_degree
+        if flight_recorder == "default":
+            flight_recorder = getattr(executor.tracer, "recorder", None)
+        self.flight_recorder = flight_recorder
+        self.blackbox_dir = blackbox_dir or os.path.join(ckpt_dir, "blackbox")
+        self.blackbox_paths: List[str] = []
+        self.registry = registry
         self.events: List[SupervisorEvent] = []
         self.outputs: Dict[int, Any] = {}
 
     def _log(self, i: int, kind: str, detail: str) -> None:
         self.events.append(SupervisorEvent(i, kind, detail))
+
+    def _dump_blackbox(self, i: int, kind: str) -> Optional[str]:
+        """Dump the flight-recorder ring as a Chrome-trace artifact."""
+        if self.flight_recorder is None:
+            return None
+        if self.registry is not None:
+            self.flight_recorder.sample_metrics(
+                self.registry, t=self.executor.tracer.clock.now())
+        os.makedirs(self.blackbox_dir, exist_ok=True)
+        path = os.path.join(self.blackbox_dir, f"{kind}_chunk{i}.json")
+        self.flight_recorder.dump(path, registry=self.registry,
+                                  process_name=f"blackbox:{kind}")
+        self.blackbox_paths.append(path)
+        self._log(i, "blackbox", path)
+        return path
 
     def _checkpoint(self, i: int) -> None:
         # snapshot barrier: live-state adapters (resident engine shards)
@@ -154,7 +191,11 @@ class Supervisor:
             except WorkerFailure as e:
                 self._log(i, "failure", str(e))
                 self.executor.tracer.instant("failure", chunk=i, detail=str(e))
+                # black box FIRST: the dump must show the timeline into the
+                # failure unmodified by the recovery that follows
+                self._dump_blackbox(i, "failure")
                 cursor = self._restore_latest()
+                self._dump_blackbox(i, "restore")
                 target = self._shrink_for_failure(healthy)
                 rec = self.executor.set_degree(
                     target, reason=f"failure: lost capacity at chunk {i}"

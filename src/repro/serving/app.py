@@ -24,7 +24,12 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.runtime.autoscaler import Autoscaler, Policy, QueueDepthPolicy
+from repro.runtime.autoscaler import (
+    Autoscaler,
+    Policy,
+    QueueDepthPolicy,
+    SLOLatencyPolicy,
+)
 from repro.runtime.metrics import ChunkRecord, MetricsBus, ResizeRecord
 from repro.runtime.stream import ArrivalModel, BackpressureQueue, pump
 from repro.serving.engine import Request, ServingEngine
@@ -96,8 +101,16 @@ class ServingRuntime:
             low_watermark=0,
         )
         self.metrics = metrics if metrics is not None else MetricsBus()
+        policy = policy if policy is not None else QueueDepthPolicy()
+        if (isinstance(policy, SLOLatencyPolicy) and policy.histogram is None
+                and policy.tracker is not None
+                and self.engine.registry is not None):
+            # SLO-driven serving: the engine's decode latency histogram IS
+            # the policy's burn-rate sample source (obs -> control loop)
+            policy.histogram = self.engine.registry.histogram(
+                "serving.decode_step_s")
         self.autoscaler = Autoscaler(
-            policy if policy is not None else QueueDepthPolicy(),
+            policy,
             slot_candidates,
             cooldown_chunks=cooldown_ticks,
         )
@@ -126,6 +139,7 @@ class ServingRuntime:
         moved = self.engine.resize(target)
         self.autoscaler.notify_resized()
         ev = self.engine.resize_events[-1]
+        signal = getattr(self.autoscaler.policy, "last_signal", "")
         self.metrics.record_resize(
             ResizeRecord(
                 t=self.metrics.clock.now(),
@@ -133,8 +147,14 @@ class ServingRuntime:
                 n_new=ev["new"],
                 protocol="S2-session-handoff",
                 handoff_items=moved + ev["requeued"],
-                reason=f"queue_depth={self.queue.depth}",
+                reason=signal or f"queue_depth={self.queue.depth}",
             )
+        )
+        self.tracer.instant(
+            "autoscale.decision", tick=self.t, current=ev["old"],
+            proposed=ev["new"], applied=True,
+            policy=type(self.autoscaler.policy).__name__,
+            signal=signal or f"queue_depth={self.queue.depth}",
         )
 
     def tick(self) -> TickReport:

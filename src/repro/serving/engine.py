@@ -287,6 +287,13 @@ class ServingEngine:
     def step(self) -> None:
         """One engine tick: admit waiting requests, decode all active slots."""
         self._admit()
+        # load counter track: batch occupancy + admission backlog per step
+        # (ph:"C" in the export — the saturation context every latency span
+        # and SLO verdict instant is judged against); no-op on NULL_TRACER
+        self.tracer.counter(
+            "serving.load", active=len(self.active), waiting=len(self.waiting),
+            slots=self.num_slots,
+        )
         if not self.active:
             return
         t0 = self.tracer.clock.now()

@@ -7,6 +7,7 @@ import json
 import numpy as np
 import pytest
 
+from repro.keyed import FUSED_STAGES
 from repro.keyed.runtime import KeyedWindowAdapter, synthetic_keyed_items
 from repro.keyed.windows import WindowSpec
 from repro.obs import (
@@ -22,8 +23,9 @@ from repro.obs import (
 from repro.obs import report as report_mod
 from repro.runtime.executor import StreamExecutor
 
-STAGES = ("route", "expand_panes", "dedup_cells", "reduce_by_cell",
-          "table_update", "close")
+# the runtime's fused-stage names are the single source of truth — a stage
+# renamed there without updating detectors/gates should fail HERE, not in CI
+STAGES = FUSED_STAGES
 
 
 # ---------------------------------------------------------------------------
@@ -73,6 +75,36 @@ class TestTracer:
         assert len(tr.spans) == 2 and tr.dropped == 3
         tr.reset()
         assert tr.spans == [] and tr.dropped == 0
+
+    def test_drops_counted_per_event_kind(self):
+        clk = LogicalClock()
+        tr = Tracer(clock=clk, max_events=2, recorder=None)
+        for _ in range(3):
+            with tr.span("s"):
+                clk.advance(1.0)
+        for _ in range(2):
+            tr.instant("i")
+        tr.counter("c", v=1)
+        assert tr.dropped_spans == 1
+        assert tr.dropped_instants == 2
+        assert tr.dropped_counters == 1
+        assert tr.dropped == 4
+
+    def test_export_drops_lands_in_registry_and_trace(self):
+        clk = LogicalClock()
+        tr = Tracer(clock=clk, max_events=1, recorder=None)
+        for _ in range(3):
+            with tr.span("s"):
+                clk.advance(1.0)
+        reg = MetricsRegistry()
+        tr.export_drops(reg)
+        assert reg.counter("obs.tracer.dropped_spans").value == 2
+        assert reg.counter("obs.tracer.dropped_instants").value == 0
+        # the export path refreshes the counters before snapshotting
+        doc = chrome_trace(tr, registry=reg)
+        assert doc["otherData"]["dropped_spans"] == 2
+        counters = doc["otherData"]["metrics"]["counters"]
+        assert counters["obs.tracer.dropped_spans"] == 2
 
     def test_null_tracer_is_inert_and_shared(self):
         nt = NullTracer()
@@ -131,6 +163,37 @@ class TestHistogram:
         with pytest.raises(ValueError):
             Histogram(bins_per_decade=0)
 
+    def test_underflow_overflow_exposed(self):
+        h = Histogram(lo=1.0, hi=100.0)
+        for v in (0.01, 0.5, 2.0, 50.0, 1e4, 1e5):
+            h.record(v)
+        assert h.underflow == 2
+        assert h.overflow == 2
+        assert h.count == 6
+        snap = h.snapshot()
+        assert snap["underflow"] == 2 and snap["overflow"] == 2
+
+    def test_record_many_bit_identical_to_loop(self):
+        rng = np.random.default_rng(1)
+        vals = rng.lognormal(mean=0.0, sigma=3.0, size=5000)
+        vals[:5] = 0.0  # zeros land in underflow, same as record()
+        a = Histogram(lo=1e-3, hi=1e3)
+        b = Histogram(lo=1e-3, hi=1e3)
+        for v in vals:
+            a.record(float(v))
+        b.record_many(vals)
+        assert a.counts == b.counts
+        assert a.count == b.count
+        assert a.total == pytest.approx(b.total)
+        assert (a.min, a.max) == (b.min, b.max)
+        for q in (0.5, 0.95, 0.99):
+            assert a.percentile(q) == b.percentile(q)
+
+    def test_record_many_empty_is_noop(self):
+        h = Histogram(lo=1e-3, hi=1e3)
+        h.record_many(np.array([]))
+        assert h.count == 0 and h.percentile(0.5) is None
+
 
 # ---------------------------------------------------------------------------
 # export
@@ -184,6 +247,78 @@ class TestExport:
         a = json.dumps(chrome_trace(self._traced()), sort_keys=True)
         b = json.dumps(chrome_trace(self._traced()), sort_keys=True)
         assert a == b
+
+    def test_report_handles_absent_anchor(self):
+        doc = chrome_trace(self._traced())
+        md = report_mod.render(doc, title="t", anchor="no_such_span")
+        # graceful: a note instead of a crash or silent all-blank shares
+        assert "no_such_span" in md and "absent" in md
+        # the real anchor still yields share columns
+        md2 = report_mod.render(doc, title="t", anchor="chunk")
+        assert "absent" not in md2
+
+    def test_report_cli_anchor_flag(self, tmp_path):
+        path = tmp_path / "trace.json"
+        write_trace(str(path), self._traced())
+        out = tmp_path / "r.md"
+        assert report_mod.main(
+            [str(path), "-o", str(out), "--anchor", "route"]) == 0
+        assert out.read_text()
+
+
+# ---------------------------------------------------------------------------
+# cross-source consistency: the runtime bus and the obs plane must agree
+# ---------------------------------------------------------------------------
+
+class TestCrossSourceConsistency:
+    def test_bus_percentiles_match_obs_histogram(self):
+        from repro.runtime.metrics import ChunkRecord, MetricsBus
+
+        rng = np.random.default_rng(2)
+        services = rng.lognormal(mean=-4.0, sigma=0.8, size=4000)
+        bus = MetricsBus()
+        # mirror of the bus's own histogram configuration
+        h = Histogram(lo=1e-7, hi=1e4, bins_per_decade=8)
+        t = 0.0
+        for s in services:
+            bus.record_chunk(ChunkRecord(t, t + float(s), m=64, n_workers=4,
+                                         queue_depth=0))
+            t += float(s)
+        h.record_many(services)
+        bp = bus.percentiles()
+        for name, q in (("p50", 0.50), ("p95", 0.95), ("p99", 0.99)):
+            # same implementation + same samples -> identical, not just close
+            assert bp[name] == h.percentile(q)
+            # and both within log-bucket resolution of the exact quantile
+            assert bp[name] == pytest.approx(
+                float(np.quantile(services, q)), rel=0.35)
+
+    def test_health_gauges_exact_under_slo_instrumentation(self):
+        from repro.obs.slo import SLOEngine, SLOSpec
+
+        tr = Tracer()
+        ad, ex = _run_fused(tr, n_chunks=8, chunk=256)
+        reg = MetricsRegistry()
+        engine = SLOEngine(tracer=tr)
+        tracker = engine.add(SLOSpec(name="chunk_p99", objective=1.0))
+        for s in (sp for sp in tr.spans if sp.name == "chunk"):
+            tracker.observe(s.t1 - s.t0)
+        tracker.evaluate()
+        engine.export(reg)
+        ad.export_health(reg)
+        tr.export_drops(reg)
+        snap = reg.snapshot()
+        # the SLO plane shares the registry without perturbing the engine's
+        # exact health accounting
+        barrier = ex.snapshot_barrier()
+        assert snap["counters"]["keyed.table.inserted"] == int(barrier["t_inserted"])
+        assert snap["counters"]["keyed.late"] == int(barrier["late_count"])
+        occ = ad._batched.per_shard_occupancy()
+        assert snap["gauges"]["keyed.plane.resident_rows"] == int(occ.sum())
+        # and the SLO gauges landed beside them in the same namespace
+        assert "slo.chunk_p99.p" in snap["gauges"]
+        assert "slo.chunk_p99.budget_remaining" in snap["gauges"]
+        assert snap["counters"]["obs.tracer.dropped_spans"] == 0
 
 
 # ---------------------------------------------------------------------------

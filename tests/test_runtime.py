@@ -442,6 +442,53 @@ class TestServingRuntime:
         for req in rt.requests:
             assert req.generated == sequential(req.prompt), req.rid
 
+    def test_slo_policy_drives_serving_resize(self, serving_setup):
+        """The obs loop closed over serving: the engine's decode-latency
+        registry histogram feeds the policy's SLO tracker (auto-wired by
+        ServingRuntime), an unmeetable objective breaches, and the policy
+        steps the slot count DOWN (serving mode is directional)."""
+        from repro.obs import MetricsRegistry, Tracer
+        from repro.obs.slo import SLOSpec, SLOTracker
+        from repro.runtime.autoscaler import SLOLatencyPolicy
+        from repro.serving.app import ServingRuntime, request_source
+        from repro.serving.engine import ServingEngine
+
+        cfg, params = serving_setup
+        registry = MetricsRegistry()
+        tracer = Tracer(recorder=None)
+        engine = ServingEngine(cfg, params, num_slots=8, s_max=64)
+        tracker = SLOTracker(SLOSpec(
+            name="decode", objective=1e-9, compliance=0.9,  # unmeetable
+            short_window=2, long_window=4, fast_burn=2.0, slow_burn=1.0))
+        policy = SLOLatencyPolicy(objective=1e-9, mode="serving",
+                                  tracker=tracker)
+        total, n_new = 8, 4
+        rt = ServingRuntime(
+            engine,
+            request_source(vocab=cfg.vocab_size, total=total,
+                           max_new_tokens=n_new, seed=3),
+            BurstyRate(base=0, burst=total, period=64, duty=1),
+            slot_candidates=[2, 4, 8],
+            queue_capacity=total + 2,
+            policy=policy,
+            cooldown_ticks=1,
+            tracer=tracer,
+            registry=registry,
+        )
+        # the runtime wired the decode histogram into the tracker's intake
+        assert policy.histogram is registry.histogram("serving.decode_step_s")
+        rt.run()
+        assert engine.resize_events
+        assert all(e["new"] < e["old"] for e in engine.resize_events)
+        assert engine.num_slots == 2
+        assert tracker.breaches >= 1 and tracker.total_n > 0
+        assert engine.tokens_out == total * n_new  # shrink dropped nothing
+        decisions = [i for i in tracer.instants
+                     if i.name == "autoscale.decision"]
+        assert decisions
+        assert all("shrink batch" in d.args["signal"] or "slo=breach"
+                   in d.args["signal"] for d in decisions)
+
     def test_train_loop_delegates_degree_to_autoscaler(self, tmp_path):
         """ft/driver's elastic path: at checkpoint boundaries the loop asks
         the runtime autoscaler for a degree and hands the transition to the

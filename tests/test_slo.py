@@ -1,0 +1,445 @@
+"""Tests for the closed-loop SLO plane: burn-rate objectives
+(repro.obs.slo), online stage-regression detection (repro.obs.detect), the
+SLO-driven autoscaling policy, and the flight-recorder black box."""
+
+import json
+
+import pytest
+
+from repro.obs import (
+    FLIGHT_RECORDER,
+    FlightRecorder,
+    Histogram,
+    LogicalClock,
+    MetricsRegistry,
+    Tracer,
+)
+from repro.obs.detect import RegressionDetector, StageBaseline
+from repro.obs.slo import SLOEngine, SLOSpec, SLOTracker
+from repro.runtime.autoscaler import Autoscaler, SLOLatencyPolicy
+from repro.runtime.metrics import ChunkRecord, MetricsBus
+
+
+# ---------------------------------------------------------------------------
+# SLO spec + tracker
+# ---------------------------------------------------------------------------
+
+class TestSLOSpec:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            SLOSpec(name="x", objective=0.0)
+        with pytest.raises(ValueError):
+            SLOSpec(name="x", objective=1.0, compliance=1.0)
+        with pytest.raises(ValueError):
+            SLOSpec(name="x", objective=1.0, q=0.0)
+        with pytest.raises(ValueError):
+            SLOSpec(name="x", objective=1.0, short_window=8, long_window=4)
+        with pytest.raises(ValueError):
+            SLOSpec(name="x", objective=1.0, fast_burn=0.5, slow_burn=1.0)
+        with pytest.raises(ValueError):
+            SLOSpec(name="x", objective=1.0, fast_burn=2.0, slow_burn=0.0)
+
+    def test_budget(self):
+        assert SLOSpec(name="x", objective=1.0,
+                       compliance=0.99).budget == pytest.approx(0.01)
+
+
+class TestSLOTracker:
+    def _spec(self, **kw):
+        base = dict(name="t", objective=1.0, compliance=0.9,
+                    short_window=4, long_window=16,
+                    fast_burn=2.0, slow_burn=1.0)
+        base.update(kw)
+        return SLOSpec(**base)
+
+    def test_burn_rate_math(self):
+        tr = SLOTracker(self._spec())
+        for v in (0.5, 0.5, 2.0, 2.0):  # 2 bad of 4, budget 0.1
+            tr.observe(v)
+        assert tr.burn_rate(4) == pytest.approx((2 / 4) / 0.1)
+        assert tr.burn_rate(2) == pytest.approx((2 / 2) / 0.1)
+
+    def test_budget_remaining_lifetime(self):
+        tr = SLOTracker(self._spec())
+        for _ in range(95):
+            tr.observe(0.5)
+        for _ in range(5):
+            tr.observe(2.0)  # 5% bad against a 10% budget -> half left
+        assert tr.budget_remaining() == pytest.approx(0.5)
+
+    def test_verdict_transitions_emit_instants_once(self):
+        clk = LogicalClock()
+        tracer = Tracer(clock=clk, recorder=None)
+        tr = SLOTracker(self._spec(), tracer=tracer)
+        for _ in range(8):
+            tr.observe(2.0)
+            tr.evaluate()
+        assert tr.evaluate().verdict == "breach"
+        assert tr.breaches == 1
+        names = [i.name for i in tracer.instants]
+        # one transition instant, not one per evaluation
+        assert names.count("slo.breach") == 1
+        for _ in range(64):
+            tr.observe(0.5)
+        final = tr.evaluate()
+        assert final.verdict == "ok"
+        assert [i.name for i in tracer.instants].count("slo.ok") == 1
+
+    def test_single_slow_sample_cannot_breach(self):
+        tr = SLOTracker(self._spec())
+        for _ in range(15):
+            tr.observe(0.5)
+        tr.observe(5.0)
+        # short window burns (1/4 / 0.1 = 2.5 >= 2) but the long window
+        # (1/16 / 0.1 = 0.625 < 1) vetoes: no page from one slow chunk
+        assert tr.evaluate().verdict == "ok"
+
+    def test_histogram_diff_ingest(self):
+        h = Histogram(lo=1e-3, hi=1e3)
+        tr = SLOTracker(self._spec())
+        for v in (0.5, 0.5, 0.5, 20.0):
+            h.record(v)
+        assert tr.ingest_histogram(h) == 4
+        assert tr.total_n == 4 and tr.total_bad == 1
+        # idempotent between recordings: no new samples, no new ticks
+        assert tr.ingest_histogram(h) == 0
+        h.record(50.0)
+        assert tr.ingest_histogram(h) == 1
+        assert tr.total_bad == 2
+
+    def test_throughput_floor(self):
+        tr = SLOTracker(self._spec(throughput_floor=100.0))
+        tr.observe(0.5)
+        assert tr.evaluate(throughput=200.0).verdict == "ok"
+        assert tr.evaluate(throughput=50.0).verdict == "breach"
+
+    def test_percentile_prefers_exact_window(self):
+        tr = SLOTracker(self._spec(q=0.5))
+        for v in (1.0, 2.0, 3.0):
+            tr.observe(v)
+        assert tr.percentile() == pytest.approx(2.0)
+
+
+class TestSLOEngine:
+    def test_add_evaluate_export(self):
+        eng = SLOEngine()
+        tr = eng.add(SLOSpec(name="lat", objective=1.0, compliance=0.9,
+                             short_window=2, long_window=4))
+        with pytest.raises(ValueError):
+            eng.add(SLOSpec(name="lat", objective=2.0))
+        for _ in range(4):
+            tr.observe(5.0)
+        statuses = eng.evaluate_all()
+        assert statuses["lat"].verdict == "breach"
+        reg = MetricsRegistry()
+        eng.export(reg)
+        snap = reg.snapshot()
+        assert snap["gauges"]["slo.lat.objective"] == 1.0
+        assert snap["gauges"]["slo.lat.burn_short"] == pytest.approx(10.0)
+        assert snap["counters"]["slo.lat.breaches"] == 1
+        assert eng.snapshot()["lat"]["verdict"] == "breach"
+        assert eng["lat"] is tr
+
+
+# ---------------------------------------------------------------------------
+# stage-regression detection
+# ---------------------------------------------------------------------------
+
+class TestStageBaseline:
+    def test_median_mad_sigma(self):
+        b = StageBaseline(window=16, min_samples=4)
+        for d in (1.0, 1.1, 0.9, 1.0, 1.0):
+            b.add(d)
+        assert b.ready
+        assert b.median() == pytest.approx(1.0)
+        assert b.mad() == pytest.approx(0.0)
+        # MAD of 0 falls back to the relative floor, not a zero sigma
+        assert b.sigma() == pytest.approx(0.05 * 1.0)
+        z, factor = b.score(2.0)
+        assert factor == pytest.approx(2.0)
+        assert z == pytest.approx(1.0 / 0.05)
+
+    def test_not_ready_below_min_samples(self):
+        b = StageBaseline(min_samples=8)
+        for _ in range(7):
+            b.add(1.0)
+        assert not b.ready
+
+
+def _emit_chunk(tracer, clk, stage_durs):
+    with tracer.span("chunk"):
+        for name, d in stage_durs.items():
+            with tracer.span(name):
+                clk.advance(d)
+
+
+class TestRegressionDetector:
+    STAGES = ("s1", "s2")
+
+    def test_validation(self):
+        tracer = Tracer(recorder=None)
+        with pytest.raises(ValueError):
+            RegressionDetector(tracer, min_samples=0)
+        with pytest.raises(ValueError):
+            RegressionDetector(tracer, window=4, min_samples=8)
+
+    def _run(self, detector, tracer, clk, n, durs):
+        out = []
+        for _ in range(n):
+            _emit_chunk(tracer, clk, durs)
+            out.extend(detector.consume())
+        return out
+
+    def test_detects_and_attributes_injected_stage(self):
+        clk = LogicalClock()
+        tracer = Tracer(clock=clk, recorder=None)
+        reg = MetricsRegistry()
+        det = RegressionDetector(tracer, stages=self.STAGES, min_samples=8,
+                                 registry=reg)
+        base = {"s1": 1.0, "s2": 0.5}
+        assert self._run(det, tracer, clk, 12, base) == []
+        flagged = self._run(det, tracer, clk, 3, {"s1": 1.0, "s2": 2.5})
+        assert flagged
+        first = flagged[0]
+        assert first.stage == "s2"
+        assert first.stage_factor == pytest.approx(5.0)
+        assert first.chunk == 12
+        assert any(i.name == "detect.regression" for i in tracer.instants)
+        assert reg.counter("obs.detect.regressions").value == len(flagged)
+
+    def test_no_false_positives_on_steady_stream(self):
+        clk = LogicalClock()
+        tracer = Tracer(clock=clk, recorder=None)
+        det = RegressionDetector(tracer, stages=self.STAGES, min_samples=8)
+        assert self._run(det, tracer, clk, 40, {"s1": 1.0, "s2": 0.5}) == []
+
+    def test_incremental_consume_equivalent(self):
+        def run(consume_every):
+            clk = LogicalClock()
+            tracer = Tracer(clock=clk, recorder=None)
+            det = RegressionDetector(tracer, stages=self.STAGES,
+                                     min_samples=8)
+            out = []
+            for i in range(16):
+                durs = ({"s1": 1.0, "s2": 0.5} if i < 12
+                        else {"s1": 3.0, "s2": 0.5})
+                _emit_chunk(tracer, clk, durs)
+                if i % consume_every == consume_every - 1:
+                    out.extend(det.consume())
+            out.extend(det.consume())
+            return [(r.chunk, r.stage) for r in out]
+
+        assert run(1) == run(4) != []
+
+    def test_unattributed_when_no_stage_breaches(self):
+        clk = LogicalClock()
+        tracer = Tracer(clock=clk, recorder=None)
+        det = RegressionDetector(tracer, stages=self.STAGES, min_samples=8)
+        self._run(det, tracer, clk, 12, {"s1": 1.0, "s2": 0.5})
+        # chunk-level slowdown spread thinly across untracked time: both
+        # stages nudge up below their own thresholds while the chunk doubles
+        with tracer.span("chunk"):
+            with tracer.span("s1"):
+                clk.advance(1.2)
+            with tracer.span("s2"):
+                clk.advance(0.6)
+            clk.advance(1.5)  # untracked tail
+        flagged = det.consume()
+        assert len(flagged) == 1
+        assert flagged[0].stage is None
+
+    def test_baselines_absorb_sustained_shift(self):
+        clk = LogicalClock()
+        tracer = Tracer(clock=clk, recorder=None)
+        det = RegressionDetector(tracer, stages=self.STAGES, window=8,
+                                 min_samples=4)
+        self._run(det, tracer, clk, 8, {"s1": 1.0, "s2": 0.5})
+        flagged = self._run(det, tracer, clk, 20, {"s1": 4.0, "s2": 0.5})
+        # flagged at the change, then absorbed as the new normal
+        assert flagged
+        assert all(r.chunk < 8 + 10 for r in flagged)
+
+
+# ---------------------------------------------------------------------------
+# SLO-driven autoscaling
+# ---------------------------------------------------------------------------
+
+def _modeled_bus(clk, *, work, degree, chunks, m=64):
+    bus = MetricsBus(clock=clk)
+    for _ in range(chunks):
+        t0 = clk.now()
+        clk.advance(work / degree)
+        bus.record_chunk(ChunkRecord(t0, clk.now(), m=m, n_workers=degree,
+                                     queue_depth=0))
+    return bus
+
+
+class TestSLOLatencyPolicy:
+    CANDIDATES = (1, 2, 4, 8, 16)
+
+    def test_shrinks_overprovisioned_to_smallest_fit(self):
+        clk = LogicalClock()
+        bus = _modeled_bus(clk, work=256.0, degree=16, chunks=8)
+        pol = SLOLatencyPolicy(objective=70.0)
+        # work 256: 256/4 = 64 <= 70 but 256/2 = 128 > 70 -> smallest fit 4
+        assert pol.target(bus, 16, self.CANDIDATES) == 4
+        assert "smallest modeled fit" in pol.last_signal
+
+    def test_grows_on_load_shift(self):
+        clk = LogicalClock()
+        bus = _modeled_bus(clk, work=768.0, degree=4, chunks=8)
+        pol = SLOLatencyPolicy(objective=70.0)
+        assert pol.target(bus, 4, self.CANDIDATES) == 16
+
+    def test_burn_breach_overrides_model(self):
+        clk = LogicalClock()
+        bus = _modeled_bus(clk, work=256.0, degree=4, chunks=8)
+        tracker = SLOTracker(SLOSpec(
+            name="x", objective=70.0, compliance=0.9,
+            short_window=2, long_window=4, fast_burn=2.0, slow_burn=1.0))
+        for _ in range(4):
+            tracker.observe(200.0)  # external evidence the budget is burning
+        pol = SLOLatencyPolicy(objective=70.0, tracker=tracker)
+        # the model says 4 fits, the burn rate says step up anyway
+        assert pol.target(bus, 4, self.CANDIDATES) == 8
+        assert "burn-rate breach overrides model" in pol.last_signal
+
+    def test_autoscaler_converges_through_hysteresis(self):
+        clk = LogicalClock()
+        pol = SLOLatencyPolicy(objective=70.0, window=8)
+        asc = Autoscaler(pol, self.CANDIDATES, cooldown_chunks=1, confirm=2)
+        bus = MetricsBus(clock=clk)
+        degree = 16
+        seen = []
+        for _ in range(10):
+            target = asc.propose(bus, degree)
+            asc.tick()
+            if target is not None:
+                degree = target
+                asc.notify_resized()
+            t0 = clk.now()
+            clk.advance(256.0 / degree)
+            bus.record_chunk(ChunkRecord(t0, clk.now(), m=64,
+                                         n_workers=degree, queue_depth=0))
+            seen.append(degree)
+        assert seen[-1] == 4
+        assert all(d == 4 for d in seen[4:])
+
+    def test_serving_mode_steps_down_on_breach(self):
+        clk = LogicalClock()
+        bus = _modeled_bus(clk, work=8.0, degree=1, chunks=6)  # 8.0 ticks
+        pol = SLOLatencyPolicy(objective=2.0, mode="serving")
+        assert pol.target(bus, 8, self.CANDIDATES) == 4
+
+    def test_decision_carries_signal(self):
+        d_fields = {f.name for f in
+                    __import__("dataclasses").fields(
+                        __import__("repro.runtime.autoscaler",
+                                   fromlist=["Decision"]).Decision)}
+        assert "signal" in d_fields
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+class TestFlightRecorder:
+    def test_ring_keeps_newest_when_buffer_keeps_oldest(self):
+        clk = LogicalClock()
+        ring = FlightRecorder(capacity=4)
+        tracer = Tracer(clock=clk, max_events=2, recorder=ring)
+        for name in "abcdef":
+            with tracer.span(name):
+                clk.advance(1.0)
+        assert [s.name for s in tracer.spans] == ["a", "b"]      # oldest
+        assert [s.name for s in ring.spans] == list("cdef")      # newest
+        assert tracer.dropped_spans == 4
+
+    def test_default_tracer_feeds_global_recorder(self):
+        FLIGHT_RECORDER.reset()
+        clk = LogicalClock()
+        tracer = Tracer(clock=clk)
+        assert tracer.recorder is FLIGHT_RECORDER
+        with tracer.span("s"):
+            clk.advance(1.0)
+        assert len(FLIGHT_RECORDER) >= 1
+        FLIGHT_RECORDER.reset()
+        # opting out severs the feed
+        t2 = Tracer(clock=clk, recorder=None)
+        with t2.span("s"):
+            clk.advance(1.0)
+        assert len(FLIGHT_RECORDER) == 0
+
+    def test_dump_is_loadable_chrome_trace(self, tmp_path):
+        clk = LogicalClock()
+        ring = FlightRecorder(capacity=8, metrics_capacity=2)
+        tracer = Tracer(clock=clk, max_events=1, recorder=ring)
+        with tracer.span("work"):
+            clk.advance(1.0)
+        tracer.instant("failure", detail="boom")
+        reg = MetricsRegistry()
+        reg.gauge("g").set(3.0)
+        for _ in range(3):  # ring bounded at metrics_capacity
+            ring.sample_metrics(reg, t=clk.now())
+        assert len(ring.metrics_ring) == 2
+        path = tmp_path / "bb.json"
+        ring.dump(str(path), registry=reg)
+        doc = json.loads(path.read_text())
+        names = {e.get("name") for e in doc["traceEvents"]}
+        assert {"work", "failure"} <= names
+        assert doc["otherData"]["metrics_ring"]
+        assert doc["otherData"]["metrics"]["gauges"]["g"] == 3.0
+
+
+class TestSupervisorBlackBox:
+    def test_dumps_on_failure_and_restore(self, tmp_path):
+        import numpy as np
+
+        from repro.keyed import KeyedWindowAdapter, WindowSpec
+        from repro.keyed.runtime import synthetic_keyed_items
+        from repro.runtime import BoundedSource, StreamExecutor
+        from repro.runtime.supervisor import FailurePlan, Supervisor
+
+        nch, ch = 6, 128
+        spec = WindowSpec("tumbling", size=16, lateness=4, late_policy="side")
+        items = synthetic_keyed_items(ch * nch, num_keys=32, disorder=3,
+                                      seed=5)
+        src = BoundedSource(items)
+        ad = KeyedWindowAdapter(spec, num_slots=64, backend="device_table",
+                                capacity=256)
+        ring = FlightRecorder(capacity=256)
+        tracer = Tracer(max_events=16, recorder=ring)  # saturates early
+        ex = StreamExecutor(ad, degree=4, chunk_size=ch, tracer=tracer)
+        reg = MetricsRegistry()
+        sup = Supervisor(
+            ex, lambda i: (src.seek(i * ch), src.take(ch))[1], nch,
+            ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=2,
+            failure_plan=FailurePlan(fail_at=3, recover_after=2),
+            blackbox_dir=str(tmp_path / "bb"), registry=reg,
+        )
+        outs = sup.run()
+        assert len(outs) == nch
+        kinds = [p.split("/")[-1].split("_")[0] for p in sup.blackbox_paths]
+        assert kinds == ["failure", "restore"]
+        assert tracer.dropped > 0  # the main buffer did overflow
+        fail_doc = json.loads(open(sup.blackbox_paths[0]).read())
+        events = fail_doc["traceEvents"]
+        assert any(e.get("ph") == "i" and e.get("name") == "failure"
+                   for e in events)
+        # the metrics snapshot rode along
+        assert "metrics_ring" in fail_doc["otherData"]
+        restore_doc = json.loads(open(sup.blackbox_paths[1]).read())
+        assert any(e.get("ph") == "X" and e.get("name") == "restore"
+                   for e in restore_doc["traceEvents"])
+        # black boxes did not perturb the run: emissions match a clean run
+        ad2 = KeyedWindowAdapter(spec, num_slots=64, backend="device_table",
+                                 capacity=256)
+        ex2 = StreamExecutor(ad2, degree=4, chunk_size=ch)
+        outs2 = {}
+        for i in range(nch):
+            src.seek(i * ch)
+            outs2[i] = ex2.process(src.take(ch))
+        for i in range(nch):
+            for k in outs[i]["emissions"]:
+                np.testing.assert_array_equal(
+                    outs[i]["emissions"][k], outs2[i]["emissions"][k])
