@@ -340,6 +340,72 @@ def slo_loop_table(path: str) -> None:
     print(f"wrote {path}")
 
 
+def dist_plane_table(path: str) -> None:
+    """Markdown view of results/dist_plane.json (produced by
+    benchmarks/dist_plane.py): the process-boundary plane — per-chunk
+    latency vs the in-process plane, wire-exact migration, and worker-death
+    recovery."""
+    src = "results/dist_plane.json"
+    if not os.path.exists(src):
+        print(f"skip {path}: run benchmarks/dist_plane.py first")
+        return
+    with open(src) as f:
+        rep = json.load(f)
+    lat, mig, rec = rep["latency"], rep["migration"], rep["recovery"]
+    lines = [
+        "### Process-boundary plane vs in-process plane "
+        f"({lat['standing_keys']} standing keys, chunk {lat['chunk']})",
+        "",
+        "| n_w | dist us/chunk | local us/chunk | boundary tax | "
+        "state equal |",
+        "|---|---|---|---|---|",
+    ]
+    for c in lat["cells"]:
+        lines.append(
+            f"| {c['n_w']} | {c['dist_us_per_chunk']:.0f} | "
+            f"{c['local_us_per_chunk']:.0f} | {c['dist_over_local']:.2f}x | "
+            f"{'yes' if c['state_equal'] else '**NO**'} |"
+        )
+    lines.append("")
+    lines.append(
+        f"### Wire-shipped migration ({mig['standing_rows']} standing rows; "
+        f"one barrier = {mig['barrier_us']:.0f} us, one full checkpoint "
+        f"cycle = {mig['full_cycle_us']:.0f} us)"
+    )
+    lines.append("")
+    lines.append(
+        "| resize | slots | rows moved | wire bytes | payload bytes | "
+        "ratio | resize us |"
+    )
+    lines.append("|---|---|---|---|---|---|---|")
+    for r in mig["resizes"]:
+        lines.append(
+            f"| {r['n_old']} -> {r['n_new']} | {r['handoff_slots']} | "
+            f"{r['handoff_rows']} | {r['wire_bytes']} | "
+            f"{r['payload_bytes']} | {r['wire_ratio']:.4f} | "
+            f"{r['resize_us']:.0f} |"
+        )
+    lines.append("")
+    lines.append(
+        f"wire bytes == moved-row payload + frame envelope (max ratio "
+        f"**{mig['max_wire_ratio']:.4f}**) · worst resize vs one full "
+        f"checkpoint cycle: **{mig['max_resize_vs_full_cycle']:.2f}x** · "
+        f"state intact after migrations: "
+        f"**{rep['state_intact_after_migrations']}**"
+    )
+    lines.append("")
+    lines.append(
+        f"### Worker-death recovery: failover to first output "
+        f"{rec['recover_us']:.0f} us ({rec['recover_vs_barrier']:.1f}x one "
+        f"barrier; includes respawning the dead host) · recovered state == "
+        f"in-process plane: **{rec['recovered_matches_local']}** · black "
+        f"box collected: **{rec['blackbox_collected']}**"
+    )
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path}")
+
+
 if __name__ == "__main__":
     os.makedirs("results", exist_ok=True)
     dryrun_table("results/dryrun_table.md")
@@ -349,3 +415,4 @@ if __name__ == "__main__":
     keyed_migration_table("results/keyed_migration.md")
     keyed_fused_table("results/keyed_fused.md")
     slo_loop_table("results/slo_loop.md")
+    dist_plane_table("results/dist_plane.md")

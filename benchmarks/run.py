@@ -30,6 +30,7 @@ def main() -> None:
         "benchmarks.keyed_migration",
         "benchmarks.keyed_fused",
         "benchmarks.slo_loop",
+        "benchmarks.dist_plane",
         "benchmarks.kernel_bench",
         "benchmarks.roofline",
     ]

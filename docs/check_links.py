@@ -1,0 +1,85 @@
+"""Docs lint: internal links resolve + architecture.md covers every package.
+
+Two checks, run by the CI ``lint`` job (and locally with
+``python docs/check_links.py``):
+
+1. Every relative markdown link in ``docs/*.md`` and ``README.md`` points
+   at a file that exists in the repo (external ``http(s)``/``mailto``
+   links and pure ``#anchors`` are skipped — this is a link-rot check for
+   the tree we control, not a crawler).
+2. ``docs/architecture.md`` mentions every package under ``src/repro/``
+   (by name or dotted ``repro.<pkg>`` path), so a new subsystem cannot
+   land without a home on the architecture map.
+
+Exits nonzero with one line per violation.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: [text](target) — excluding images; target cut at the first '#'
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _md_files():
+    yield os.path.join(REPO, "README.md")
+    docs = os.path.join(REPO, "docs")
+    for name in sorted(os.listdir(docs)):
+        if name.endswith(".md"):
+            yield os.path.join(docs, name)
+
+
+def check_links() -> list:
+    errors = []
+    for path in _md_files():
+        with open(path) as f:
+            text = f.read()
+        base = os.path.dirname(path)
+        for target in _LINK.findall(text):
+            target = target.split("#", 1)[0]
+            if not target or "://" in target or target.startswith("mailto:"):
+                continue
+            resolved = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(resolved):
+                rel = os.path.relpath(path, REPO)
+                errors.append(f"{rel}: broken link -> {target}")
+    return errors
+
+
+def check_architecture_coverage() -> list:
+    arch = os.path.join(REPO, "docs", "architecture.md")
+    with open(arch) as f:
+        text = f.read()
+    pkg_root = os.path.join(REPO, "src", "repro")
+    missing = []
+    for name in sorted(os.listdir(pkg_root)):
+        full = os.path.join(pkg_root, name)
+        if not os.path.isdir(full) or name.startswith("_"):
+            continue
+        if not os.path.exists(os.path.join(full, "__init__.py")):
+            continue
+        if f"repro.{name}" not in text and f"`{name}/`" not in text:
+            missing.append(
+                f"docs/architecture.md: package src/repro/{name} not mentioned"
+            )
+    return missing
+
+
+def main() -> int:
+    errors = check_links() + check_architecture_coverage()
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"{len(errors)} docs lint error(s)", file=sys.stderr)
+        return 1
+    print("docs lint: all links resolve, architecture.md covers every package")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Multi-process keyed state plane: shard-host workers behind a wire protocol.
+
+The in-process sharded plane (:mod:`repro.keyed.runtime`) already made the
+paper's §4.2 fully-partitioned ownership physical — live engine shards, a
+routed scatter per chunk, row-level slot migration on resize.  This package
+puts each shard behind a **process boundary**:
+
+* :mod:`repro.dist.wire` — the length-prefixed binary wire protocol (frame
+  header + JSON meta + raw named columns); specified independently in
+  ``docs/wire-protocol.md``.  One codec carries chunk scatter, emission
+  gather, row migration, and checkpoint snapshots, because the
+  ``extract_rows`` canonical sorted-row payload is the one physical row
+  layout everywhere.
+* :mod:`repro.dist.shardhost` — the worker-process serve loop owning one
+  live :class:`~repro.keyed.windows.KeyedWindowEngine` shard, with a
+  process-local flight recorder dumped as a black box on death.
+* :mod:`repro.dist.plane` — :class:`DistributedKeyedPlane`, the coordinator
+  adapter: the existing executor / autoscaler / checkpoint-supervisor /
+  observability stack runs unchanged on top, the autoscaler now choosing
+  the **process** count and the supervisor recovering killed worker
+  processes from the canonical snapshot.
+
+Outputs are bit-exact against both the in-process plane and the serial
+oracle :func:`repro.core.semantics.keyed_windows` — the process boundary
+changes transport, never semantics (``tests/test_dist.py`` holds the line).
+"""
+
+from repro.dist import wire  # noqa: F401
+from repro.dist.plane import DistributedKeyedPlane  # noqa: F401

@@ -1,0 +1,658 @@
+"""DistributedKeyedPlane: the sharded keyed state plane across processes.
+
+The coordinator side of :mod:`repro.dist` (wire format:
+``docs/wire-protocol.md``).  It implements the same live-state
+:class:`~repro.runtime.executor.PatternAdapter` lifecycle as the in-process
+:class:`~repro.keyed.runtime.KeyedWindowAdapter` — ``attach`` /
+``step_live`` / ``resize_live`` / ``snapshot_barrier`` / ``detach`` — but
+each engine shard lives in its own :mod:`~repro.dist.shardhost` worker
+process behind a :mod:`~repro.dist.wire` pipe:
+
+* ``step_live`` routes the chunk by ``hash_to_slot`` ownership exactly like
+  the in-process per-shard loop, scatters one STEP frame per shard (empty
+  sub-chunks included — the watermark clock is shared), gathers the
+  replies, and merges emissions / early firings / late records with the
+  SAME deterministic stream-position merge — so outputs are bit-exact
+  against both the in-process plane and the serial oracle;
+* ``resize_live`` is cross-process §4.2 row migration: donors EXTRACT the
+  reassigned slots' canonical rows, the coordinator buckets them by the
+  rebalanced ownership table and INGESTs each recipient's canonically
+  sorted batch — handoff slots / rows / **bytes on the wire** ride the
+  ``ResizeInfo`` onto ``MetricsBus.migration_volume()``;
+* ``snapshot_barrier`` gathers per-shard SNAPSHOT frames and merges them
+  into THE canonical snapshot (the same merge the in-process plane uses),
+  so ``repro.checkpoint`` and the failure supervisor work unchanged;
+* a worker-process death surfaces as
+  :class:`~repro.runtime.supervisor.WorkerFailure` after the coordinator
+  collects the dead host's flight-recorder black box — the supervisor then
+  restores from the canonical checkpoint; surviving workers stay warm in
+  the pool and are re-attached in place, only the dead slot respawns.
+
+Worker processes are **pooled**: ``prespawn`` hosts are started at the
+first attach (imports pay once, concurrently), a shrink parks hosts warm
+instead of killing them, and a grow re-attaches parked hosts — so a resize
+costs row migration, not process startup, and the autoscaler can move the
+process count freely.  Every host gets its own tracer track
+(:meth:`~repro.obs.trace.Tracer.alloc_track`): STEP replies carry the
+worker-timed spans and the coordinator replays them onto the shard's
+track, giving one coherent cross-process timeline per run.
+"""
+
+from __future__ import annotations
+
+import atexit
+import dataclasses
+import multiprocessing
+import os
+import tempfile
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.dist import shardhost, wire
+from repro.keyed.runtime import (
+    KeyedWindowAdapter,
+    ROW_BYTES,
+    _concat_sorted,
+    merge_shard_snapshots,
+)
+from repro.keyed.store import SlotMap, fold_worker_items, hash_to_slot
+from repro.keyed.windows import WindowSpec
+from repro.runtime.executor import ResizeInfo
+from repro.runtime.supervisor import WorkerFailure
+
+_FIRE_KEYS = ("key", "start", "end", "value", "count")
+_LATE_KEYS = ("key", "value", "ts", "start", "pos")
+
+
+class _WorkerHandle:
+    """One pooled shard-host process (pool index == shard id)."""
+
+    __slots__ = ("shard", "proc", "conn", "pid", "blackbox_path",
+                 "tid", "tid_tracer", "seq", "pending")
+
+    def __init__(self, shard, proc, conn, pid, blackbox_path):
+        self.shard = shard
+        self.proc = proc
+        self.conn = conn
+        self.pid = pid
+        self.blackbox_path = blackbox_path
+        self.tid: Optional[int] = None      # tracer track id
+        self.tid_tracer: Any = None         # tracer the tid belongs to
+        self.seq = 0                        # request sequence (epoch hygiene)
+        self.pending = 0                    # seq of the awaited reply
+
+
+class DistributedKeyedPlane(KeyedWindowAdapter):
+    """Keyed windowed state sharded across worker **processes**.
+
+    Drop-in adapter for :class:`~repro.runtime.executor.StreamExecutor`:
+    the executor, autoscaler (now choosing the process count), checkpoint
+    supervisor, and observability plane all run unchanged on top.  The
+    serialized-state protocol (``resize`` on a detached adapter,
+    ``init_state``, degree validation) is inherited from
+    :class:`~repro.keyed.runtime.KeyedWindowAdapter` — only the live
+    lifecycle crosses the process boundary.
+
+    ``prespawn`` pre-starts that many hosts at the first attach so later
+    grows re-attach warm processes instead of paying process startup;
+    ``start_method`` picks the multiprocessing context (default ``spawn``
+    — safe after the parent initialized JAX; ``fork`` starts faster).
+    """
+
+    def __init__(self, spec: WindowSpec, *, num_slots: int,
+                 impl: str = "segment", backend: str = "host",
+                 capacity: int = 1024, ttl: int | None = None,
+                 max_probes: int = 16, prespawn: Optional[int] = None,
+                 start_method: str = "spawn",
+                 blackbox_dir: Optional[str] = None):
+        super().__init__(
+            spec, num_slots=num_slots, impl=impl, backend=backend,
+            capacity=capacity, ttl=ttl, max_probes=max_probes,
+            live=True, fused=False,
+        )
+        self.prespawn = prespawn
+        self.start_method = start_method
+        self.blackbox_dir = blackbox_dir or os.path.join(
+            tempfile.gettempdir(), f"repro-dist-{os.getpid()}"
+        )
+        self._ctx = multiprocessing.get_context(start_method)
+        self._pool: List[_WorkerHandle] = []
+        self._active = 0                      # hosts currently owning a shard
+        self._tally: List[int] = []           # mirrored §4.2 work tallies
+        self._wm: Optional[int] = None        # mirrored shared watermark clock
+        self._max_ts: Optional[int] = None
+        self._wm_ticks = 0
+        self.collected_blackboxes: List[str] = []
+        #: cumulative wire traffic by frame family (benchmark/report fodder)
+        self.wire_bytes: Dict[str, int] = {
+            "attach": 0, "step": 0, "migration": 0, "snapshot": 0,
+        }
+        self._closed = False
+        atexit.register(self.close)
+
+    # -- process pool ----------------------------------------------------------
+    def _spawn(self, shard: int) -> _WorkerHandle:
+        parent, child = self._ctx.Pipe()
+        cfg = {
+            "shard": shard,
+            "spec": dataclasses.asdict(self.spec),
+            "engine_kwargs": self._engine_kwargs(),
+            "blackbox_path": os.path.join(
+                self.blackbox_dir, f"shard{shard}.json"
+            ),
+        }
+        proc = self._ctx.Process(
+            target=shardhost.serve, args=(child, cfg), daemon=True,
+            name=f"shardhost-{shard}",
+        )
+        proc.start()
+        child.close()  # parent keeps one end only, so EOF means death
+        return _WorkerHandle(shard, proc, parent, None, cfg["blackbox_path"])
+
+    def _ensure_pool(self, k: int) -> None:
+        """Fill pool slots ``0..k-1`` with live hosts (pool index == shard
+        id; a dead host leaves a ``None`` hole that respawns here).  All
+        missing processes start before any handshake wait, so their
+        interpreter/JAX imports run concurrently and a k-host pool pays
+        ~one import latency."""
+        while len(self._pool) < k:
+            self._pool.append(None)
+        fresh = []
+        for w in range(k):
+            if self._pool[w] is None:
+                self._pool[w] = self._spawn(w)
+                fresh.append(self._pool[w])
+        for h in fresh:
+            ftype, meta, _ = self._recv(h)
+            if ftype != wire.HELLO:
+                raise WorkerFailure(
+                    f"shard host {h.shard}: bad handshake frame {ftype}"
+                )
+            h.pid = int(meta["pid"])
+
+    def _track(self, h: _WorkerHandle) -> int:
+        """The host's tracer track (allocated lazily; re-allocated when the
+        executor re-points the adapter tracer or the host respawned)."""
+        if h.tid is None or h.tid_tracer is not self.tracer:
+            h.tid = self.tracer.alloc_track(
+                f"shard{h.shard}/pid{h.pid}"
+            )
+            h.tid_tracer = self.tracer
+        return h.tid
+
+    def _replay_spans(self, h: _WorkerHandle, spans) -> None:
+        if not spans:
+            return
+        tid = self._track(h)
+        for name, t0, t1, args in spans:
+            self.tracer.record_span(name, t0, t1, tid=tid, **(args or {}))
+
+    # -- fallible transport ----------------------------------------------------
+    def _send(self, h: _WorkerHandle, ftype, meta=None, cols=None) -> int:
+        """Ship one request, stamped with the handle's next sequence number
+        (the worker echoes it in the reply — see :meth:`_reply`)."""
+        h.seq += 1
+        h.pending = h.seq
+        m = dict(meta) if meta else {}
+        m["seq"] = h.seq
+        try:
+            return wire.send(h.conn, ftype, m, cols)
+        except (BrokenPipeError, OSError) as e:
+            self._on_death(h, repr(e))
+
+    def _recv(self, h: _WorkerHandle):
+        try:
+            ftype, meta, cols = wire.recv(h.conn)
+        except (EOFError, OSError) as e:
+            self._on_death(h, repr(e))
+        if ftype == wire.ERR:
+            # the host reported the error and then died: same failure path,
+            # but with the worker's own traceback attached
+            self._on_death(h, meta.get("error", "worker error"),
+                           detail=meta.get("traceback", ""))
+        return ftype, meta, cols
+
+    def _on_death(self, h: _WorkerHandle, err: str, detail: str = ""):
+        """A shard host died: collect its black box, reap the process, and
+        surface the §4 worker-failure the supervisor knows how to drive —
+        restore survivors + respawn the dead slot from the canonical
+        checkpoint."""
+        shard, pid = h.shard, h.pid
+        # give the dying process a moment to finish its black-box dump
+        deadline = time.monotonic() + 2.0
+        while h.proc.is_alive() and time.monotonic() < deadline:
+            time.sleep(0.01)
+        blackbox = None
+        if h.blackbox_path and os.path.exists(h.blackbox_path):
+            blackbox = h.blackbox_path
+            self.collected_blackboxes.append(blackbox)
+        try:
+            h.conn.close()
+        except OSError:
+            pass
+        if h.proc.is_alive():
+            h.proc.kill()
+        h.proc.join(timeout=5)
+        # leave a hole at the dead host's slot (pool index == shard id is
+        # baked into the worker processes); the next attach respawns it
+        if h in self._pool:
+            self._pool[self._pool.index(h)] = None
+        self._active = 0  # live state is gone: force re-attach after restore
+        self.tracer.instant(
+            "worker_death", shard=shard, pid=pid, error=err,
+            blackbox=blackbox or "",
+        )
+        msg = f"shard host {shard} (pid {pid}) died: {err}"
+        if blackbox:
+            msg += f" [black box: {blackbox}]"
+        raise WorkerFailure(msg + ("\n" + detail if detail else ""))
+
+    def _reply(self, h: _WorkerHandle):
+        """Receive the reply to the handle's pending request, discarding
+        stale frames from an epoch a worker failure interrupted (a crash
+        mid-scatter leaves already-scattered peers' replies in their pipes;
+        the echoed sequence number identifies and drops them)."""
+        while True:
+            ftype, meta, cols = self._recv(h)
+            if meta.get("seq") == h.pending:
+                return ftype, meta, cols
+
+    def _gather(self, handles: Sequence[_WorkerHandle], expect: int):
+        """Receive one reply per handle.  A failure mid-gather still drains
+        the surviving handles' replies before raising, so no pipe is left
+        holding a frame the next epoch would misread."""
+        replies, failure = [], None
+        for h in handles:
+            try:
+                ftype, meta, cols = self._reply(h)
+                if ftype != expect:
+                    raise WorkerFailure(
+                        f"shard host {h.shard}: expected frame {expect}, "
+                        f"got {ftype}"
+                    )
+                replies.append((meta, cols))
+            except WorkerFailure as e:
+                if failure is None:
+                    failure = e
+        if failure is not None:
+            raise failure
+        return replies
+
+    # -- live-state lifecycle --------------------------------------------------
+    def attach(self, state, n_w: int) -> None:
+        """Hydrate ``n_w`` shard hosts from the canonical snapshot: each
+        host receives ONLY the rows of its owned slots (the coordinator
+        applies the owned-slot filter before serializing), plus the shared
+        clock and its share of the §4.2 tallies — the same degree-alignment
+        fold the in-process attach performs."""
+        slot_table = np.asarray(state["slot_table"], np.int32)
+        n_cur = int(state["n_workers"])
+        sm = SlotMap(len(slot_table), n_cur, table=slot_table)
+        items = np.asarray(state["worker_items"], np.int64)
+        if n_cur != n_w:
+            new_sm, _ = sm.rebalance(n_w)
+            items = fold_worker_items(items, sm.table, new_sm.table, n_w)
+            sm = new_sm
+        self._ensure_pool(max(n_w, self.prespawn or 0))
+        keys = np.asarray(state["w_key"], np.int64)
+        row_owner = (
+            np.asarray(sm.table, np.int64)[
+                hash_to_slot(keys, self.num_slots).astype(np.int64)
+            ]
+            if len(keys) else np.zeros(0, np.int64)
+        )
+        scalars = {
+            k: int(state[k])
+            for k in ("wm", "wm_valid", "wm_ticks", "max_ts", "max_ts_valid")
+        }
+        with self.tracer.span("dist_attach", n_w=n_w):
+            for w in range(n_w):
+                h = self._pool[w]
+                mask = row_owner == w
+                tally = np.zeros(n_w, np.int64)
+                tally[w] = int(items[w]) if w < len(items) else 0
+                meta = dict(
+                    scalars,
+                    n_workers=n_w,
+                    late_count=int(state["late_count"]) if w == 0 else 0,
+                    t_inserted=int(state["t_inserted"]) if w == 0 else 0,
+                    t_hits=int(state["t_hits"]) if w == 0 else 0,
+                    t_spilled=int(state["t_spilled"]) if w == 0 else 0,
+                    t_evicted=int(state["t_evicted"]) if w == 0 else 0,
+                )
+                cols = {"slot_table": sm.table, "worker_items": tally}
+                for k in (
+                    "w_key", "w_start", "w_end", "w_value", "w_count",
+                    "w_resident", "w_touch",
+                ):
+                    cols[k] = np.asarray(state[k], np.int64)[mask]
+                self.wire_bytes["attach"] += self._send(
+                    h, wire.ATTACH, meta, cols
+                )
+            self._gather(self._pool[:n_w], wire.OK)
+        self._slot_map = sm
+        self._active = n_w
+        self._tally = [
+            int(items[w]) if w < len(items) else 0 for w in range(n_w)
+        ]
+        self._wm = scalars["wm"] if scalars["wm_valid"] else None
+        self._max_ts = scalars["max_ts"] if scalars["max_ts_valid"] else None
+        self._wm_ticks = scalars["wm_ticks"]
+
+    def detach(self) -> None:
+        """Drop live shards but keep the hosts warm: the next attach
+        re-hydrates the same processes (import cost is paid once per pool,
+        not once per restore)."""
+        live = [h for h in self._pool[: self._active] if h is not None]
+        self._active = 0
+        self._slot_map = None
+        sent = []
+        for h in live:
+            try:
+                self._send(h, wire.DETACH)
+                sent.append(h)
+            except WorkerFailure:
+                continue
+        for h in sent:
+            try:
+                self._reply(h)
+            except WorkerFailure:
+                continue
+
+    def close(self) -> None:
+        """Shut the pool down (idempotent; also runs atexit)."""
+        if self._closed:
+            return
+        self._closed = True
+        hosts = [h for h in self._pool if h is not None]
+        for h in hosts:
+            try:
+                wire.send(h.conn, wire.SHUTDOWN)
+            except (BrokenPipeError, OSError):
+                pass
+        for h in hosts:
+            h.proc.join(timeout=5)
+            if h.proc.is_alive():
+                h.proc.kill()
+                h.proc.join(timeout=5)
+            try:
+                h.conn.close()
+            except OSError:
+                pass
+        self._pool = []
+        self._active = 0
+
+    def __enter__(self) -> "DistributedKeyedPlane":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    # -- per-chunk execution ---------------------------------------------------
+    def prepare_chunk(self, chunk) -> Optional[Dict[str, Any]]:
+        """State-independent column extraction (ownership is resolved at
+        step time against the current slot table, so the pipeline may run
+        this ahead across a resize)."""
+        ts = np.asarray(chunk["ts"], np.int64)
+        return {
+            "keys": np.asarray(chunk["key"], np.int64),
+            "values": np.asarray(chunk["value"], np.int64),
+            "ts": ts,
+            "wm_ts": int(ts.max()) if len(ts) else None,
+        }
+
+    def step_live(self, chunk, prepared=None) -> Dict[str, Dict[str, np.ndarray]]:
+        """Scatter routed sub-chunks, gather per-shard outputs, and merge
+        them into the serial oracle's deterministic order — the per-shard
+        loop of the in-process plane with pipes between route and engine."""
+        prep = prepared if prepared is not None else self.prepare_chunk(chunk)
+        keys, values, ts = prep["keys"], prep["values"], prep["ts"]
+        wm_ts = prep["wm_ts"]
+        n_w = self._active
+        with self.tracer.span("route"):
+            owners = (
+                np.asarray(self._slot_map.table, np.int64)[
+                    hash_to_slot(keys, self.num_slots).astype(np.int64)
+                ]
+                if len(keys) else np.zeros(0, np.int64)
+            )
+        with self.tracer.span("scatter", n_shards=n_w):
+            for w in range(n_w):
+                sel = np.flatnonzero(owners == w)
+                self.wire_bytes["step"] += self._send(
+                    self._pool[w], wire.STEP, {"wm_ts": wm_ts},
+                    {"key": keys[sel], "value": values[sel],
+                     "ts": ts[sel], "pos": sel},
+                )
+        with self.tracer.span("gather", n_shards=n_w):
+            replies = self._gather(self._pool[:n_w], wire.STEP_OUT)
+        em_parts, early_parts, late_parts = [], [], []
+        for w, (meta, cols) in enumerate(replies):
+            self._replay_spans(self._pool[w], meta.get("spans"))
+            self._tally[w] = int(meta["tally"])
+            em_parts.append({k: cols[f"em_{k}"] for k in _FIRE_KEYS})
+            early_parts.append({k: cols[f"ey_{k}"] for k in _FIRE_KEYS})
+            late_parts.append({k: cols[f"lt_{k}"] for k in _LATE_KEYS})
+        with self.tracer.span("merge"):
+            emissions = _concat_sorted(em_parts, _FIRE_KEYS)
+            early = _concat_sorted(early_parts, _FIRE_KEYS)
+            late_cols = {
+                k: np.concatenate([p[k] for p in late_parts])
+                for k in _LATE_KEYS
+            }
+            order = np.argsort(late_cols.pop("pos"), kind="stable")
+            late = {k: v[order] for k, v in late_cols.items()}
+        if wm_ts is not None:
+            # mirror the shared watermark clock (grow-resizes seed new
+            # hosts from this, with no extra roundtrip)
+            self._max_ts = (
+                wm_ts if self._max_ts is None else max(self._max_ts, wm_ts)
+            )
+            new_wm = self._max_ts - self.spec.lateness
+            self._wm = new_wm if self._wm is None else max(self._wm, new_wm)
+            self._wm_ticks += 1
+        return {"emissions": emissions, "late": late, "early": early}
+
+    def snapshot_barrier(self) -> Dict[str, np.ndarray]:
+        """Gather per-host SNAPSHOT frames and merge them into THE
+        canonical snapshot — the identical merge the in-process plane
+        performs, so the two planes serialize identically."""
+        n_w = self._active
+        with self.tracer.span("dist_barrier", n_shards=n_w):
+            for w in range(n_w):
+                self._send(self._pool[w], wire.SNAPSHOT_REQ)
+            replies = self._gather(self._pool[:n_w], wire.SNAPSHOT)
+            snaps = []
+            for w, (meta, cols) in enumerate(replies):
+                self._replay_spans(self._pool[w], meta.pop("spans", None))
+                self.wire_bytes["snapshot"] += sum(
+                    c.nbytes for c in cols.values()
+                )
+                snaps.append(wire.frame_to_snapshot(meta, cols))
+        return merge_shard_snapshots(
+            snaps, self._slot_map.table, self._slot_map.n_workers
+        )
+
+    # -- §4.2 cross-process row migration --------------------------------------
+    def resize_live(self, n_old: int, n_new: int) -> ResizeInfo:
+        """Rebalance ownership and ship ONLY the reassigned slots' rows
+        between processes: donors EXTRACT, the coordinator buckets by the
+        new ownership table, recipients INGEST one canonically sorted batch
+        each.  Handoff cost is proportional to moved rows — process startup
+        is amortized by the warm pool, never paid here unless the pool is
+        genuinely too small."""
+        sm_old = self._slot_map
+        sm_new, moved = sm_old.rebalance(n_new)
+        old_owner = np.asarray(sm_old.table, np.int64)
+        new_owner = np.asarray(sm_new.table, np.int64)
+        wire_bytes = 0
+        # grow: warm (or fresh) hosts join with the shared clock, no rows
+        if n_new > n_old:
+            self._ensure_pool(n_new)
+            z = np.zeros(0, np.int64)
+            meta = {
+                "n_workers": n_new,
+                "wm": self._wm if self._wm is not None else 0,
+                "wm_valid": int(self._wm is not None),
+                "max_ts": self._max_ts if self._max_ts is not None else 0,
+                "max_ts_valid": int(self._max_ts is not None),
+                "wm_ticks": self._wm_ticks,
+                "late_count": 0, "t_inserted": 0, "t_hits": 0,
+                "t_spilled": 0, "t_evicted": 0,
+            }
+            for w in range(n_old, n_new):
+                cols = {
+                    "slot_table": sm_new.table,
+                    "worker_items": np.zeros(n_new, np.int64),
+                }
+                cols.update({
+                    k: z for k in (
+                        "w_key", "w_start", "w_end", "w_value", "w_count",
+                        "w_resident", "w_touch",
+                    )
+                })
+                self.wire_bytes["attach"] += self._send(
+                    self._pool[w], wire.ATTACH, meta, cols
+                )
+            self._gather(self._pool[n_old:n_new], wire.OK)
+        # donor side: one EXTRACT per donor of moved slots, gathered rows
+        # bucketed by the NEW ownership of each row's key
+        donors = [
+            int(d) for d in np.unique(old_owner[moved]).tolist()
+        ] if len(moved) else []
+        for d in donors:
+            self._send(
+                self._pool[d], wire.EXTRACT,
+                None, {"slots": moved[old_owner[moved] == d]},
+            )
+        rows_moved = 0
+        per_recipient: Dict[int, List[Tuple[np.ndarray, ...]]] = {}
+        for d, (meta, cols) in zip(
+            donors, self._gather([self._pool[d] for d in donors], wire.ROWS)
+        ):
+            rows = wire.cols_to_rows(cols)
+            if not len(rows[0]):
+                continue
+            rows_moved += len(rows[0])
+            row_recips = new_owner[
+                hash_to_slot(rows[0], self.num_slots).astype(np.int64)
+            ]
+            for r in np.unique(row_recips).tolist():
+                m = row_recips == r
+                per_recipient.setdefault(int(r), []).append(
+                    tuple(col[m] for col in rows)
+                )
+        # recipient side: one canonical sorted batch per recipient — the
+        # INGEST frames are the §4.2 handoff payload, counted on the wire
+        recipients = sorted(per_recipient)
+        for r in recipients:
+            parts = per_recipient[r]
+            cat = [np.concatenate([p[i] for p in parts]) for i in range(7)]
+            order = np.lexsort((cat[2], cat[1], cat[0]))
+            wire_bytes += self._send(
+                self._pool[r], wire.INGEST,
+                None,
+                wire.rows_to_cols(tuple(c[order] for c in cat)),
+            )
+        self._gather([self._pool[r] for r in recipients], wire.OK)
+        # departing hosts: fold their stream-global counters into shard 0,
+        # then park them warm (a later grow re-attaches, never respawns)
+        folded = fold_worker_items(
+            np.asarray(self._tally[:n_old], np.int64),
+            old_owner, new_owner, n_new,
+        )
+        adds = {"late_add": 0, "inserted_add": 0, "hits_add": 0,
+                "spilled_add": 0, "evicted_add": 0}
+        if n_new < n_old:
+            departing = self._pool[n_new:n_old]
+            for h in departing:
+                self._send(h, wire.HEALTH_REQ)
+            for meta, _ in self._gather(departing, wire.HEALTH):
+                c = meta["counters"]
+                adds["late_add"] += c["late_count"]
+                adds["inserted_add"] += c["inserted"]
+                adds["hits_add"] += c["hits"]
+                adds["spilled_add"] += c["spilled"]
+                adds["evicted_add"] += c["evicted"]
+            for h in departing:
+                self._send(h, wire.DETACH)
+            self._gather(departing, wire.OK)
+        # new ownership epoch on every surviving shard (shard 0 absorbs the
+        # departing counters exactly like the in-process fold)
+        for w in range(n_new):
+            meta = {"n_new": n_new, "tally": int(folded[w])}
+            if w == 0:
+                meta.update(adds)
+            self._send(
+                self._pool[w], wire.APPLY, meta, {"slot_table": sm_new.table}
+            )
+        self._gather(self._pool[:n_new], wire.OK)
+        self._slot_map = sm_new
+        self._active = n_new
+        self._tally = [int(v) for v in folded]
+        self.wire_bytes["migration"] += wire_bytes
+        return ResizeInfo(
+            protocol="S2-slotmap-handoff",
+            handoff_items=int(len(moved)),
+            handoff_rows=int(rows_moved),
+            handoff_bytes=int(wire_bytes),
+            detail=f"{len(moved)}/{self.num_slots} slots "
+                   f"({rows_moved} rows, {wire_bytes} wire bytes) migrate "
+                   f"across processes (minimal rebalance {n_old}->{n_new})",
+        )
+
+    # -- observability ---------------------------------------------------------
+    def export_health(self, registry) -> None:
+        """Publish the distributed plane's health gauges (same names as the
+        in-process plane, values fetched over HEALTH frames)."""
+        n_w = self._active
+        if not n_w:
+            return
+        registry.gauge("keyed.plane.n_shards").set(n_w)
+        for w in range(n_w):
+            self._send(self._pool[w], wire.HEALTH_REQ)
+        replies = self._gather(self._pool[:n_w], wire.HEALTH)
+        totals = {"inserted": 0, "hits": 0, "spilled": 0, "evicted": 0}
+        late_total = 0
+        total_resident = 0
+        total_spill = 0
+        g = registry.gauge
+        for w, (meta, _) in enumerate(replies):
+            h = meta["health"]
+            c = meta["counters"]
+            resident = h["occupancy"] if h is not None else 0
+            total_resident += resident
+            total_spill += c["spill_rows"]
+            late_total += c["late_count"]
+            for k in totals:
+                totals[k] += c[k]
+            g(f"keyed.shard{w}.resident_rows").set(resident)
+            g(f"keyed.shard{w}.spill_rows").set(c["spill_rows"])
+            if h is not None:
+                g(f"keyed.shard{w}.occupancy").set(h["occupancy"])
+                g(f"keyed.shard{w}.load_factor").set(h["load_factor"])
+                g(f"keyed.shard{w}.probe_mean").set(h["probe_mean"])
+                g(f"keyed.shard{w}.probe_max").set(h["probe_max"])
+        g("keyed.plane.resident_rows").set(total_resident)
+        g("keyed.plane.spill_rows").set(total_spill)
+        for k, name in (
+            ("inserted", "keyed.table.inserted"),
+            ("hits", "keyed.table.hits"),
+            ("spilled", "keyed.table.spilled"),
+            ("evicted", "keyed.table.evicted"),
+        ):
+            registry.counter(name).value = totals[k]
+        registry.counter("keyed.late").value = late_total
+
+    # -- failure drill ---------------------------------------------------------
+    def kill_worker(self, shard: int) -> None:
+        """Failure drill: make shard ``shard``'s host die exactly like a
+        real fault (black-box dump, then hard exit).  The NEXT frame sent
+        to it — or the next gather — surfaces the ``WorkerFailure``."""
+        h = self._pool[shard]
+        try:
+            wire.send(h.conn, wire.CRASH)
+        except (BrokenPipeError, OSError):
+            pass

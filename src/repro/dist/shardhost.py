@@ -1,0 +1,234 @@
+"""ShardHost: one worker process owning one live keyed engine shard.
+
+The serve loop is a strict request/reply automaton over
+:mod:`repro.dist.wire` frames on a ``multiprocessing`` pipe: the
+coordinator (:class:`repro.dist.plane.DistributedKeyedPlane`) scatters
+ATTACH / STEP / EXTRACT / INGEST / APPLY / SNAPSHOT_REQ frames and the host
+answers each with exactly one reply frame.  The engine inside is the same
+:class:`~repro.keyed.windows.KeyedWindowEngine` the in-process plane runs —
+the process boundary changes transport, never semantics.
+
+Every STEP reply carries the spans the host timed around its engine work,
+stamped with ``time.perf_counter`` (``CLOCK_MONOTONIC`` — one coherent
+timeline across processes on the same Linux host); the coordinator replays
+them onto a dedicated tracer track per shard process.  The host also feeds
+its own process-local :class:`~repro.obs.trace.FlightRecorder`, and dumps
+it as a Chrome-trace black box before dying on any error (including the
+CRASH failure-drill frame) — the coordinator collects the dump file when it
+sees the pipe close.
+
+Workers are spawn-safe: :func:`serve` is a plain module-level entry point
+taking only picklable arguments, and engine construction happens inside the
+child, so ``start_method="spawn"`` (the default — safe after the parent has
+initialized JAX threads) and ``"fork"`` both work.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+import traceback
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.dist import wire
+from repro.keyed.windows import KeyedWindowEngine, WindowSpec
+from repro.obs.trace import FlightRecorder, Tracer
+
+
+class _Host:
+    """Per-process state: the engine shard plus identity/instrumentation."""
+
+    def __init__(self, conn, cfg: Dict[str, Any]):
+        self.conn = conn
+        self.shard = int(cfg["shard"])
+        self.blackbox_path: Optional[str] = cfg.get("blackbox_path")
+        self.spec = WindowSpec(**cfg["spec"])
+        self.engine_kwargs = dict(cfg["engine_kwargs"])
+        self.eng: Optional[KeyedWindowEngine] = None
+        # process-local black box: newest spans survive into the crash dump
+        self.recorder = FlightRecorder(capacity=1024)
+        self.tracer = Tracer(max_events=0, recorder=self.recorder)
+        self._spans: List[List] = []  # per-request span log shipped upstream
+
+    # -- span capture ---------------------------------------------------------
+    def _span(self, name: str, t0: float, t1: float, **args) -> None:
+        self._spans.append([name, t0, t1, args or None])
+        self.tracer.record_span(name, t0, t1, tid=0, **args)
+
+    def take_spans(self) -> List[List]:
+        out, self._spans = self._spans, []
+        return out
+
+    # -- frame handlers --------------------------------------------------------
+    def on_attach(self, meta, cols):
+        tree = dict(cols)
+        tree["slot_table"] = np.asarray(tree["slot_table"], np.int32)
+        for k in wire.SNAPSHOT_SCALARS:
+            tree[k] = np.int64(meta[k])
+        self.eng = KeyedWindowEngine.restore(
+            self.spec, tree, **self.engine_kwargs
+        )
+        return wire.OK, {"rows": int(len(tree["w_key"]))}, None
+
+    def on_step(self, meta, cols):
+        t0 = time.perf_counter()
+        wm_ts = meta.get("wm_ts")
+        out = self.eng.process_chunk(
+            {k: cols[k] for k in ("key", "value", "ts")},
+            wm_ts=wm_ts, positions=cols["pos"],
+        )
+        t1 = time.perf_counter()
+        self._span("shard_step", t0, t1, shard=self.shard,
+                   m=int(len(cols["key"])))
+        reply_cols: Dict[str, np.ndarray] = {}
+        for prefix, part in (("em", out["emissions"]), ("ey", out["early"])):
+            for k in ("key", "start", "end", "value", "count"):
+                reply_cols[f"{prefix}_{k}"] = part[k]
+        for k in ("key", "value", "ts", "start", "pos"):
+            reply_cols[f"lt_{k}"] = out["late"][k]
+        reply_meta = {
+            "spans": self.take_spans(),
+            # the shard's own §4.2 work tally after this chunk — lets the
+            # coordinator mirror the global tally without extra roundtrips
+            "tally": int(self.eng.worker_items[self.shard]),
+        }
+        return wire.STEP_OUT, reply_meta, reply_cols
+
+    def on_snapshot_req(self, meta, cols):
+        t0 = time.perf_counter()
+        snap_meta, snap_cols = wire.snapshot_to_frame(self.eng.snapshot())
+        self._span("shard_snapshot", t0, time.perf_counter(),
+                   shard=self.shard)
+        snap_meta["spans"] = self.take_spans()
+        return wire.SNAPSHOT, snap_meta, snap_cols
+
+    def on_extract(self, meta, cols):
+        rows = self.eng.extract_rows(np.asarray(cols["slots"], np.int64))
+        return wire.ROWS, {"rows": int(len(rows[0]))}, wire.rows_to_cols(rows)
+
+    def on_ingest(self, meta, cols):
+        self.eng.ingest_rows(*wire.cols_to_rows(cols))
+        return wire.OK, {"rows": int(len(cols["key"]))}, None
+
+    def on_apply(self, meta, cols):
+        """New ownership epoch: adopt the rebalanced slot table, take the
+        coordinator-folded work tally, and (shard 0 only) absorb departing
+        shards' stream-global counters."""
+        from repro.keyed.store import SlotMap
+
+        n_new = int(meta["n_new"])
+        table = np.asarray(cols["slot_table"], np.int32)
+        self.eng.store.slot_map = SlotMap(
+            self.eng.store.num_slots, n_new, table=table
+        )
+        items = np.zeros(n_new, np.int64)
+        items[self.shard] = int(meta["tally"])
+        self.eng.worker_items = items
+        self.eng.late_count += int(meta.get("late_add", 0))
+        if self.eng.table is not None:
+            st = self.eng.table.stats
+            st.inserted += int(meta.get("inserted_add", 0))
+            st.hits += int(meta.get("hits_add", 0))
+            st.spilled += int(meta.get("spilled_add", 0))
+            st.evicted += int(meta.get("evicted_add", 0))
+        return wire.OK, None, None
+
+    def on_health(self, meta, cols):
+        eng = self.eng
+        h = eng.table.health() if eng.table is not None else None
+        counters = {
+            "late_count": int(eng.late_count),
+            "spill_rows": int(eng.store.num_rows()),
+            "inserted": int(eng.table.stats.inserted) if eng.table else 0,
+            "hits": int(eng.table.stats.hits) if eng.table else 0,
+            "spilled": int(eng.table.stats.spilled) if eng.table else 0,
+            "evicted": int(eng.table.stats.evicted) if eng.table else 0,
+        }
+        return wire.HEALTH, {"health": h, "counters": counters}, None
+
+    def on_detach(self, meta, cols):
+        """Drop the engine but keep the process warm: re-attach after a
+        checkpoint restore reuses the already-imported worker."""
+        self.eng = None
+        return wire.OK, None, None
+
+    # -- crash path ------------------------------------------------------------
+    def dump_blackbox(self, err: str) -> None:
+        if not self.blackbox_path:
+            return
+        try:
+            self.tracer.instant("worker_error", shard=self.shard, error=err)
+            os.makedirs(os.path.dirname(self.blackbox_path), exist_ok=True)
+            self.recorder.dump(
+                self.blackbox_path,
+                process_name=f"shardhost:{self.shard}",
+            )
+        except Exception:
+            pass  # the black box must never mask the real failure
+
+
+_HANDLERS = {
+    wire.ATTACH: _Host.on_attach,
+    wire.STEP: _Host.on_step,
+    wire.SNAPSHOT_REQ: _Host.on_snapshot_req,
+    wire.EXTRACT: _Host.on_extract,
+    wire.INGEST: _Host.on_ingest,
+    wire.APPLY: _Host.on_apply,
+    wire.HEALTH_REQ: _Host.on_health,
+    wire.DETACH: _Host.on_detach,
+}
+
+
+def serve(conn, cfg: Dict[str, Any]) -> None:
+    """Worker-process entry point: handshake, then serve frames until
+    SHUTDOWN.  On CRASH (the supervisor failure drill) or any internal
+    error the host dumps its flight recorder and exits nonzero — the
+    coordinator sees the pipe close and raises ``WorkerFailure``."""
+    host = _Host(conn, cfg)
+    wire.send(conn, wire.HELLO, {
+        "shard": host.shard, "pid": os.getpid(),
+        "blackbox_path": host.blackbox_path,
+    })
+    while True:
+        try:
+            ftype, meta, cols = wire.recv(conn)
+        except (EOFError, OSError):
+            return  # coordinator is gone: nothing to report to
+        if ftype == wire.SHUTDOWN:
+            try:
+                wire.send(conn, wire.OK, {"seq": meta.get("seq")})
+            except (BrokenPipeError, OSError):
+                pass
+            return
+        if ftype == wire.CRASH:
+            # deterministic failure drill: die exactly like a real fault —
+            # dump the black box, close nothing gracefully, exit nonzero
+            host.dump_blackbox("injected crash (CRASH frame)")
+            os._exit(17)
+        handler = _HANDLERS.get(ftype)
+        try:
+            if handler is None:
+                raise wire.WireError(
+                    f"unexpected frame type 0x{ftype:02x}"
+                )
+            rtype, rmeta, rcols = handler(host, meta, cols)
+            # echo the request's sequence number: the coordinator uses it
+            # to discard replies stranded by a failure-interrupted epoch
+            rmeta = dict(rmeta) if rmeta else {}
+            rmeta["seq"] = meta.get("seq")
+            wire.send(conn, rtype, rmeta, rcols)
+        except (BrokenPipeError, OSError):
+            return
+        except Exception as e:  # engine/protocol error: report, then die
+            err = f"{type(e).__name__}: {e}"
+            host.dump_blackbox(err)
+            try:
+                wire.send(conn, wire.ERR, {
+                    "error": err,
+                    "traceback": traceback.format_exc(limit=20),
+                })
+            except (BrokenPipeError, OSError):
+                pass
+            os._exit(1)

@@ -1,0 +1,250 @@
+"""Length-prefixed binary wire protocol for the distributed keyed plane.
+
+One codec serves every frame the plane ships — chunk scatter, emission
+gather, row-level migration, checkpoint snapshots — because they are all the
+same physical shape: a tiny scalar header plus named flat numpy columns.
+The ``extract_rows`` canonical sorted-row payload (7 int64 columns) IS the
+migration unit, so migration frames and checkpoint frames reuse the exact
+byte layout, and "bytes on the wire" is a measurable, gateable quantity.
+
+The format is specified independently of this code in
+``docs/wire-protocol.md`` (header layout, column encoding, versioning
+rules); keep the two in sync.  Layout summary::
+
+    frame  := header || meta || column*
+    header := magic "RKWP" (4s) | version u8 | ftype u8 | flags u16 LE
+              | meta_len u32 LE | ncols u16 LE | reserved u16 LE
+    meta   := meta_len bytes of UTF-8 JSON (scalars / small lists only)
+    column := name_len u8 | name (UTF-8) | dtype_code u8 | nbytes u32 LE
+              | raw little-endian array bytes
+
+Transport framing: :func:`send` / :func:`recv` ride a
+``multiprocessing.Connection`` (which length-delimits messages itself);
+:func:`write_frame` / :func:`read_frame` add an explicit u32 length prefix
+for raw byte streams (sockets, files) — both carry the identical frame
+bytes, so the codec round-trip is transport-agnostic and property-testable
+against ``io.BytesIO``.
+
+Versioning: ``VERSION`` bumps on ANY layout change; a decoder receiving a
+frame with an unknown magic or version raises :class:`WireError` instead of
+guessing — the coordinator treats that as a worker failure, never as data.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+MAGIC = b"RKWP"          # Repro Keyed Wire Protocol
+VERSION = 1
+
+_HEADER = struct.Struct("<4sBBHIHH")  # magic, ver, ftype, flags, meta, ncols, rsvd
+HEADER_BYTES = _HEADER.size
+
+# -- frame types -------------------------------------------------------------
+HELLO = 0x01         # worker -> coord: alive, pid, blackbox path
+ATTACH = 0x02        # coord -> worker: hydrate one engine shard
+STEP = 0x03          # coord -> worker: routed sub-chunk + shared clock
+STEP_OUT = 0x04      # worker -> coord: emissions / early / late (+ spans)
+SNAPSHOT_REQ = 0x05  # coord -> worker: serialize to canonical form
+SNAPSHOT = 0x06      # worker -> coord: the canonical engine snapshot
+EXTRACT = 0x07       # coord -> worker: pull moved slots' rows (donor half)
+ROWS = 0x08          # worker -> coord: extract_rows payload (7 columns)
+INGEST = 0x09        # coord -> worker: adopt migrated rows (recipient half)
+APPLY = 0x0A         # coord -> worker: new slot table + folded tally
+HEALTH_REQ = 0x0B    # coord -> worker: table health / tier gauges
+HEALTH = 0x0C        # worker -> coord: health snapshot (meta only)
+DETACH = 0x0D        # coord -> worker: drop the engine, stay warm
+SHUTDOWN = 0x0E      # coord -> worker: exit cleanly
+CRASH = 0x0F         # coord -> worker: die mid-flight (failure drills)
+OK = 0x10            # worker -> coord: ack (may carry counters in meta)
+ERR = 0x11           # worker -> coord: exception text in meta
+
+FRAME_NAMES = {
+    v: k for k, v in list(globals().items())
+    if isinstance(v, int) and k.isupper() and k not in ("VERSION", "HEADER_BYTES")
+}
+
+#: wire dtype codes — int64 is the plane's lingua franca (rows, chunks,
+#: counters); int32 covers the slot table; the rest future-proof the codec
+_DTYPES = {
+    0: np.dtype("<i8"),
+    1: np.dtype("<i4"),
+    2: np.dtype("<f8"),
+    3: np.dtype("|b1"),
+    4: np.dtype("|u1"),
+}
+_DTYPE_CODES = {v: k for k, v in _DTYPES.items()}
+_CANON = {  # anything else canonicalizes to one of the wire dtypes
+    np.dtype(np.int64): np.dtype("<i8"),
+    np.dtype(np.int32): np.dtype("<i4"),
+    np.dtype(np.float64): np.dtype("<f8"),
+    np.dtype(np.bool_): np.dtype("|b1"),
+    np.dtype(np.uint8): np.dtype("|u1"),
+}
+
+
+class WireError(RuntimeError):
+    """Malformed, truncated, or version-incompatible frame."""
+
+
+def encode(
+    ftype: int,
+    meta: Optional[Dict] = None,
+    cols: Optional[Dict[str, np.ndarray]] = None,
+) -> bytes:
+    """Serialize one frame to bytes.
+
+    ``meta`` is a small JSON-scalar dict; ``cols`` maps column names to 1-D
+    numpy arrays of a wire dtype (int64/int32/float64/bool/uint8).  Column
+    order is preserved (dict order), so encode→decode is byte-stable.
+    """
+    meta_b = json.dumps(meta, separators=(",", ":")).encode() if meta else b""
+    cols = cols or {}
+    parts = [
+        _HEADER.pack(MAGIC, VERSION, ftype, 0, len(meta_b), len(cols), 0),
+        meta_b,
+    ]
+    for name, arr in cols.items():
+        a = np.ascontiguousarray(arr)
+        dt = _CANON.get(a.dtype, a.dtype)
+        if dt not in _DTYPE_CODES:
+            raise WireError(f"column {name!r}: unsupported dtype {a.dtype}")
+        if a.ndim != 1:
+            raise WireError(f"column {name!r}: must be 1-D, got shape {a.shape}")
+        raw = a.astype(dt, copy=False).tobytes()
+        nb = name.encode()
+        if len(nb) > 255:
+            raise WireError(f"column name too long: {name!r}")
+        parts.append(struct.pack("<B", len(nb)))
+        parts.append(nb)
+        parts.append(struct.pack("<BI", _DTYPE_CODES[dt], len(raw)))
+        parts.append(raw)
+    return b"".join(parts)
+
+
+def decode(buf: bytes) -> Tuple[int, Dict, Dict[str, np.ndarray]]:
+    """Parse one frame; returns ``(ftype, meta, cols)``.
+
+    Decoded columns are fresh arrays in native byte order (little-endian
+    platforms share the buffer layout; the copy decouples them from ``buf``).
+    """
+    if len(buf) < HEADER_BYTES:
+        raise WireError(f"truncated header: {len(buf)} < {HEADER_BYTES}")
+    magic, ver, ftype, _flags, meta_len, ncols, _rsvd = _HEADER.unpack_from(buf)
+    if magic != MAGIC:
+        raise WireError(f"bad magic {magic!r}")
+    if ver != VERSION:
+        raise WireError(f"wire version {ver} != {VERSION}")
+    off = HEADER_BYTES
+    if len(buf) < off + meta_len:
+        raise WireError("truncated meta")
+    meta = json.loads(buf[off:off + meta_len]) if meta_len else {}
+    off += meta_len
+    cols: Dict[str, np.ndarray] = {}
+    for _ in range(ncols):
+        (nlen,) = struct.unpack_from("<B", buf, off)
+        off += 1
+        name = buf[off:off + nlen].decode()
+        off += nlen
+        code, nbytes = struct.unpack_from("<BI", buf, off)
+        off += 5
+        dt = _DTYPES.get(code)
+        if dt is None:
+            raise WireError(f"column {name!r}: unknown dtype code {code}")
+        if len(buf) < off + nbytes:
+            raise WireError(f"column {name!r}: truncated payload")
+        arr = np.frombuffer(buf, dtype=dt, count=nbytes // dt.itemsize,
+                            offset=off).copy()
+        cols[name] = arr.astype(arr.dtype.newbyteorder("="), copy=False)
+        off += nbytes
+    if off != len(buf):
+        raise WireError(f"{len(buf) - off} trailing bytes after last column")
+    return ftype, meta, cols
+
+
+# -- transport: multiprocessing.Connection ----------------------------------
+
+def send(conn, ftype: int, meta=None, cols=None) -> int:
+    """Encode and ship one frame over a Connection; returns bytes sent
+    (the frame size — what the migration-volume accounting sums)."""
+    frame = encode(ftype, meta, cols)
+    conn.send_bytes(frame)
+    return len(frame)
+
+
+def recv(conn) -> Tuple[int, Dict, Dict[str, np.ndarray]]:
+    """Receive and decode one frame (blocking).  EOF propagates as the
+    Connection's ``EOFError`` — the coordinator's worker-death signal."""
+    return decode(conn.recv_bytes())
+
+
+# -- transport: raw byte streams (sockets / files / BytesIO) -----------------
+
+def write_frame(stream, ftype: int, meta=None, cols=None) -> int:
+    """Write ``u32 length || frame`` to a byte stream; returns bytes written
+    including the prefix."""
+    frame = encode(ftype, meta, cols)
+    stream.write(struct.pack("<I", len(frame)))
+    stream.write(frame)
+    return 4 + len(frame)
+
+
+def read_frame(stream) -> Tuple[int, Dict, Dict[str, np.ndarray]]:
+    """Read one length-prefixed frame from a byte stream."""
+    prefix = stream.read(4)
+    if len(prefix) < 4:
+        raise WireError("truncated length prefix")
+    (n,) = struct.unpack("<I", prefix)
+    buf = stream.read(n)
+    if len(buf) < n:
+        raise WireError(f"truncated frame: {len(buf)} < {n}")
+    return decode(buf)
+
+
+# -- canonical payload helpers ----------------------------------------------
+
+#: column names of the ``extract_rows`` canonical sorted-row payload — the
+#: one physical migration/checkpoint row layout (7 int64 columns, 56 B/row)
+ROW_COLUMNS = ("key", "start", "end", "value", "count", "resident", "touch")
+
+#: engine-snapshot scalars that ride in frame meta (ints); every other
+#: snapshot entry is a genuine array column
+SNAPSHOT_SCALARS = (
+    "n_workers", "wm", "wm_valid", "wm_ticks", "max_ts", "max_ts_valid",
+    "late_count", "t_inserted", "t_hits", "t_spilled", "t_evicted",
+)
+
+
+def rows_to_cols(rows: Tuple[np.ndarray, ...]) -> Dict[str, np.ndarray]:
+    """Name an ``extract_rows`` tuple for the wire (ROWS / INGEST frames)."""
+    return {name: np.asarray(col, np.int64)
+            for name, col in zip(ROW_COLUMNS, rows)}
+
+
+def cols_to_rows(cols: Dict[str, np.ndarray]) -> Tuple[np.ndarray, ...]:
+    """Invert :func:`rows_to_cols` (decode side)."""
+    return tuple(np.asarray(cols[name], np.int64) for name in ROW_COLUMNS)
+
+
+def snapshot_to_frame(snap: Dict) -> Tuple[Dict, Dict[str, np.ndarray]]:
+    """Split a canonical engine snapshot into (meta, cols) for a SNAPSHOT
+    frame: numpy int64 scalars to JSON meta, arrays to raw columns."""
+    meta = {k: int(snap[k]) for k in SNAPSHOT_SCALARS}
+    cols = {
+        k: np.asarray(v)
+        for k, v in snap.items() if k not in SNAPSHOT_SCALARS
+    }
+    return meta, cols
+
+
+def frame_to_snapshot(meta: Dict, cols: Dict[str, np.ndarray]) -> Dict:
+    """Rebuild the canonical snapshot dict from a SNAPSHOT frame."""
+    snap = {k: np.asarray(v) for k, v in cols.items()}
+    snap["slot_table"] = np.asarray(snap["slot_table"], np.int32)
+    for k in SNAPSHOT_SCALARS:
+        snap[k] = np.int64(meta[k])
+    return snap

@@ -141,6 +141,41 @@ def _concat_sorted(parts: List[Dict[str, np.ndarray]], keys) -> Dict:
     return {k: v[order] for k, v in cols.items()}
 
 
+def merge_shard_snapshots(
+    snaps: List[Dict[str, np.ndarray]], slot_table: np.ndarray,
+    n_workers: int,
+) -> Dict[str, np.ndarray]:
+    """Merge per-shard engine snapshots into THE canonical snapshot.
+
+    Identical logical state serializes identically whether it lived in one
+    global engine, ``n_w`` in-process shards, or ``n_w`` shard-host
+    processes (the distributed plane gathers SNAPSHOT frames and calls this
+    same merge): rows are disjoint so a canonical ``(end, start, key)``
+    lexsort is the merge, the watermark clock is shared so shard 0 speaks
+    for all, and counters/tallies are sums.
+    """
+    cols = {
+        k: np.concatenate([s[k] for s in snaps]) for k in _ROW_COLS
+    }
+    order = np.lexsort(
+        (cols["w_end"], cols["w_start"], cols["w_key"])
+    )
+    out = {k: v[order] for k, v in cols.items()}
+    out["slot_table"] = np.asarray(slot_table, np.int32).copy()
+    out["n_workers"] = np.int64(n_workers)
+    for k in ("wm", "wm_valid", "wm_ticks", "max_ts", "max_ts_valid"):
+        out[k] = snaps[0][k]  # the watermark clock is shared
+    out["late_count"] = np.int64(
+        sum(int(s["late_count"]) for s in snaps)
+    )
+    out["worker_items"] = np.sum(
+        [s["worker_items"] for s in snaps], axis=0, dtype=np.int64
+    )
+    for k in _STAT_KEYS:
+        out[k] = np.int64(sum(int(s[k]) for s in snaps))
+    return out
+
+
 class KeyedWindowAdapter(PatternAdapter):
     """Keyed windowed state as a sharded live plane under the executor.
 
@@ -244,22 +279,27 @@ class KeyedWindowAdapter(PatternAdapter):
         self._rebuild_batched()
 
     def _rebuild_batched(self) -> None:
-        """(Re)stack the per-shard table slabs into the fused plane's
-        ``(n_w, capacity)`` batched view — after attach and after a resize
-        changes the shard set.  Host backend and session windows have no
-        device tier, so no plane.
+        """(Re)form the fused plane's ``(n_w, capacity)`` batched view —
+        after attach and after a resize changes the shard set.  Host
+        backend and session windows have no device tier, so no plane.
 
-        The restack is an ``O(n_w * capacity)`` memcpy regardless of moved
-        rows — a fixed per-resize cost on top of the row-proportional
-        handoff (sequential copy, well under one snapshot barrier; the
-        ``max_resize_vs_barrier`` gate bounds the sum).  An incremental
-        restack that reuses unmoved segments is a known follow-up
-        (ROADMAP)."""
-        self._batched = (
-            BatchedWindowTable([s.table for s in self._shards])
-            if self.fused and self._shards[0].table is not None
-            else None
-        )
+        Attach stacks once into an over-allocated plane (``reserve``
+        segments, so the autoscaler's early grows stay in place); resizes
+        go through :meth:`~repro.keyed.table.BatchedWindowTable.restack`,
+        which reuses survivors' unmoved segments (shard ids are stable
+        under rebalance) — a shrink is a prefix re-slice, a grow clears
+        fresh segments in place, and slab bytes move only on an allocation
+        doubling (``copied_bytes`` counts them), keeping resize cost
+        strictly proportional to migrated rows."""
+        if not (self.fused and self._shards[0].table is not None):
+            self._batched = None
+            return
+        tables = [s.table for s in self._shards]
+        if self._batched is None:
+            reserve = min(self.num_slots, max(2 * len(tables), 8))
+            self._batched = BatchedWindowTable(tables, reserve=reserve)
+        else:
+            self._batched.restack(tables)
 
     def detach(self) -> None:
         self._shards = None
@@ -675,6 +715,11 @@ class KeyedWindowAdapter(PatternAdapter):
             eng.wm, eng.max_ts = proto.wm, proto.max_ts
             eng.wm_ticks = proto.wm_ticks
             self._shards.append(eng)
+        if self._batched is not None and n_new > n_old:
+            # adopt the fresh shards' empty segments BEFORE the row handoff
+            # so the recipients' ingest writes land directly in the plane —
+            # the closing restack then finds every segment already in place
+            self._batched.restack([s.table for s in self._shards])
         # donor side: pull each donor's moved rows once (both tiers), then
         # bucket them by recipient through the new ownership table
         per_recipient: Dict[int, List[Tuple[np.ndarray, ...]]] = {}

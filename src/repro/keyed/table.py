@@ -409,42 +409,119 @@ class BatchedWindowTable:
     Placement stats accumulate on shard 0's :class:`TableStats` (the
     stream-global counter home the sharded plane already uses); the barrier
     sums per-shard counters, so fused and loop runs serialize identically.
+
+    Incremental restack (resize without the full-plane memcpy)
+        The planes are **over-allocated**: storage holds ``alloc >=
+        n_shards`` segments and the public arrays (``key`` / ``occ`` /
+        flat views / ``row_owner``) are active-prefix *views* of the first
+        ``n_shards``.  Because :meth:`SlotMap.rebalance` keeps survivor
+        shard ids stable, a resize never moves a survivor's segment:
+        :meth:`restack` re-slices the prefix (shrink), occupancy-clears and
+        adopts fresh empty segments in place (grow within ``alloc``), and
+        only copies anything when the allocation itself must grow —
+        ``copied_bytes`` counts exactly those bytes, so a regression test
+        can pin in-place resizes to **zero** slab traffic and the resize
+        cost stays proportional to migrated rows.
     """
 
-    def __init__(self, tables: List[DeviceWindowTable]):
+    _PLANES = ("key", "start", "end", "value", "count", "touch", "occ")
+
+    def __init__(self, tables: List[DeviceWindowTable], *, reserve: int = 0):
         if not tables:
             raise ValueError("need at least one shard table")
         cap = tables[0].capacity
         if any(t.capacity != cap or t.max_probes != tables[0].max_probes
                for t in tables):
             raise ValueError("shard tables must agree on capacity/max_probes")
-        self.n_shards = len(tables)
         self.capacity = cap
         self.max_probes = tables[0].max_probes
-        self.key = np.stack([t.key for t in tables])
-        self.start = np.stack([t.start for t in tables])
-        self.end = np.stack([t.end for t in tables])
-        self.value = np.stack([t.value for t in tables])
-        self.count = np.stack([t.count for t in tables])
-        self.touch = np.stack([t.touch for t in tables])
-        self.occ = np.stack([t.occ for t in tables])
+        #: bytes memcpy'd by restacks (plane realloc / foreign-slab adopt);
+        #: stays 0 across resizes that fit the allocation — the gateable
+        #: "no full restack" signal
+        self.copied_bytes = 0
+        self._alloc = max(len(tables), reserve, 1)
+        for name in self._PLANES:
+            dt = bool if name == "occ" else np.int64
+            setattr(self, f"_a{name}", np.zeros((self._alloc, cap), dt))
+        self._arow_owner = np.repeat(
+            np.arange(self._alloc, dtype=np.int32), cap
+        )
+        for w, t in enumerate(tables):
+            for name in self._PLANES:
+                getattr(self, f"_a{name}")[w] = getattr(t, name)
+        self.n_shards = len(tables)
+        self._activate()
+        self._adopt(tables)
+
+    def _activate(self) -> None:
+        """Re-derive the active-prefix views from the backing planes:
+        ``(n_shards, capacity)`` per column, their C-contiguous flat
+        aliases (global row = ``w*cap + row``), and the row-owner column —
+        all views, never copies."""
+        n = self.n_shards
+        for name in self._PLANES:
+            plane = getattr(self, f"_a{name}")[:n]
+            setattr(self, name, plane)
+            setattr(self, f"_f{name}", plane.reshape(-1))
+        #: shard id of every global row — the kernel's 5th match plane
+        self.row_owner = self._arow_owner[: n * self.capacity]
+
+    def _adopt(self, tables: List[DeviceWindowTable]) -> None:
+        """Re-point every shard table at its segment of the planes (the
+        tables become views) and remember the adopted objects so a later
+        :meth:`restack` can recognize unmoved segments by identity."""
         for w, t in enumerate(tables):
             t.key, t.start, t.end = self.key[w], self.start[w], self.end[w]
             t.value, t.count = self.value[w], self.count[w]
             t.touch, t.occ = self.touch[w], self.occ[w]
-        # flat views over the C-contiguous stack: global row = w*cap + row
-        self._fkey = self.key.reshape(-1)
-        self._fstart = self.start.reshape(-1)
-        self._fend = self.end.reshape(-1)
-        self._fvalue = self.value.reshape(-1)
-        self._fcount = self.count.reshape(-1)
-        self._ftouch = self.touch.reshape(-1)
-        self._focc = self.occ.reshape(-1)
-        #: shard id of every global row — the kernel's 5th match plane
-        self.row_owner = np.repeat(
-            np.arange(self.n_shards, dtype=np.int32), cap
-        )
+        self._adopted: List[DeviceWindowTable] = list(tables)
         self.stats = tables[0].stats
+
+    def _realloc(self, alloc2: int) -> None:
+        """Grow the backing planes; the ONLY place a survivor segment is
+        ever copied, and every byte is charged to ``copied_bytes``."""
+        n = self.n_shards
+        for name in self._PLANES:
+            old = getattr(self, f"_a{name}")
+            new = np.zeros((alloc2, self.capacity), old.dtype)
+            new[:n] = old[:n]
+            self.copied_bytes += old[:n].nbytes
+            setattr(self, f"_a{name}", new)
+        self._arow_owner = np.repeat(
+            np.arange(alloc2, dtype=np.int32), self.capacity
+        )
+        self._alloc = alloc2
+
+    def restack(self, tables: List[DeviceWindowTable]) -> None:
+        """Re-form the plane for a resized shard list WITHOUT a full
+        restack: survivor tables (recognized by identity — rebalance keeps
+        their ids, so shard ``w`` always owns segment ``w``) are untouched;
+        a shrink is a prefix re-slice; a grow adopts fresh empty segments
+        by clearing occupancy in place.  Slab bytes move only on an
+        allocation doubling (``copied_bytes``), so resize cost is strictly
+        row-proportional: the migrated rows' ``ingest_rows`` writes land
+        directly in the adopted segments."""
+        if any(t.capacity != self.capacity or t.max_probes != self.max_probes
+               for t in tables):
+            raise ValueError("shard tables must agree on capacity/max_probes")
+        if len(tables) > self._alloc:
+            self._realloc(max(len(tables), 2 * self._alloc))
+        prior = self._adopted
+        for w, t in enumerate(tables):
+            if w < len(prior) and t is prior[w]:
+                continue  # survivor: its segment never moves
+            if t.occ.any():
+                # foreign non-empty table (restore path): copy its slab in
+                for name in self._PLANES:
+                    getattr(self, f"_a{name}")[w] = getattr(t, name)
+                    self.copied_bytes += getattr(t, name).nbytes
+            else:
+                # fresh shard joining a grow: an empty segment is just a
+                # cleared occupancy row — zero column traffic
+                self._aocc[w][:] = False
+        self.n_shards = len(tables)
+        self._activate()
+        self._adopt(tables)
 
     @property
     def total_rows(self) -> int:

@@ -74,10 +74,16 @@ def chrome_trace(tracer, *, registry=None, pid: int = 0,
         "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
         "args": {"name": process_name},
     }]
+    # explicit labels (Tracer.alloc_track — e.g. one track per shard-host
+    # process) win over the positional main/worker-N defaults
+    track_names = getattr(tracer, "track_names", None) or {}
     for tid in sorted(tids):
+        name = track_names.get(
+            tid, "main" if tid == 0 else f"worker-{tid}"
+        )
         meta.append({
             "name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
-            "args": {"name": "main" if tid == 0 else f"worker-{tid}"},
+            "args": {"name": name},
         })
     out = {
         "traceEvents": meta + events,

@@ -160,6 +160,9 @@ class Tracer:
         # (pass recorder=None to opt out); the ring keeps NEWEST events, so
         # it still sees what a saturated main buffer drops
         self.recorder = FLIGHT_RECORDER if recorder == "default" else recorder
+        #: explicit track labels (``tid -> name``) for tracks reserved via
+        #: :meth:`alloc_track`; the Chrome-trace export names them verbatim
+        self.track_names: Dict[int, str] = {}
         self._lock = threading.Lock()
         self._local = threading.local()
         self._next_tid = 0
@@ -187,6 +190,32 @@ class Tracer:
         self._append(
             self.counters,
             CounterRecord(name, self.clock.now(), values),
+        )
+
+    # -- external event sources (cross-process timelines) --------------------
+    def alloc_track(self, name: str) -> int:
+        """Reserve a dense ``tid`` for an **external** event source — e.g.
+        one shard-host process of the distributed keyed plane — so its spans
+        render as their own named Perfetto track.  The reserved tid is never
+        handed to a local thread (it comes from the same counter
+        :meth:`_thread_state` draws from)."""
+        with self._lock:
+            tid = self._next_tid
+            self._next_tid += 1
+            self.track_names[tid] = name
+        return tid
+
+    def record_span(
+        self, name: str, t0: float, t1: float, *, tid: int, depth: int = 0,
+        **args,
+    ) -> None:
+        """Append a span timed by someone else (a worker process stamping
+        ``time.perf_counter`` — ``CLOCK_MONOTONIC``, shared across processes
+        on the same Linux host, so cross-process spans land on one coherent
+        timeline).  Feeds the flight recorder exactly like locally-timed
+        spans."""
+        self._append(
+            self.spans, SpanRecord(name, t0, t1, tid, depth, args or None)
         )
 
     # -- internals -----------------------------------------------------------
@@ -275,12 +304,22 @@ class NullTracer:
         self.spans: List[SpanRecord] = []
         self.instants: List[InstantRecord] = []
         self.counters: List[CounterRecord] = []
+        self.track_names: Dict[int, str] = {}
         self.dropped = 0
 
     def span(self, name: str, **args) -> _NullSpan:
         return _NULL_SPAN
 
     def instant(self, name: str, **args) -> None:
+        return None
+
+    def alloc_track(self, name: str) -> int:
+        return 0
+
+    def record_span(
+        self, name: str, t0: float, t1: float, *, tid: int = 0,
+        depth: int = 0, **args,
+    ) -> None:
         return None
 
     def counter(self, name: str, **values) -> None:

@@ -132,9 +132,19 @@ class Supervisor:
             self._log(0, "restore", "no checkpoint; restarting stream")
             return 0
         with tracer.span("restore", chunk=latest):
-            state, meta = ckpt_lib.restore(
-                self.ckpt_dir, latest, self.executor.snapshot_barrier()
+            # the restore template contributes pytree structure (and numpy
+            # leaf-ness) only — values are discarded.  A live-state adapter
+            # must NOT serialize here: with a genuinely dead worker process
+            # (the distributed plane) the barrier would raise the failure
+            # again mid-recovery.  ``init_state`` has the same canonical
+            # structure and costs nothing.
+            adapter = self.executor.adapter
+            template = (
+                adapter.init_state()
+                if getattr(adapter, "has_live_state", False)
+                else self.executor.snapshot_barrier()
             )
+            state, meta = ckpt_lib.restore(self.ckpt_dir, latest, template)
             # assigning through the state setter drops any live shards; the
             # executor re-attaches them from this canonical snapshot (at the
             # post-failure degree) on the next processed chunk

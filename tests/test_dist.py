@@ -1,0 +1,241 @@
+"""Tests for the multi-process keyed state plane (`repro.dist`).
+
+Acceptance contract (ISSUE 8): ``DistributedKeyedPlane`` — every engine
+shard behind a real process boundary, driven over the wire protocol — is
+**bit-exact** against :func:`repro.core.semantics.keyed_windows` AND
+against the in-process plane across mid-stream grow/shrink at non-divisor
+degrees; a killed worker process recovers through an *unmodified*
+``Supervisor`` from the canonical snapshot (black box collected); and the
+autoscaler chooses the process count through the same ``set_degree`` path
+it uses for in-process shards.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import semantics
+from repro.dist import DistributedKeyedPlane
+from repro.keyed import KeyedWindowAdapter, WindowSpec, synthetic_keyed_items
+from repro.keyed.runtime import ROW_BYTES
+from repro.runtime import (
+    Autoscaler,
+    BoundedSource,
+    QueueDepthPolicy,
+    StreamExecutor,
+    Supervisor,
+)
+
+NUM_SLOTS = 20  # degrees 3, 6, 7 do not divide this
+CHUNK = 16
+
+
+def _triples(items):
+    return [(int(r["key"]), int(r["value"]), int(r["ts"])) for r in items]
+
+
+def _rows(d, cols=("key", "start", "end", "value", "count")):
+    return [tuple(int(x) for x in row) for row in zip(*(d[k] for k in cols))]
+
+
+def _emissions(outs, channel="emissions"):
+    return [r for o in outs for r in _rows(o[channel])]
+
+
+def _late(outs):
+    return [
+        r for o in outs for r in _rows(o["late"], ("key", "value", "ts",
+                                                   "start"))
+    ]
+
+
+def _state_rows(state):
+    return [
+        tuple(int(x) for x in r)
+        for r in zip(
+            *(np.asarray(state[k]).tolist()
+              for k in ("w_key", "w_start", "w_end", "w_value", "w_count"))
+        )
+    ]
+
+
+def _chunks(items):
+    return [items[i: i + CHUNK] for i in range(0, len(items), CHUNK)]
+
+
+# ---------------------------------------------------------------------------
+# the process-boundary plane vs the oracle AND the in-process plane
+# ---------------------------------------------------------------------------
+
+class TestDistributedPlaneBitExact:
+    def test_grow_shrink_nondivisor_degrees_bit_exact(self, tmp_path):
+        """One executor over worker *processes*, one over in-process shards,
+        same schedule with grow (2->3->7) and shrink (7->2) at degrees that
+        do NOT divide num_slots=20: emissions, early firings, late records,
+        migration row counts, barrier snapshots, and final state all match
+        each other and the serial oracle — the process boundary changes
+        transport, never semantics."""
+        spec = WindowSpec("tumbling", size=8, lateness=3, late_policy="side",
+                          early_every=2)
+        items = synthetic_keyed_items(10 * CHUNK + 9, num_keys=12,
+                                      disorder=4, seed=7)
+        schedule = {2: 3, 5: 7, 8: 2}
+
+        ref_ad = KeyedWindowAdapter(spec, num_slots=NUM_SLOTS,
+                                    backend="device_table", capacity=64)
+        ref_ex = StreamExecutor(ref_ad, degree=2, chunk_size=CHUNK)
+        ref_outs = ref_ex.run(_chunks(items), schedule=schedule)
+
+        ad = DistributedKeyedPlane(spec, num_slots=NUM_SLOTS,
+                                   backend="device_table", capacity=64,
+                                   prespawn=7,
+                                   blackbox_dir=str(tmp_path / "bb"))
+        try:
+            ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+            outs = ex.run(_chunks(items), schedule=schedule)
+
+            # bit-exact vs the in-process fused plane, chunk by chunk
+            assert len(outs) == len(ref_outs)
+            for i, (o, r) in enumerate(zip(outs, ref_outs)):
+                for ch in ("emissions", "early", "late"):
+                    for k in o[ch]:
+                        assert np.array_equal(o[ch][k], r[ch][k]), (i, ch, k)
+
+            # ... and vs the serial oracle
+            o_em, o_open, o_late, o_early = semantics.keyed_windows(
+                "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+            )
+            assert _emissions(outs) == o_em
+            assert _emissions(outs, "early") == o_early
+            assert _late(outs) == o_late
+            assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+
+            # the barrier snapshot merges shard processes into the one
+            # canonical form the in-process plane produces
+            s_ref = ref_ex.snapshot_barrier()
+            s = ex.snapshot_barrier()
+            assert set(s) == set(s_ref)
+            for k in s_ref:
+                assert np.array_equal(np.asarray(s[k]),
+                                      np.asarray(s_ref[k])), k
+
+            # migration accounting: the same rows moved, and the dist
+            # plane's bytes are real *wire* bytes — payload plus a bounded
+            # per-frame envelope (header + JSON meta), never a full restack
+            vol_ref = ref_ex.metrics.migration_volume()
+            vol = ex.metrics.migration_volume()
+            assert vol["rows"] == vol_ref["rows"] > 0
+            assert vol["slots"] == vol_ref["slots"]
+            payload = vol["rows"] * ROW_BYTES
+            assert payload <= vol["bytes"] <= payload + vol["handoffs"] * 7 * 512
+            assert ad.wire_bytes["migration"] == vol["bytes"]
+            assert ad.wire_bytes["step"] > 0
+        finally:
+            ad.close()
+
+
+# ---------------------------------------------------------------------------
+# real worker-process death -> supervisor recovery from canonical snapshot
+# ---------------------------------------------------------------------------
+
+class TestKilledWorkerRecovery:
+    def test_killed_worker_recovers_through_supervisor(self, tmp_path):
+        """A CRASH frame makes shard 1's host dump its flight recorder and
+        ``os._exit`` mid-stream — a *real* process death.  The unmodified
+        Supervisor restores survivors from the canonical snapshot, the pool
+        respawns the hole, and replay is bit-exact vs the oracle.  The dead
+        worker's black box is collected."""
+        spec = WindowSpec("tumbling", size=30, lateness=5, late_policy="side",
+                          early_every=2)
+        NCH = 6
+        items = synthetic_keyed_items(CHUNK * NCH, num_keys=7, disorder=5,
+                                      seed=3)
+        src = BoundedSource(items)
+
+        ad = DistributedKeyedPlane(spec, num_slots=10, backend="device_table",
+                                   capacity=8, max_probes=2, ttl=4,
+                                   prespawn=3,
+                                   blackbox_dir=str(tmp_path / "bb"))
+        try:
+            ex = StreamExecutor(ad, degree=3, chunk_size=CHUNK)
+            killed = {"done": False}
+
+            def chunk_fn(i):
+                if i == 3 and not killed["done"]:
+                    killed["done"] = True
+                    ad.kill_worker(1)  # real process death, mid-stream
+                src.seek(i * CHUNK)
+                return src.take(CHUNK)
+
+            sup = Supervisor(ex, chunk_fn, num_chunks=NCH,
+                             ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=2)
+            outs = sup.run()
+
+            o_em, o_open, o_late, o_early = semantics.keyed_windows(
+                "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+            )
+            ordered = [outs[i] for i in range(NCH)]
+            assert _emissions(ordered) == o_em
+            assert _emissions(ordered, "early") == o_early
+            assert _late(ordered) == o_late
+            assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+
+            kinds = [e.kind for e in sup.events]
+            assert "failure" in kinds and "restore" in kinds
+            assert "shrink" in kinds and "grow" in kinds
+            # the dead worker's flight-recorder dump was collected
+            assert ad.collected_blackboxes
+            assert os.path.exists(ad.collected_blackboxes[0])
+        finally:
+            ad.close()
+
+
+# ---------------------------------------------------------------------------
+# the autoscaler chooses the *process* count
+# ---------------------------------------------------------------------------
+
+class TestAutoscalerOverProcesses:
+    def test_autoscaler_scales_worker_processes(self, tmp_path):
+        """The QueueDepthPolicy drives ``set_degree`` on the distributed
+        plane exactly as it does in-process: a deep queue grows the number
+        of worker *processes*, a drained queue shrinks it, and the stream
+        stays bit-exact vs the oracle throughout."""
+        spec = WindowSpec("tumbling", size=12, lateness=3, late_policy="side")
+        items = synthetic_keyed_items(CHUNK * 6, num_keys=8, disorder=3,
+                                      seed=11)
+
+        ad = DistributedKeyedPlane(spec, num_slots=NUM_SLOTS, backend="host",
+                                   prespawn=4,
+                                   blackbox_dir=str(tmp_path / "bb"))
+        try:
+            ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+            sc = Autoscaler(QueueDepthPolicy(), [2, 3, 4], cooldown_chunks=0)
+
+            class _Q:
+                high_watermark, low_watermark = 8, 1
+                depth = 0
+
+            outs = []
+            chunks = _chunks(items)
+            for i, c in enumerate(chunks):
+                outs.append(ex.process(c))
+                if i == 1:
+                    _Q.depth = 99                      # pressure: scale up
+                    d = sc.maybe_scale(ex, queue=_Q())
+                    assert d is not None and d.applied
+                    assert ad._active == 3
+                if i == 3:
+                    _Q.depth = 0                       # drained: scale down
+                    d = sc.maybe_scale(ex, queue=_Q())
+                    assert d is not None and d.applied
+                    assert ad._active == 2
+                    assert d.handoff_bytes >= d.handoff_rows * ROW_BYTES
+
+            o_em, o_open, _ = semantics.keyed_windows(
+                "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+            )
+            assert _emissions(outs) == o_em
+            assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+        finally:
+            ad.close()

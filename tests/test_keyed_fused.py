@@ -184,9 +184,12 @@ class TestFusedBitExact:
             ex.set_degree(n_new)
             assert ad._batched is not None
             assert ad._batched.n_shards == n_new
-            # plane storage IS the shard tables' storage
+            # plane storage IS the shard tables' storage: both the shard
+            # views and the plane's active-prefix view slice the same
+            # over-allocated backing array
             for eng in ad.shards:
-                assert eng.table.key.base is ad._batched.key
+                assert eng.table.key.base is ad._batched._akey
+                assert np.shares_memory(eng.table.key, ad._batched.key)
             after = ex.snapshot_barrier()
             # semantic state rides the migration unchanged (placement
             # counters legitimately move: re-insertion counts as inserts)

@@ -1,0 +1,147 @@
+"""Regression tests for the incremental restack (ISSUE 8, satellite 3).
+
+``BatchedWindowTable`` used to re-stack *every* shard slab into a fresh
+``(n_w, capacity)`` plane on each resize — slab traffic proportional to
+standing state, not to the rows the resize actually moved.  The plane is
+now over-allocated with active-prefix views: survivors keep their segments
+(identity-recognized), a shrink is a re-slice, a grow clears occupancy in
+place, and only an allocation doubling copies bytes.  ``copied_bytes``
+meters exactly those copies, so these tests pin in-place resizes to ZERO
+slab traffic and compare against both ``migration_volume()`` (the wire-
+accounted row handoff) and the bytes a full restack would have moved.
+"""
+
+import numpy as np
+
+from repro.core import semantics
+from repro.keyed import KeyedWindowAdapter, WindowSpec, synthetic_keyed_items
+from repro.keyed.runtime import ROW_BYTES
+from repro.keyed.table import BatchedWindowTable, DeviceWindowTable
+from repro.runtime import StreamExecutor
+
+NUM_SLOTS = 20
+CHUNK = 16
+
+
+def _triples(items):
+    return [(int(r["key"]), int(r["value"]), int(r["ts"])) for r in items]
+
+
+def _rows(d, cols=("key", "start", "end", "value", "count")):
+    return [tuple(int(x) for x in row) for row in zip(*(d[k] for k in cols))]
+
+
+def _executor(spec, *, degree=3, **table_kw):
+    ad = KeyedWindowAdapter(
+        spec, num_slots=NUM_SLOTS, backend="device_table", fused=True,
+        **table_kw,
+    )
+    return ad, StreamExecutor(ad, degree=degree, chunk_size=CHUNK)
+
+
+def _full_restack_bytes(plane):
+    """What the old code moved on EVERY resize: every active segment of
+    every column plane (6 int64 columns + 1 bool occupancy)."""
+    return plane.n_shards * plane.capacity * (6 * 8 + 1)
+
+
+class TestInPlaceResize:
+    def test_grow_shrink_within_reserve_is_zero_copy(self):
+        """Mid-stream grow (3->5->7) and shrink (7->2) within the reserved
+        allocation: migration ships rows (metered by migration_volume), but
+        the plane slabs move ZERO bytes — resize cost is strictly
+        row-proportional, not standing-state-proportional."""
+        spec = WindowSpec("tumbling", size=64, lateness=4)
+        items = synthetic_keyed_items(CHUNK * 8, num_keys=14, disorder=2,
+                                      seed=5)
+        ad, ex = _executor(spec, capacity=64)
+        chunks = [items[i: i + CHUNK] for i in range(0, len(items), CHUNK)]
+        schedule = {2: 5, 4: 7, 6: 2}
+        for i, c in enumerate(chunks):
+            if i in schedule:
+                ex.set_degree(schedule[i])
+            ex.process(c)
+            assert ad._batched is not None
+            assert ad._batched.copied_bytes == 0
+
+        vol = ex.metrics.migration_volume()
+        assert vol["rows"] > 0                       # rows really moved
+        assert vol["bytes"] == vol["rows"] * ROW_BYTES
+        # the regression target: the old full restack would have moved the
+        # whole standing plane on every resize — orders more than the rows
+        assert ad._batched.copied_bytes == 0 < _full_restack_bytes(ad._batched)
+
+    def test_survivor_segments_share_memory_across_resizes(self):
+        """After a grow, every survivor shard's table columns are STILL
+        views into the same backing plane (no copy), and a freshly joined
+        shard's table is adopted in place — its ingest writes land directly
+        in the plane segment."""
+        spec = WindowSpec("tumbling", size=64, lateness=4)
+        items = synthetic_keyed_items(CHUNK * 3, num_keys=10, disorder=2,
+                                      seed=2)
+        ad, ex = _executor(spec, capacity=32)
+        for i in range(3):
+            ex.process(items[i * CHUNK: (i + 1) * CHUNK])
+        plane = ad._batched
+        backing = plane._akey
+        ex.set_degree(5)
+        assert ad._batched is plane                  # same plane object
+        assert plane._akey is backing                # no realloc happened
+        for w, shard in enumerate(ad.shards):
+            t = shard.table
+            assert np.shares_memory(t.key, plane._akey), w
+            assert np.shares_memory(t.occ, plane._aocc), w
+        ex.set_degree(2)                             # shrink = prefix re-slice
+        assert plane._akey is backing
+        assert plane.copied_bytes == 0
+
+    def test_fused_outputs_bit_exact_through_restacks(self):
+        """The restacked plane is not just cheap — it is still the same
+        plane: emissions through grow/shrink match the serial oracle."""
+        spec = WindowSpec("tumbling", size=8, lateness=3, late_policy="side")
+        items = synthetic_keyed_items(CHUNK * 7 + 5, num_keys=9, disorder=4,
+                                      seed=17)
+        ad, ex = _executor(spec, capacity=32, degree=2)
+        chunks = [items[i: i + CHUNK] for i in range(0, len(items), CHUNK)]
+        outs = ex.run(chunks, schedule={2: 5, 4: 3, 6: 6})
+        o_em, o_open, _ = semantics.keyed_windows(
+            "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+        assert [r for o in outs for r in _rows(o["emissions"])] == o_em
+        assert ad._batched.copied_bytes == 0
+
+
+class TestReallocAccounting:
+    def test_realloc_charges_exactly_the_active_prefix(self):
+        """Growing past the allocation is the ONE place slab bytes move —
+        and every byte is charged to ``copied_bytes``."""
+        cap = 16
+        tables = [DeviceWindowTable(cap, max_probes=4) for _ in range(2)]
+        plane = BatchedWindowTable(tables, reserve=2)
+        assert plane.copied_bytes == 0
+        # 6 int64 planes + 1 bool plane, 2 active segments each
+        want = 2 * cap * (6 * 8 + 1)
+        plane.restack(tables + [DeviceWindowTable(cap, max_probes=4)
+                                for _ in range(3)])
+        assert plane.n_shards == 5
+        assert plane.copied_bytes == want
+        # a further in-allocation shrink/grow is free again
+        before = plane.copied_bytes
+        plane.restack(plane._adopted[:3])
+        plane.restack(plane._adopted[:3] + [DeviceWindowTable(cap,
+                                                              max_probes=4)])
+        assert plane.copied_bytes == before
+
+    def test_foreign_nonempty_table_is_copied_and_charged(self):
+        """The restore path hands the plane tables it has never adopted;
+        non-empty ones must be copied in (and metered), empty ones are just
+        an occupancy clear."""
+        cap = 16
+        tables = [DeviceWindowTable(cap, max_probes=4) for _ in range(2)]
+        plane = BatchedWindowTable(tables, reserve=4)
+        foreign = DeviceWindowTable(cap, max_probes=4)
+        foreign.occ[3] = True
+        foreign.key[3] = 42
+        plane.restack(tables + [foreign])
+        assert plane.copied_bytes == cap * (6 * 8 + 1)
+        assert plane.key[2][3] == 42 and plane.occ[2][3]
