@@ -11,14 +11,22 @@ puts each shard behind a **process boundary**:
   gather, row migration, and checkpoint snapshots, because the
   ``extract_rows`` canonical sorted-row payload is the one physical row
   layout everywhere.
-* :mod:`repro.dist.shardhost` — the worker-process serve loop owning one
-  live :class:`~repro.keyed.windows.KeyedWindowEngine` shard, with a
+* :mod:`repro.dist.shm` — the zero-copy shared-memory column transport:
+  per-host ring-segment pairs carry column payloads by reference (the pipe
+  carries headers + meta and doubles as the doorbell), negotiated at HELLO
+  and degrading per frame to inline pipe encoding under ring pressure.
+* :mod:`repro.dist.shardhost` — the worker-process serve loop, a
+  shard-agnostic multiplexer owning ``shards_per_host`` live
+  :class:`~repro.keyed.windows.KeyedWindowEngine` shards, with a
   process-local flight recorder dumped as a black box on death.
 * :mod:`repro.dist.plane` — :class:`DistributedKeyedPlane`, the coordinator
   adapter: the existing executor / autoscaler / checkpoint-supervisor /
   observability stack runs unchanged on top, the autoscaler now choosing
   the **process** count and the supervisor recovering killed worker
-  processes from the canonical snapshot.
+  processes from the canonical snapshot (warm spares promote instantly
+  into a dead host's slot).  The executor's chunk pipeline overlaps the
+  next chunk's scatter with the current chunk's tail work
+  (``step_ahead`` / ``drain_ahead``).
 
 Outputs are bit-exact against both the in-process plane and the serial
 oracle :func:`repro.core.semantics.keyed_windows` — the process boundary
@@ -27,3 +35,4 @@ changes transport, never semantics (``tests/test_dist.py`` holds the line).
 
 from repro.dist import wire  # noqa: F401
 from repro.dist.plane import DistributedKeyedPlane  # noqa: F401
+from repro.dist.shm import ShmError, ShmRing, ShmTransport  # noqa: F401

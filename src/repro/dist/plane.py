@@ -5,15 +5,21 @@ The coordinator side of :mod:`repro.dist` (wire format:
 :class:`~repro.runtime.executor.PatternAdapter` lifecycle as the in-process
 :class:`~repro.keyed.runtime.KeyedWindowAdapter` — ``attach`` /
 ``step_live`` / ``resize_live`` / ``snapshot_barrier`` / ``detach`` — but
-each engine shard lives in its own :mod:`~repro.dist.shardhost` worker
-process behind a :mod:`~repro.dist.wire` pipe:
+the engine shards live in :mod:`~repro.dist.shardhost` worker processes:
 
 * ``step_live`` routes the chunk by ``hash_to_slot`` ownership exactly like
   the in-process per-shard loop, scatters one STEP frame per shard (empty
   sub-chunks included — the watermark clock is shared), gathers the
-  replies, and merges emissions / early firings / late records with the
-  SAME deterministic stream-position merge — so outputs are bit-exact
-  against both the in-process plane and the serial oracle;
+  replies as they complete (``multiprocessing.connection.wait`` — one slow
+  shard never serializes the others), and merges emissions / early firings
+  / late records with the SAME deterministic stream-position merge — so
+  outputs are bit-exact against both the in-process plane and the serial
+  oracle;
+* ``step_ahead`` overlaps scatter with the coordinator's tail work: the
+  executor's pipeline scatters chunk ``k+1`` right after chunk ``k``'s
+  output is merged, so the workers compute ``k+1`` while the coordinator
+  merges, meters, and prepares — one chunk deep, drained at every resize /
+  barrier / health read exactly like the executor's prepare pipeline;
 * ``resize_live`` is cross-process §4.2 row migration: donors EXTRACT the
   reassigned slots' canonical rows, the coordinator buckets them by the
   rebalanced ownership table and INGESTs each recipient's canonically
@@ -26,13 +32,32 @@ process behind a :mod:`~repro.dist.wire` pipe:
   :class:`~repro.runtime.supervisor.WorkerFailure` after the coordinator
   collects the dead host's flight-recorder black box — the supervisor then
   restores from the canonical checkpoint; surviving workers stay warm in
-  the pool and are re-attached in place, only the dead slot respawns.
+  the pool, and the dead slot is refilled **immediately** (a promoted warm
+  spare when ``spares > 0``, otherwise a respawn kicked off at death so
+  its import cost runs concurrently with the restore).
+
+Two transports carry the frames, chosen by ``transport=`` (default: the
+``REPRO_DIST_TRANSPORT`` env var, else ``"shm"``):
+
+* ``"pipe"`` — every frame inline over the ``multiprocessing`` pipe;
+* ``"shm"`` — column payloads ride per-host shared-memory rings
+  (:mod:`repro.dist.shm`); the pipe carries only headers + descriptors.
+  Negotiated per host at HELLO (a worker that failed to attach its rings
+  advertises no ``shm`` cap and stays on the pipe), and degraded per frame
+  when a ring is full — the pipe encoding always works.
+
+Hosts are **shard-agnostic multiplexers**: ``shards_per_host`` engine
+shards share one process (shard ``w`` lives on host ``w //
+shards_per_host``), every request frame names its shard, and replies come
+back in per-host FIFO order — so pool-index → shard-id routing semantics
+are preserved while the process count (and per-process fixed cost) drops
+at high ``n_w``.
 
 Worker processes are **pooled**: ``prespawn`` hosts are started at the
 first attach (imports pay once, concurrently), a shrink parks hosts warm
 instead of killing them, and a grow re-attaches parked hosts — so a resize
 costs row migration, not process startup, and the autoscaler can move the
-process count freely.  Every host gets its own tracer track
+process count freely.  Every shard gets its own tracer track
 (:meth:`~repro.obs.trace.Tracer.alloc_track`): STEP replies carry the
 worker-timed spans and the coordinator replays them onto the shard's
 track, giving one coherent cross-process timeline per run.
@@ -41,19 +66,21 @@ track, giving one coherent cross-process timeline per run.
 from __future__ import annotations
 
 import atexit
+import collections
 import dataclasses
 import multiprocessing
+import multiprocessing.connection
 import os
 import tempfile
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.dist import shardhost, wire
+from repro.dist.shm import ShmError, ShmRing, ShmTransport
 from repro.keyed.runtime import (
     KeyedWindowAdapter,
-    ROW_BYTES,
     _concat_sorted,
     merge_shard_snapshots,
 )
@@ -66,22 +93,32 @@ _FIRE_KEYS = ("key", "start", "end", "value", "count")
 _LATE_KEYS = ("key", "value", "ts", "start", "pos")
 
 
-class _WorkerHandle:
-    """One pooled shard-host process (pool index == shard id)."""
+def _owned(d: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Ensure every output column owns its memory.  The zero-copy shm path
+    can thread a ring *view* through a single-shard merge shortcut; outputs
+    must never alias the ring (the span is reused next epoch)."""
+    return {k: (v if v.flags.owndata else v.copy()) for k, v in d.items()}
 
-    __slots__ = ("shard", "proc", "conn", "pid", "blackbox_path",
-                 "tid", "tid_tracer", "seq", "pending")
 
-    def __init__(self, shard, proc, conn, pid, blackbox_path):
-        self.shard = shard
+class _HostHandle:
+    """One pooled shard-host process (shard-agnostic; shards are routed to
+    it by the coordinator's ``shard -> host`` map)."""
+
+    __slots__ = ("ident", "proc", "chan", "pid", "blackbox_path", "rings",
+                 "tids", "tid_tracer", "seq", "outstanding", "hello_done")
+
+    def __init__(self, ident, proc, chan, blackbox_path, rings):
+        self.ident = ident                  # spawn ordinal (label only)
         self.proc = proc
-        self.conn = conn
-        self.pid = pid
+        self.chan: ShmTransport = chan
+        self.pid: Optional[int] = None
         self.blackbox_path = blackbox_path
-        self.tid: Optional[int] = None      # tracer track id
-        self.tid_tracer: Any = None         # tracer the tid belongs to
+        self.rings: Optional[Tuple[ShmRing, ShmRing]] = rings  # (c2w, w2c)
+        self.tids: Dict[int, int] = {}      # shard -> tracer track id
+        self.tid_tracer: Any = None         # tracer the tids belong to
         self.seq = 0                        # request sequence (epoch hygiene)
-        self.pending = 0                    # seq of the awaited reply
+        self.outstanding: Deque[int] = collections.deque()  # awaited seqs
+        self.hello_done = False
 
 
 class DistributedKeyedPlane(KeyedWindowAdapter):
@@ -95,8 +132,13 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
     :class:`~repro.keyed.runtime.KeyedWindowAdapter` — only the live
     lifecycle crosses the process boundary.
 
-    ``prespawn`` pre-starts that many hosts at the first attach so later
-    grows re-attach warm processes instead of paying process startup;
+    ``transport`` selects ``"shm"`` (shared-memory column payloads,
+    same-host only) or ``"pipe"`` (inline frames; also the automatic
+    fallback).  ``shards_per_host`` multiplexes that many engine shards
+    onto each worker process.  ``spares`` keeps that many warm spare hosts
+    on standby: a worker death promotes a spare into the hole instantly,
+    so failover re-attach never pays process startup.  ``prespawn``
+    pre-starts enough hosts for that many shards at the first attach;
     ``start_method`` picks the multiprocessing context (default ``spawn``
     — safe after the parent initialized JAX; ``fork`` starts faster).
     """
@@ -106,7 +148,11 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
                  capacity: int = 1024, ttl: int | None = None,
                  max_probes: int = 16, prespawn: Optional[int] = None,
                  start_method: str = "spawn",
-                 blackbox_dir: Optional[str] = None):
+                 blackbox_dir: Optional[str] = None,
+                 transport: Optional[str] = None,
+                 shards_per_host: int = 1,
+                 spares: int = 0,
+                 shm_capacity: int = 4 << 20):
         super().__init__(
             spec, num_slots=num_slots, impl=impl, backend=backend,
             capacity=capacity, ttl=ttl, max_probes=max_probes,
@@ -117,95 +163,161 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         self.blackbox_dir = blackbox_dir or os.path.join(
             tempfile.gettempdir(), f"repro-dist-{os.getpid()}"
         )
+        self.transport = (
+            transport or os.environ.get("REPRO_DIST_TRANSPORT", "shm")
+        )
+        if self.transport not in ("pipe", "shm"):
+            raise ValueError(f"unknown transport {self.transport!r}")
+        self.shards_per_host = max(1, int(shards_per_host))
+        self.spares = max(0, int(spares))
+        self.shm_capacity = int(shm_capacity)
         self._ctx = multiprocessing.get_context(start_method)
-        self._pool: List[_WorkerHandle] = []
-        self._active = 0                      # hosts currently owning a shard
+        self._pool: List[Optional[_HostHandle]] = []
+        self._spares: List[_HostHandle] = []
+        self._spawned = 0                     # spawn ordinal counter
+        self._active = 0                      # shards currently attached
+        self._ahead: Optional[Tuple[Any, int, Optional[int]]] = None
         self._tally: List[int] = []           # mirrored §4.2 work tallies
         self._wm: Optional[int] = None        # mirrored shared watermark clock
         self._max_ts: Optional[int] = None
         self._wm_ticks = 0
         self.collected_blackboxes: List[str] = []
-        #: cumulative wire traffic by frame family (benchmark/report fodder)
+        #: cumulative wire traffic by frame family, plus the transport
+        #: split: ``piped`` (bytes through the pipes, headers + inline and
+        #: fallback payloads) vs ``shm`` (payload bytes through the rings)
         self.wire_bytes: Dict[str, int] = {
             "attach": 0, "step": 0, "migration": 0, "snapshot": 0,
+            "piped": 0, "shm": 0,
         }
         self._closed = False
         atexit.register(self.close)
 
+    # -- shard -> host routing -------------------------------------------------
+    def _hosts_for(self, n_shards: int) -> int:
+        return -(-n_shards // self.shards_per_host)
+
+    def _host(self, shard: int) -> _HostHandle:
+        return self._pool[shard // self.shards_per_host]
+
     # -- process pool ----------------------------------------------------------
-    def _spawn(self, shard: int) -> _WorkerHandle:
+    def _spawn(self) -> _HostHandle:
         parent, child = self._ctx.Pipe()
+        ident = self._spawned
+        self._spawned += 1
+        rings = None
+        if self.transport == "shm":
+            try:
+                rings = (ShmRing.create(self.shm_capacity),
+                         ShmRing.create(self.shm_capacity))
+            except Exception:
+                rings = None  # no /dev/shm: every frame takes the pipe
         cfg = {
-            "shard": shard,
+            "host": ident,
             "spec": dataclasses.asdict(self.spec),
             "engine_kwargs": self._engine_kwargs(),
             "blackbox_path": os.path.join(
-                self.blackbox_dir, f"shard{shard}.json"
+                self.blackbox_dir, f"host{ident}.json"
             ),
         }
+        if rings is not None:
+            cfg["shm_c2w"] = rings[0].name
+            cfg["shm_w2c"] = rings[1].name
         proc = self._ctx.Process(
             target=shardhost.serve, args=(child, cfg), daemon=True,
-            name=f"shardhost-{shard}",
+            name=f"shardhost-{ident}",
         )
         proc.start()
         child.close()  # parent keeps one end only, so EOF means death
-        return _WorkerHandle(shard, proc, parent, None, cfg["blackbox_path"])
+        return _HostHandle(ident, proc, ShmTransport(parent),
+                           cfg["blackbox_path"], rings)
 
-    def _ensure_pool(self, k: int) -> None:
-        """Fill pool slots ``0..k-1`` with live hosts (pool index == shard
-        id; a dead host leaves a ``None`` hole that respawns here).  All
-        missing processes start before any handshake wait, so their
-        interpreter/JAX imports run concurrently and a k-host pool pays
-        ~one import latency."""
-        while len(self._pool) < k:
-            self._pool.append(None)
-        fresh = []
-        for w in range(k):
-            if self._pool[w] is None:
-                self._pool[w] = self._spawn(w)
-                fresh.append(self._pool[w])
-        for h in fresh:
+    def _wait_hello(self, handles: Sequence[_HostHandle]) -> None:
+        """Complete the handshake: learn each host's pid and negotiated
+        capabilities, then swap its channel onto the rings if the worker
+        attached them (HELLO ``caps`` carries the worker's side)."""
+        for h in handles:
+            if h.hello_done:
+                continue
             ftype, meta, _ = self._recv(h)
             if ftype != wire.HELLO:
                 raise WorkerFailure(
-                    f"shard host {h.shard}: bad handshake frame {ftype}"
+                    f"shard host {h.ident}: bad handshake frame {ftype}"
                 )
             h.pid = int(meta["pid"])
+            h.hello_done = True
+            caps = meta.get("caps") or []
+            if h.rings is not None and "shm" in caps:
+                conn = h.chan.conn
+                # coordinator writes c2w, reads w2c; STEP_OUT is the hot
+                # gather frame — mapped zero-copy, the merge re-owns it
+                h.chan = ShmTransport(
+                    conn, send_ring=h.rings[0], recv_ring=h.rings[1],
+                    zero_copy=(wire.STEP_OUT,),
+                )
+            elif h.rings is not None:
+                for ring in h.rings:
+                    ring.close()
+                h.rings = None
 
-    def _track(self, h: _WorkerHandle) -> int:
-        """The host's tracer track (allocated lazily; re-allocated when the
-        executor re-points the adapter tracer or the host respawned)."""
-        if h.tid is None or h.tid_tracer is not self.tracer:
-            h.tid = self.tracer.alloc_track(
-                f"shard{h.shard}/pid{h.pid}"
-            )
+    def _ensure_pool(self, k: int) -> None:
+        """Fill pool slots ``0..k-1`` with live hosts.  Holes are filled by
+        promoting warm spares first (instant), then by spawning.  All
+        missing processes start before any handshake wait, so their
+        interpreter/JAX imports run concurrently and a k-host pool pays
+        ~one import latency.  The spare pool is topped up here too (spawn
+        only — their handshakes are awaited at promotion)."""
+        while len(self._pool) < k:
+            self._pool.append(None)
+        for i in range(k):
+            if self._pool[i] is None and self._spares:
+                self._pool[i] = self._spares.pop()
+        for i in range(k):
+            if self._pool[i] is None:
+                self._pool[i] = self._spawn()
+        while len(self._spares) < self.spares:
+            self._spares.append(self._spawn())
+        self._wait_hello(self._pool[:k])
+
+    def _track(self, h: _HostHandle, shard: int) -> int:
+        """The shard's tracer track (allocated lazily; re-allocated when
+        the executor re-points the adapter tracer or the host changed)."""
+        if h.tid_tracer is not self.tracer:
+            h.tids = {}
             h.tid_tracer = self.tracer
-        return h.tid
+        tid = h.tids.get(shard)
+        if tid is None:
+            tid = self.tracer.alloc_track(f"shard{shard}/pid{h.pid}")
+            h.tids[shard] = tid
+        return tid
 
-    def _replay_spans(self, h: _WorkerHandle, spans) -> None:
+    def _replay_spans(self, h: _HostHandle, shard: int, spans) -> None:
         if not spans:
             return
-        tid = self._track(h)
+        tid = self._track(h, shard)
         for name, t0, t1, args in spans:
             self.tracer.record_span(name, t0, t1, tid=tid, **(args or {}))
 
     # -- fallible transport ----------------------------------------------------
-    def _send(self, h: _WorkerHandle, ftype, meta=None, cols=None) -> int:
-        """Ship one request, stamped with the handle's next sequence number
-        (the worker echoes it in the reply — see :meth:`_reply`)."""
+    def _send(self, h: _HostHandle, ftype, meta=None, cols=None) -> int:
+        """Ship one request, stamped with the host's next sequence number
+        (the worker echoes it in the reply — see :meth:`_reply`); returns
+        total bytes (piped + shm) for the frame-family accounting."""
         h.seq += 1
-        h.pending = h.seq
         m = dict(meta) if meta else {}
         m["seq"] = h.seq
         try:
-            return wire.send(h.conn, ftype, m, cols)
+            piped, shm_b = h.chan.send(ftype, m, cols)
         except (BrokenPipeError, OSError) as e:
             self._on_death(h, repr(e))
+        h.outstanding.append(h.seq)
+        self.wire_bytes["piped"] += piped
+        self.wire_bytes["shm"] += shm_b
+        return piped + shm_b
 
-    def _recv(self, h: _WorkerHandle):
+    def _recv(self, h: _HostHandle):
         try:
-            ftype, meta, cols = wire.recv(h.conn)
-        except (EOFError, OSError) as e:
+            ftype, meta, cols = h.chan.recv()
+        except (EOFError, OSError, ShmError, wire.WireError) as e:
             self._on_death(h, repr(e))
         if ftype == wire.ERR:
             # the host reported the error and then died: same failure path,
@@ -214,12 +326,13 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
                            detail=meta.get("traceback", ""))
         return ftype, meta, cols
 
-    def _on_death(self, h: _WorkerHandle, err: str, detail: str = ""):
-        """A shard host died: collect its black box, reap the process, and
+    def _on_death(self, h: _HostHandle, err: str, detail: str = ""):
+        """A shard host died: collect its black box, reap the process,
+        refill its pool slot immediately (warm spare if available, else a
+        fresh spawn whose import runs concurrently with the restore), and
         surface the §4 worker-failure the supervisor knows how to drive —
-        restore survivors + respawn the dead slot from the canonical
-        checkpoint."""
-        shard, pid = h.shard, h.pid
+        restore survivors + re-attach from the canonical checkpoint."""
+        ident, pid = h.ident, h.pid
         # give the dying process a moment to finish its black-box dump
         deadline = time.monotonic() + 2.0
         while h.proc.is_alive() and time.monotonic() < deadline:
@@ -228,62 +341,92 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         if h.blackbox_path and os.path.exists(h.blackbox_path):
             blackbox = h.blackbox_path
             self.collected_blackboxes.append(blackbox)
-        try:
-            h.conn.close()
-        except OSError:
-            pass
+        h.chan.close()  # closes the pipe and unlinks this host's rings
         if h.proc.is_alive():
             h.proc.kill()
         h.proc.join(timeout=5)
-        # leave a hole at the dead host's slot (pool index == shard id is
-        # baked into the worker processes); the next attach respawns it
+        if h in self._spares:
+            self._spares.remove(h)
         if h in self._pool:
-            self._pool[self._pool.index(h)] = None
-        self._active = 0  # live state is gone: force re-attach after restore
+            slot = self._pool.index(h)
+            # refill the hole now: promotion is instant, a spawn's import
+            # overlaps the checkpoint restore that must follow anyway
+            if self._spares:
+                self._pool[slot] = self._spares.pop()
+            elif not self._closed:
+                self._pool[slot] = self._spawn()
+            else:
+                self._pool[slot] = None
+        self._active = 0   # live state is gone: force re-attach after restore
+        self._ahead = None  # the overlapped epoch died with the fleet
         self.tracer.instant(
-            "worker_death", shard=shard, pid=pid, error=err,
+            "worker_death", host=ident, pid=pid, error=err,
             blackbox=blackbox or "",
         )
-        msg = f"shard host {shard} (pid {pid}) died: {err}"
+        msg = f"shard host {ident} (pid {pid}) died: {err}"
         if blackbox:
             msg += f" [black box: {blackbox}]"
         raise WorkerFailure(msg + ("\n" + detail if detail else ""))
 
-    def _reply(self, h: _WorkerHandle):
-        """Receive the reply to the handle's pending request, discarding
-        stale frames from an epoch a worker failure interrupted (a crash
-        mid-scatter leaves already-scattered peers' replies in their pipes;
-        the echoed sequence number identifies and drops them)."""
+    def _reply(self, h: _HostHandle):
+        """Receive the oldest outstanding reply, discarding stale frames
+        from an epoch a worker failure interrupted (a crash mid-scatter
+        leaves already-scattered peers' replies in their pipes; the echoed
+        sequence number identifies and drops them)."""
+        expect = h.outstanding[0] if h.outstanding else None
         while True:
             ftype, meta, cols = self._recv(h)
-            if meta.get("seq") == h.pending:
+            if expect is None or meta.get("seq") == expect:
+                if h.outstanding:
+                    h.outstanding.popleft()
                 return ftype, meta, cols
 
-    def _gather(self, handles: Sequence[_WorkerHandle], expect: int):
-        """Receive one reply per handle.  A failure mid-gather still drains
-        the surviving handles' replies before raising, so no pipe is left
-        holding a frame the next epoch would misread."""
-        replies, failure = [], None
-        for h in handles:
-            try:
-                ftype, meta, cols = self._reply(h)
+    def _gather(self, handles: Sequence[_HostHandle], expect: int):
+        """Receive one reply per entry of ``handles`` (repeats allowed —
+        one per outstanding request on that host), in **completion order**
+        across hosts via ``connection.wait`` and FIFO order within each
+        host.  Returns replies aligned with ``handles``.  A failure
+        mid-gather still drains the surviving hosts' replies before
+        raising, so no pipe is left holding a frame the next epoch would
+        misread."""
+        slots: List[Any] = [None] * len(handles)
+        want: Dict[_HostHandle, Deque[int]] = {}
+        for i, h in enumerate(handles):
+            want.setdefault(h, collections.deque()).append(i)
+        failure: Optional[WorkerFailure] = None
+        while want:
+            by_conn = {h.chan.conn: h for h in want}
+            ready = multiprocessing.connection.wait(list(by_conn))
+            for conn in ready:
+                h = by_conn[conn]
+                if h not in want:
+                    continue
+                try:
+                    ftype, meta, cols = self._reply(h)
+                except WorkerFailure as e:
+                    if failure is None:
+                        failure = e
+                    want.pop(h, None)
+                    continue
                 if ftype != expect:
-                    raise WorkerFailure(
-                        f"shard host {h.shard}: expected frame {expect}, "
-                        f"got {ftype}"
-                    )
-                replies.append((meta, cols))
-            except WorkerFailure as e:
-                if failure is None:
-                    failure = e
+                    if failure is None:
+                        failure = WorkerFailure(
+                            f"shard host {h.ident}: expected frame "
+                            f"{expect}, got {ftype}"
+                        )
+                    want.pop(h, None)
+                    continue
+                slots[want[h].popleft()] = (meta, cols)
+                if not want[h]:
+                    want.pop(h)
         if failure is not None:
             raise failure
-        return replies
+        return slots
 
     # -- live-state lifecycle --------------------------------------------------
     def attach(self, state, n_w: int) -> None:
-        """Hydrate ``n_w`` shard hosts from the canonical snapshot: each
-        host receives ONLY the rows of its owned slots (the coordinator
+        """Hydrate ``n_w`` engine shards from the canonical snapshot: each
+        shard receives ONLY the rows of its owned slots (the coordinator
         applies the owned-slot filter before serializing), plus the shared
         clock and its share of the §4.2 tallies — the same degree-alignment
         fold the in-process attach performs."""
@@ -295,7 +438,13 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
             new_sm, _ = sm.rebalance(n_w)
             items = fold_worker_items(items, sm.table, new_sm.table, n_w)
             sm = new_sm
-        self._ensure_pool(max(n_w, self.prespawn or 0))
+        self._ahead = None
+        self._ensure_pool(
+            max(self._hosts_for(n_w), self._hosts_for(self.prespawn or 0))
+        )
+        for h in self._pool:
+            if h is not None:
+                h.outstanding.clear()  # stale epochs died with the old state
         keys = np.asarray(state["w_key"], np.int64)
         row_owner = (
             np.asarray(sm.table, np.int64)[
@@ -309,12 +458,12 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         }
         with self.tracer.span("dist_attach", n_w=n_w):
             for w in range(n_w):
-                h = self._pool[w]
                 mask = row_owner == w
                 tally = np.zeros(n_w, np.int64)
                 tally[w] = int(items[w]) if w < len(items) else 0
                 meta = dict(
                     scalars,
+                    shard=w,
                     n_workers=n_w,
                     late_count=int(state["late_count"]) if w == 0 else 0,
                     t_inserted=int(state["t_inserted"]) if w == 0 else 0,
@@ -329,9 +478,9 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
                 ):
                     cols[k] = np.asarray(state[k], np.int64)[mask]
                 self.wire_bytes["attach"] += self._send(
-                    h, wire.ATTACH, meta, cols
+                    self._host(w), wire.ATTACH, meta, cols
                 )
-            self._gather(self._pool[:n_w], wire.OK)
+            self._gather([self._host(w) for w in range(n_w)], wire.OK)
         self._slot_map = sm
         self._active = n_w
         self._tally = [
@@ -345,13 +494,14 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         """Drop live shards but keep the hosts warm: the next attach
         re-hydrates the same processes (import cost is paid once per pool,
         not once per restore)."""
-        live = [h for h in self._pool[: self._active] if h is not None]
-        self._active = 0
+        self.drain_ahead()
+        n_w, self._active = self._active, 0
         self._slot_map = None
         sent = []
-        for h in live:
+        for w in range(n_w):
+            h = self._host(w)
             try:
-                self._send(h, wire.DETACH)
+                self._send(h, wire.DETACH, {"shard": w})
                 sent.append(h)
             except WorkerFailure:
                 continue
@@ -362,14 +512,14 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
                 continue
 
     def close(self) -> None:
-        """Shut the pool down (idempotent; also runs atexit)."""
+        """Shut the pool (and spares) down (idempotent; also runs atexit)."""
         if self._closed:
             return
         self._closed = True
-        hosts = [h for h in self._pool if h is not None]
+        hosts = [h for h in self._pool if h is not None] + self._spares
         for h in hosts:
             try:
-                wire.send(h.conn, wire.SHUTDOWN)
+                wire.send(h.chan.conn, wire.SHUTDOWN)
             except (BrokenPipeError, OSError):
                 pass
         for h in hosts:
@@ -377,11 +527,9 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
             if h.proc.is_alive():
                 h.proc.kill()
                 h.proc.join(timeout=5)
-            try:
-                h.conn.close()
-            except OSError:
-                pass
+            h.chan.close()
         self._pool = []
+        self._spares = []
         self._active = 0
 
     def __enter__(self) -> "DistributedKeyedPlane":
@@ -403,11 +551,9 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
             "wm_ts": int(ts.max()) if len(ts) else None,
         }
 
-    def step_live(self, chunk, prepared=None) -> Dict[str, Dict[str, np.ndarray]]:
-        """Scatter routed sub-chunks, gather per-shard outputs, and merge
-        them into the serial oracle's deterministic order — the per-shard
-        loop of the in-process plane with pipes between route and engine."""
-        prep = prepared if prepared is not None else self.prepare_chunk(chunk)
+    def _scatter_step(self, prep) -> Tuple[int, Optional[int]]:
+        """Scatter one routed STEP frame per shard; returns the epoch's
+        ``(n_w, wm_ts)`` for the matching :meth:`_finish_step`."""
         keys, values, ts = prep["keys"], prep["values"], prep["ts"]
         wm_ts = prep["wm_ts"]
         n_w = self._active
@@ -422,22 +568,29 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
             for w in range(n_w):
                 sel = np.flatnonzero(owners == w)
                 self.wire_bytes["step"] += self._send(
-                    self._pool[w], wire.STEP, {"wm_ts": wm_ts},
+                    self._host(w), wire.STEP, {"wm_ts": wm_ts, "shard": w},
                     {"key": keys[sel], "value": values[sel],
                      "ts": ts[sel], "pos": sel},
                 )
+        return n_w, wm_ts
+
+    def _finish_step(self, n_w: int, wm_ts: Optional[int]):
+        """Gather one scattered epoch's STEP_OUT replies and merge them
+        into the serial oracle's deterministic order."""
         with self.tracer.span("gather", n_shards=n_w):
-            replies = self._gather(self._pool[:n_w], wire.STEP_OUT)
+            replies = self._gather(
+                [self._host(w) for w in range(n_w)], wire.STEP_OUT
+            )
         em_parts, early_parts, late_parts = [], [], []
         for w, (meta, cols) in enumerate(replies):
-            self._replay_spans(self._pool[w], meta.get("spans"))
+            self._replay_spans(self._host(w), w, meta.get("spans"))
             self._tally[w] = int(meta["tally"])
             em_parts.append({k: cols[f"em_{k}"] for k in _FIRE_KEYS})
             early_parts.append({k: cols[f"ey_{k}"] for k in _FIRE_KEYS})
             late_parts.append({k: cols[f"lt_{k}"] for k in _LATE_KEYS})
         with self.tracer.span("merge"):
-            emissions = _concat_sorted(em_parts, _FIRE_KEYS)
-            early = _concat_sorted(early_parts, _FIRE_KEYS)
+            emissions = _owned(_concat_sorted(em_parts, _FIRE_KEYS))
+            early = _owned(_concat_sorted(early_parts, _FIRE_KEYS))
             late_cols = {
                 k: np.concatenate([p[k] for p in late_parts])
                 for k in _LATE_KEYS
@@ -455,18 +608,70 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
             self._wm_ticks += 1
         return {"emissions": emissions, "late": late, "early": early}
 
+    def step_live(self, chunk, prepared=None) -> Dict[str, Dict[str, np.ndarray]]:
+        """Scatter routed sub-chunks, gather per-shard outputs, and merge
+        them into the serial oracle's deterministic order — the per-shard
+        loop of the in-process plane with transport between route and
+        engine.  If ``chunk`` was already scattered by :meth:`step_ahead`,
+        only the gather half runs here."""
+        if self._ahead is not None:
+            ahead_chunk, n_w, wm_ts = self._ahead
+            self._ahead = None
+            out = self._finish_step(n_w, wm_ts)
+            if ahead_chunk is chunk:
+                return out
+            # a different chunk than the one scattered ahead (defensive:
+            # the executor never does this) — the stale epoch's state
+            # update stands, its output is dropped, and the requested
+            # chunk runs a full epoch
+        prep = prepared if prepared is not None else self.prepare_chunk(chunk)
+        n_w, wm_ts = self._scatter_step(prep)
+        return self._finish_step(n_w, wm_ts)
+
+    def step_ahead(self, chunk, prepared=None) -> bool:
+        """Overlap hook: scatter ``chunk`` now, gather at the next
+        :meth:`step_live` — the workers compute while the coordinator does
+        its post-merge tail work (metrics, prepare, scheduling).  One
+        epoch deep; no-op (returns False) if not attached or an epoch is
+        already in flight."""
+        if not self._active or self._ahead is not None:
+            return False
+        prep = prepared if prepared is not None else self.prepare_chunk(chunk)
+        n_w, wm_ts = self._scatter_step(prep)
+        self._ahead = (chunk, n_w, wm_ts)
+        return True
+
+    def drain_ahead(self) -> None:
+        """Complete (and discard the output of) a scattered-ahead epoch.
+        Every state-observing entry point drains first — resize, barrier,
+        health export, detach — so the overlap is invisible to them.  The
+        state update stands; only the emission dict is dropped (the
+        executor retrieves it via :meth:`step_live` in the normal flow —
+        a drain only fires when the stream is being abandoned or barriered
+        between the scatter and its step)."""
+        if self._ahead is None:
+            return
+        _, n_w, wm_ts = self._ahead
+        self._ahead = None
+        if not self._active:
+            return  # the fleet died with the epoch in flight
+        self._finish_step(n_w, wm_ts)
+
     def snapshot_barrier(self) -> Dict[str, np.ndarray]:
-        """Gather per-host SNAPSHOT frames and merge them into THE
+        """Gather per-shard SNAPSHOT frames and merge them into THE
         canonical snapshot — the identical merge the in-process plane
         performs, so the two planes serialize identically."""
+        self.drain_ahead()
         n_w = self._active
         with self.tracer.span("dist_barrier", n_shards=n_w):
             for w in range(n_w):
-                self._send(self._pool[w], wire.SNAPSHOT_REQ)
-            replies = self._gather(self._pool[:n_w], wire.SNAPSHOT)
+                self._send(self._host(w), wire.SNAPSHOT_REQ, {"shard": w})
+            replies = self._gather(
+                [self._host(w) for w in range(n_w)], wire.SNAPSHOT
+            )
             snaps = []
             for w, (meta, cols) in enumerate(replies):
-                self._replay_spans(self._pool[w], meta.pop("spans", None))
+                self._replay_spans(self._host(w), w, meta.pop("spans", None))
                 self.wire_bytes["snapshot"] += sum(
                     c.nbytes for c in cols.values()
                 )
@@ -483,14 +688,15 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         each.  Handoff cost is proportional to moved rows — process startup
         is amortized by the warm pool, never paid here unless the pool is
         genuinely too small."""
+        self.drain_ahead()
         sm_old = self._slot_map
         sm_new, moved = sm_old.rebalance(n_new)
         old_owner = np.asarray(sm_old.table, np.int64)
         new_owner = np.asarray(sm_new.table, np.int64)
         wire_bytes = 0
-        # grow: warm (or fresh) hosts join with the shared clock, no rows
+        # grow: warm (or fresh) shards join with the shared clock, no rows
         if n_new > n_old:
-            self._ensure_pool(n_new)
+            self._ensure_pool(self._hosts_for(n_new))
             z = np.zeros(0, np.int64)
             meta = {
                 "n_workers": n_new,
@@ -514,9 +720,11 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
                     )
                 })
                 self.wire_bytes["attach"] += self._send(
-                    self._pool[w], wire.ATTACH, meta, cols
+                    self._host(w), wire.ATTACH, dict(meta, shard=w), cols
                 )
-            self._gather(self._pool[n_old:n_new], wire.OK)
+            self._gather(
+                [self._host(w) for w in range(n_old, n_new)], wire.OK
+            )
         # donor side: one EXTRACT per donor of moved slots, gathered rows
         # bucketed by the NEW ownership of each row's key
         donors = [
@@ -524,13 +732,14 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         ] if len(moved) else []
         for d in donors:
             self._send(
-                self._pool[d], wire.EXTRACT,
-                None, {"slots": moved[old_owner[moved] == d]},
+                self._host(d), wire.EXTRACT,
+                {"shard": d}, {"slots": moved[old_owner[moved] == d]},
             )
         rows_moved = 0
         per_recipient: Dict[int, List[Tuple[np.ndarray, ...]]] = {}
         for d, (meta, cols) in zip(
-            donors, self._gather([self._pool[d] for d in donors], wire.ROWS)
+            donors,
+            self._gather([self._host(d) for d in donors], wire.ROWS),
         ):
             rows = wire.cols_to_rows(cols)
             if not len(rows[0]):
@@ -552,13 +761,13 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
             cat = [np.concatenate([p[i] for p in parts]) for i in range(7)]
             order = np.lexsort((cat[2], cat[1], cat[0]))
             wire_bytes += self._send(
-                self._pool[r], wire.INGEST,
-                None,
+                self._host(r), wire.INGEST,
+                {"shard": r},
                 wire.rows_to_cols(tuple(c[order] for c in cat)),
             )
-        self._gather([self._pool[r] for r in recipients], wire.OK)
-        # departing hosts: fold their stream-global counters into shard 0,
-        # then park them warm (a later grow re-attaches, never respawns)
+        self._gather([self._host(r) for r in recipients], wire.OK)
+        # departing shards: fold their stream-global counters into shard 0,
+        # then drop their engines (hosts stay warm for a later grow)
         folded = fold_worker_items(
             np.asarray(self._tally[:n_old], np.int64),
             old_owner, new_owner, n_new,
@@ -566,29 +775,32 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         adds = {"late_add": 0, "inserted_add": 0, "hits_add": 0,
                 "spilled_add": 0, "evicted_add": 0}
         if n_new < n_old:
-            departing = self._pool[n_new:n_old]
-            for h in departing:
-                self._send(h, wire.HEALTH_REQ)
-            for meta, _ in self._gather(departing, wire.HEALTH):
+            departing = list(range(n_new, n_old))
+            for w in departing:
+                self._send(self._host(w), wire.HEALTH_REQ, {"shard": w})
+            for meta, _ in self._gather(
+                [self._host(w) for w in departing], wire.HEALTH
+            ):
                 c = meta["counters"]
                 adds["late_add"] += c["late_count"]
                 adds["inserted_add"] += c["inserted"]
                 adds["hits_add"] += c["hits"]
                 adds["spilled_add"] += c["spilled"]
                 adds["evicted_add"] += c["evicted"]
-            for h in departing:
-                self._send(h, wire.DETACH)
-            self._gather(departing, wire.OK)
+            for w in departing:
+                self._send(self._host(w), wire.DETACH, {"shard": w})
+            self._gather([self._host(w) for w in departing], wire.OK)
         # new ownership epoch on every surviving shard (shard 0 absorbs the
         # departing counters exactly like the in-process fold)
         for w in range(n_new):
-            meta = {"n_new": n_new, "tally": int(folded[w])}
+            meta = {"shard": w, "n_new": n_new, "tally": int(folded[w])}
             if w == 0:
                 meta.update(adds)
             self._send(
-                self._pool[w], wire.APPLY, meta, {"slot_table": sm_new.table}
+                self._host(w), wire.APPLY, meta,
+                {"slot_table": sm_new.table},
             )
-        self._gather(self._pool[:n_new], wire.OK)
+        self._gather([self._host(w) for w in range(n_new)], wire.OK)
         self._slot_map = sm_new
         self._active = n_new
         self._tally = [int(v) for v in folded]
@@ -607,13 +819,16 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
     def export_health(self, registry) -> None:
         """Publish the distributed plane's health gauges (same names as the
         in-process plane, values fetched over HEALTH frames)."""
+        self.drain_ahead()
         n_w = self._active
         if not n_w:
             return
         registry.gauge("keyed.plane.n_shards").set(n_w)
         for w in range(n_w):
-            self._send(self._pool[w], wire.HEALTH_REQ)
-        replies = self._gather(self._pool[:n_w], wire.HEALTH)
+            self._send(self._host(w), wire.HEALTH_REQ, {"shard": w})
+        replies = self._gather(
+            [self._host(w) for w in range(n_w)], wire.HEALTH
+        )
         totals = {"inserted": 0, "hits": 0, "spilled": 0, "evicted": 0}
         late_total = 0
         total_resident = 0
@@ -651,8 +866,8 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         """Failure drill: make shard ``shard``'s host die exactly like a
         real fault (black-box dump, then hard exit).  The NEXT frame sent
         to it — or the next gather — surfaces the ``WorkerFailure``."""
-        h = self._pool[shard]
+        h = self._host(shard)
         try:
-            wire.send(h.conn, wire.CRASH)
+            wire.send(h.chan.conn, wire.CRASH)
         except (BrokenPipeError, OSError):
             pass

@@ -1,21 +1,34 @@
-"""ShardHost: one worker process owning one live keyed engine shard.
+"""ShardHost: one worker process owning one or more live keyed engine shards.
 
 The serve loop is a strict request/reply automaton over
-:mod:`repro.dist.wire` frames on a ``multiprocessing`` pipe: the
-coordinator (:class:`repro.dist.plane.DistributedKeyedPlane`) scatters
-ATTACH / STEP / EXTRACT / INGEST / APPLY / SNAPSHOT_REQ frames and the host
-answers each with exactly one reply frame.  The engine inside is the same
-:class:`~repro.keyed.windows.KeyedWindowEngine` the in-process plane runs —
-the process boundary changes transport, never semantics.
+:mod:`repro.dist.wire` frames: the coordinator
+(:class:`repro.dist.plane.DistributedKeyedPlane`) scatters ATTACH / STEP /
+EXTRACT / INGEST / APPLY / SNAPSHOT_REQ frames and the host answers each
+with exactly one reply frame, in request order.  The engines inside are the
+same :class:`~repro.keyed.windows.KeyedWindowEngine` the in-process plane
+runs — the process boundary changes transport, never semantics.
+
+A host is **shard-agnostic**: every request's meta names the shard it
+addresses, and the host keeps a ``shard id -> engine`` map, so the
+coordinator can multiplex several shards onto one process
+(``shards_per_host``) and promote a warm spare host into any dead host's
+place — process identity and shard identity are fully decoupled.
+
+Frames arrive over a ``multiprocessing`` pipe; when the coordinator
+provisioned shared-memory rings for this host (``repro.dist.shm``) and the
+child attached them successfully (advertised via the HELLO ``caps`` list),
+column payloads ride the rings instead — STEP payloads are mapped
+zero-copy (the engine provably does not retain its input columns), every
+other frame type is copied on map.
 
 Every STEP reply carries the spans the host timed around its engine work,
 stamped with ``time.perf_counter`` (``CLOCK_MONOTONIC`` — one coherent
 timeline across processes on the same Linux host); the coordinator replays
-them onto a dedicated tracer track per shard process.  The host also feeds
-its own process-local :class:`~repro.obs.trace.FlightRecorder`, and dumps
-it as a Chrome-trace black box before dying on any error (including the
-CRASH failure-drill frame) — the coordinator collects the dump file when it
-sees the pipe close.
+them onto a dedicated tracer track per shard.  The host also feeds its own
+process-local :class:`~repro.obs.trace.FlightRecorder`, and dumps it as a
+Chrome-trace black box before dying on any error (including the CRASH
+failure-drill frame) — the coordinator collects the dump file when it sees
+the pipe close.
 
 Workers are spawn-safe: :func:`serve` is a plain module-level entry point
 taking only picklable arguments, and engine construction happens inside the
@@ -33,20 +46,21 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.dist import wire
+from repro.dist.shm import ShmRing, ShmTransport
 from repro.keyed.windows import KeyedWindowEngine, WindowSpec
 from repro.obs.trace import FlightRecorder, Tracer
 
 
 class _Host:
-    """Per-process state: the engine shard plus identity/instrumentation."""
+    """Per-process state: the engine shards plus identity/instrumentation."""
 
-    def __init__(self, conn, cfg: Dict[str, Any]):
-        self.conn = conn
-        self.shard = int(cfg["shard"])
+    def __init__(self, chan: ShmTransport, cfg: Dict[str, Any]):
+        self.chan = chan
+        self.host = int(cfg.get("host", 0))
         self.blackbox_path: Optional[str] = cfg.get("blackbox_path")
         self.spec = WindowSpec(**cfg["spec"])
         self.engine_kwargs = dict(cfg["engine_kwargs"])
-        self.eng: Optional[KeyedWindowEngine] = None
+        self.engines: Dict[int, KeyedWindowEngine] = {}
         # process-local black box: newest spans survive into the crash dump
         self.recorder = FlightRecorder(capacity=1024)
         self.tracer = Tracer(max_events=0, recorder=self.recorder)
@@ -61,26 +75,36 @@ class _Host:
         out, self._spans = self._spans, []
         return out
 
+    def _eng(self, meta) -> KeyedWindowEngine:
+        shard = int(meta["shard"])
+        eng = self.engines.get(shard)
+        if eng is None:
+            raise wire.WireError(f"host {self.host}: no engine for shard {shard}")
+        return eng
+
     # -- frame handlers --------------------------------------------------------
     def on_attach(self, meta, cols):
+        shard = int(meta["shard"])
         tree = dict(cols)
         tree["slot_table"] = np.asarray(tree["slot_table"], np.int32)
         for k in wire.SNAPSHOT_SCALARS:
             tree[k] = np.int64(meta[k])
-        self.eng = KeyedWindowEngine.restore(
+        self.engines[shard] = KeyedWindowEngine.restore(
             self.spec, tree, **self.engine_kwargs
         )
         return wire.OK, {"rows": int(len(tree["w_key"]))}, None
 
     def on_step(self, meta, cols):
+        shard = int(meta["shard"])
+        eng = self._eng(meta)
         t0 = time.perf_counter()
         wm_ts = meta.get("wm_ts")
-        out = self.eng.process_chunk(
+        out = eng.process_chunk(
             {k: cols[k] for k in ("key", "value", "ts")},
             wm_ts=wm_ts, positions=cols["pos"],
         )
         t1 = time.perf_counter()
-        self._span("shard_step", t0, t1, shard=self.shard,
+        self._span("shard_step", t0, t1, shard=shard,
                    m=int(len(cols["key"])))
         reply_cols: Dict[str, np.ndarray] = {}
         for prefix, part in (("em", out["emissions"]), ("ey", out["early"])):
@@ -92,24 +116,26 @@ class _Host:
             "spans": self.take_spans(),
             # the shard's own §4.2 work tally after this chunk — lets the
             # coordinator mirror the global tally without extra roundtrips
-            "tally": int(self.eng.worker_items[self.shard]),
+            "tally": int(eng.worker_items[shard]),
         }
         return wire.STEP_OUT, reply_meta, reply_cols
 
     def on_snapshot_req(self, meta, cols):
+        shard = int(meta["shard"])
         t0 = time.perf_counter()
-        snap_meta, snap_cols = wire.snapshot_to_frame(self.eng.snapshot())
-        self._span("shard_snapshot", t0, time.perf_counter(),
-                   shard=self.shard)
+        snap_meta, snap_cols = wire.snapshot_to_frame(self._eng(meta).snapshot())
+        self._span("shard_snapshot", t0, time.perf_counter(), shard=shard)
         snap_meta["spans"] = self.take_spans()
         return wire.SNAPSHOT, snap_meta, snap_cols
 
     def on_extract(self, meta, cols):
-        rows = self.eng.extract_rows(np.asarray(cols["slots"], np.int64))
+        rows = self._eng(meta).extract_rows(
+            np.asarray(cols["slots"], np.int64)
+        )
         return wire.ROWS, {"rows": int(len(rows[0]))}, wire.rows_to_cols(rows)
 
     def on_ingest(self, meta, cols):
-        self.eng.ingest_rows(*wire.cols_to_rows(cols))
+        self._eng(meta).ingest_rows(*wire.cols_to_rows(cols))
         return wire.OK, {"rows": int(len(cols["key"]))}, None
 
     def on_apply(self, meta, cols):
@@ -118,17 +144,19 @@ class _Host:
         shards' stream-global counters."""
         from repro.keyed.store import SlotMap
 
+        shard = int(meta["shard"])
+        eng = self._eng(meta)
         n_new = int(meta["n_new"])
         table = np.asarray(cols["slot_table"], np.int32)
-        self.eng.store.slot_map = SlotMap(
-            self.eng.store.num_slots, n_new, table=table
+        eng.store.slot_map = SlotMap(
+            eng.store.num_slots, n_new, table=table
         )
         items = np.zeros(n_new, np.int64)
-        items[self.shard] = int(meta["tally"])
-        self.eng.worker_items = items
-        self.eng.late_count += int(meta.get("late_add", 0))
-        if self.eng.table is not None:
-            st = self.eng.table.stats
+        items[shard] = int(meta["tally"])
+        eng.worker_items = items
+        eng.late_count += int(meta.get("late_add", 0))
+        if eng.table is not None:
+            st = eng.table.stats
             st.inserted += int(meta.get("inserted_add", 0))
             st.hits += int(meta.get("hits_add", 0))
             st.spilled += int(meta.get("spilled_add", 0))
@@ -136,7 +164,7 @@ class _Host:
         return wire.OK, None, None
 
     def on_health(self, meta, cols):
-        eng = self.eng
+        eng = self._eng(meta)
         h = eng.table.health() if eng.table is not None else None
         counters = {
             "late_count": int(eng.late_count),
@@ -149,9 +177,13 @@ class _Host:
         return wire.HEALTH, {"health": h, "counters": counters}, None
 
     def on_detach(self, meta, cols):
-        """Drop the engine but keep the process warm: re-attach after a
-        checkpoint restore reuses the already-imported worker."""
-        self.eng = None
+        """Drop one shard's engine (or all of them) but keep the process
+        warm: re-attach after a checkpoint restore reuses the
+        already-imported worker."""
+        if meta.get("shard") is not None:
+            self.engines.pop(int(meta["shard"]), None)
+        else:
+            self.engines.clear()
         return wire.OK, None, None
 
     # -- crash path ------------------------------------------------------------
@@ -159,11 +191,11 @@ class _Host:
         if not self.blackbox_path:
             return
         try:
-            self.tracer.instant("worker_error", shard=self.shard, error=err)
+            self.tracer.instant("worker_error", host=self.host, error=err)
             os.makedirs(os.path.dirname(self.blackbox_path), exist_ok=True)
             self.recorder.dump(
                 self.blackbox_path,
-                process_name=f"shardhost:{self.shard}",
+                process_name=f"shardhost:{self.host}",
             )
         except Exception:
             pass  # the black box must never mask the real failure
@@ -181,24 +213,46 @@ _HANDLERS = {
 }
 
 
+def _make_channel(conn, cfg: Dict[str, Any]) -> ShmTransport:
+    """Attach the coordinator-provisioned rings (if any); on ANY failure
+    fall back to a plain pipe channel — HELLO's ``caps`` list tells the
+    coordinator which side of the negotiation this host landed on."""
+    c2w, w2c = cfg.get("shm_c2w"), cfg.get("shm_w2c")
+    if not (c2w and w2c):
+        return ShmTransport(conn)
+    try:
+        recv_ring = ShmRing.attach(c2w)
+        send_ring = ShmRing.attach(w2c)
+    except Exception:
+        return ShmTransport(conn)
+    # STEP input columns are safe to map zero-copy: the engine's
+    # process_chunk reads them through masks/fancy indexing and never
+    # retains the originals; the span is released at the next recv, after
+    # the reply left this process
+    return ShmTransport(conn, send_ring=send_ring, recv_ring=recv_ring,
+                        zero_copy=(wire.STEP,))
+
+
 def serve(conn, cfg: Dict[str, Any]) -> None:
     """Worker-process entry point: handshake, then serve frames until
     SHUTDOWN.  On CRASH (the supervisor failure drill) or any internal
     error the host dumps its flight recorder and exits nonzero — the
     coordinator sees the pipe close and raises ``WorkerFailure``."""
-    host = _Host(conn, cfg)
-    wire.send(conn, wire.HELLO, {
-        "shard": host.shard, "pid": os.getpid(),
-        "blackbox_path": host.blackbox_path,
+    chan = _make_channel(conn, cfg)
+    host = _Host(chan, cfg)
+    caps = ["shm"] if chan.send_ring is not None else []
+    chan.send(wire.HELLO, {
+        "host": host.host, "pid": os.getpid(),
+        "blackbox_path": host.blackbox_path, "caps": caps,
     })
     while True:
         try:
-            ftype, meta, cols = wire.recv(conn)
+            ftype, meta, cols = chan.recv()
         except (EOFError, OSError):
             return  # coordinator is gone: nothing to report to
         if ftype == wire.SHUTDOWN:
             try:
-                wire.send(conn, wire.OK, {"seq": meta.get("seq")})
+                chan.send(wire.OK, {"seq": meta.get("seq")})
             except (BrokenPipeError, OSError):
                 pass
             return
@@ -218,14 +272,15 @@ def serve(conn, cfg: Dict[str, Any]) -> None:
             # to discard replies stranded by a failure-interrupted epoch
             rmeta = dict(rmeta) if rmeta else {}
             rmeta["seq"] = meta.get("seq")
-            wire.send(conn, rtype, rmeta, rcols)
+            rmeta["shard"] = meta.get("shard")
+            chan.send(rtype, rmeta, rcols)
         except (BrokenPipeError, OSError):
             return
         except Exception as e:  # engine/protocol error: report, then die
             err = f"{type(e).__name__}: {e}"
             host.dump_blackbox(err)
             try:
-                wire.send(conn, wire.ERR, {
+                chan.send(wire.ERR, {
                     "error": err,
                     "traceback": traceback.format_exc(limit=20),
                 })

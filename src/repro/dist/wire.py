@@ -33,8 +33,9 @@ guessing — the coordinator treats that as a worker failure, never as data.
 from __future__ import annotations
 
 import json
+import os
 import struct
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -43,6 +44,14 @@ VERSION = 1
 
 _HEADER = struct.Struct("<4sBBHIHH")  # magic, ver, ftype, flags, meta, ncols, rsvd
 HEADER_BYTES = _HEADER.size
+
+#: header flag: the frame's column payload rides a shared-memory ring
+#: (``repro.dist.shm``) instead of inline column records — the frame itself
+#: carries ``ncols=0`` plus a ``_shm`` descriptor in meta.  Decoders that
+#: don't know the flag still decode the frame correctly (it IS a valid
+#: column-free frame); the descriptor is only meaningful to a receiver
+#: attached to the sender's ring.
+FLAG_SHM = 0x0001
 
 # -- frame types -------------------------------------------------------------
 HELLO = 0x01         # worker -> coord: alive, pid, blackbox path
@@ -91,10 +100,60 @@ class WireError(RuntimeError):
     """Malformed, truncated, or version-incompatible frame."""
 
 
+def column_buffer(name: str, arr: np.ndarray) -> Tuple[int, memoryview]:
+    """Canonicalize one column to its wire form without copying: returns
+    ``(dtype_code, flat little-endian byte view)``.  The view keeps the
+    canonicalized array alive; it is the exact byte sequence :func:`encode`
+    would embed for this column."""
+    a = np.ascontiguousarray(arr)
+    dt = _CANON.get(a.dtype, a.dtype)
+    if dt not in _DTYPE_CODES:
+        raise WireError(f"column {name!r}: unsupported dtype {a.dtype}")
+    if a.ndim != 1:
+        raise WireError(f"column {name!r}: must be 1-D, got shape {a.shape}")
+    a = a.astype(dt, copy=False)
+    return _DTYPE_CODES[dt], memoryview(a).cast("B")
+
+
+def encode_parts(
+    ftype: int,
+    meta: Optional[Dict] = None,
+    cols: Optional[Dict[str, np.ndarray]] = None,
+    flags: int = 0,
+) -> List[memoryview]:
+    """Serialize one frame as a vectored sequence of buffers.
+
+    ``b"".join(encode_parts(...))`` is byte-identical to
+    :func:`encode` — but the column payloads stay *views* over the source
+    arrays (no per-frame concatenation copy), so a vectored writer
+    (``os.writev``, repeated ``stream.write``) ships them without ever
+    materializing the frame.
+    """
+    meta_b = json.dumps(meta, separators=(",", ":")).encode() if meta else b""
+    cols = cols or {}
+    parts = [
+        memoryview(
+            _HEADER.pack(MAGIC, VERSION, ftype, flags, len(meta_b),
+                         len(cols), 0)
+        ),
+        memoryview(meta_b),
+    ]
+    for name, arr in cols.items():
+        code, raw = column_buffer(name, arr)
+        nb = name.encode()
+        if len(nb) > 255:
+            raise WireError(f"column name too long: {name!r}")
+        parts.append(memoryview(struct.pack("<B", len(nb)) + nb
+                                + struct.pack("<BI", code, len(raw))))
+        parts.append(raw)
+    return parts
+
+
 def encode(
     ftype: int,
     meta: Optional[Dict] = None,
     cols: Optional[Dict[str, np.ndarray]] = None,
+    flags: int = 0,
 ) -> bytes:
     """Serialize one frame to bytes.
 
@@ -102,28 +161,7 @@ def encode(
     numpy arrays of a wire dtype (int64/int32/float64/bool/uint8).  Column
     order is preserved (dict order), so encode→decode is byte-stable.
     """
-    meta_b = json.dumps(meta, separators=(",", ":")).encode() if meta else b""
-    cols = cols or {}
-    parts = [
-        _HEADER.pack(MAGIC, VERSION, ftype, 0, len(meta_b), len(cols), 0),
-        meta_b,
-    ]
-    for name, arr in cols.items():
-        a = np.ascontiguousarray(arr)
-        dt = _CANON.get(a.dtype, a.dtype)
-        if dt not in _DTYPE_CODES:
-            raise WireError(f"column {name!r}: unsupported dtype {a.dtype}")
-        if a.ndim != 1:
-            raise WireError(f"column {name!r}: must be 1-D, got shape {a.shape}")
-        raw = a.astype(dt, copy=False).tobytes()
-        nb = name.encode()
-        if len(nb) > 255:
-            raise WireError(f"column name too long: {name!r}")
-        parts.append(struct.pack("<B", len(nb)))
-        parts.append(nb)
-        parts.append(struct.pack("<BI", _DTYPE_CODES[dt], len(raw)))
-        parts.append(raw)
-    return b"".join(parts)
+    return b"".join(encode_parts(ftype, meta, cols, flags))
 
 
 def decode(buf: bytes) -> Tuple[int, Dict, Dict[str, np.ndarray]]:
@@ -168,12 +206,40 @@ def decode(buf: bytes) -> Tuple[int, Dict, Dict[str, np.ndarray]]:
 
 # -- transport: multiprocessing.Connection ----------------------------------
 
-def send(conn, ftype: int, meta=None, cols=None) -> int:
+def _writev_all(fd: int, parts: List[memoryview]) -> None:
+    """``os.writev`` the buffer sequence fully, resuming across partial
+    writes (a full pipe buffer may accept any byte count mid-buffer)."""
+    bufs = [p for p in parts if len(p)]
+    while bufs:
+        n = os.writev(fd, bufs)
+        while bufs and n >= len(bufs[0]):
+            n -= len(bufs[0])
+            bufs.pop(0)
+        if n:
+            bufs[0] = bufs[0][n:]
+
+
+def send(conn, ftype: int, meta=None, cols=None, flags: int = 0) -> int:
     """Encode and ship one frame over a Connection; returns bytes sent
-    (the frame size — what the migration-volume accounting sums)."""
-    frame = encode(ftype, meta, cols)
-    conn.send_bytes(frame)
-    return len(frame)
+    (the frame size — what the migration-volume accounting sums).
+
+    The frame is written as a vectored sequence (header prefix + parts)
+    straight from the column arrays' memory — no intermediate ``b"".join``
+    copy.  The byte stream is identical to ``conn.send_bytes(encode(...))``
+    (``Connection`` frames messages as ``!i length || payload``), which
+    :func:`recv` / ``recv_bytes`` on the peer reads back unchanged.
+    """
+    parts = encode_parts(ftype, meta, cols, flags)
+    n = sum(len(p) for p in parts)
+    try:
+        fd = conn.fileno()
+    except (OSError, AttributeError):
+        fd = None
+    if fd is None or n > 0x7FFFFFFF:
+        conn.send_bytes(b"".join(parts))
+        return n
+    _writev_all(fd, [memoryview(struct.pack("!i", n))] + parts)
+    return n
 
 
 def recv(conn) -> Tuple[int, Dict, Dict[str, np.ndarray]]:
@@ -184,13 +250,16 @@ def recv(conn) -> Tuple[int, Dict, Dict[str, np.ndarray]]:
 
 # -- transport: raw byte streams (sockets / files / BytesIO) -----------------
 
-def write_frame(stream, ftype: int, meta=None, cols=None) -> int:
+def write_frame(stream, ftype: int, meta=None, cols=None, flags: int = 0) -> int:
     """Write ``u32 length || frame`` to a byte stream; returns bytes written
-    including the prefix."""
-    frame = encode(ftype, meta, cols)
-    stream.write(struct.pack("<I", len(frame)))
-    stream.write(frame)
-    return 4 + len(frame)
+    including the prefix.  The frame is written part-by-part straight from
+    the column arrays (no intermediate frame concatenation)."""
+    parts = encode_parts(ftype, meta, cols, flags)
+    n = sum(len(p) for p in parts)
+    stream.write(struct.pack("<I", n))
+    for p in parts:
+        stream.write(p)
+    return 4 + n
 
 
 def read_frame(stream) -> Tuple[int, Dict, Dict[str, np.ndarray]]:

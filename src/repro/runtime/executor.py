@@ -609,28 +609,58 @@ class StreamExecutor:
             return outs
         pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
         done = object()  # sentinel: a None CHUNK must not truncate the run
+        step_ahead = getattr(self.adapter, "step_ahead", None)
         try:
             it = iter(chunks)
             cur = next(it, done)
             prepared = None
             i = 0
+            if cur is not done:
+                if schedule and 0 in schedule:
+                    self.set_degree(schedule[0], reason="schedule@chunk0")
+                if autoscaler is not None:
+                    autoscaler.maybe_scale(self, queue=queue)
             while cur is not done:
                 nxt = next(it, done)
                 fut = None
                 if nxt is not done:
                     fut = pool.submit(self._traced_prepare, nxt)
                     self._inflight = fut
-                if schedule and i in schedule:
-                    self.set_degree(schedule[i], reason=f"schedule@chunk{i}")
-                if autoscaler is not None:
-                    autoscaler.maybe_scale(self, queue=queue)
                 outs.append(self.process(cur, prepared=prepared))
-                prepared = fut.result() if fut is not None else None
+                prepared = None
+                if nxt is not done:
+                    # degree changes for chunk i+1 happen HERE, before the
+                    # overlapped scatter below — a resize must always precede
+                    # the chunk it applies to (work-tally attribution is
+                    # degree-dependent, and the drain discipline discards
+                    # scattered-ahead output)
+                    if schedule and (i + 1) in schedule:
+                        self.set_degree(
+                            schedule[i + 1], reason=f"schedule@chunk{i + 1}"
+                        )
+                    if autoscaler is not None:
+                        autoscaler.maybe_scale(self, queue=queue)
+                    prepared = fut.result()
+                    if (
+                        step_ahead is not None
+                        and int(len(jax.tree.leaves(nxt)[0])) == self.chunk_size
+                    ):
+                        # scatter-gather overlap: ship chunk i+1 to the
+                        # workers now; they compute while this loop records
+                        # metrics and pulls chunk i+2.  Tail chunks stay on
+                        # the synchronous path (they may refit the degree)
+                        step_ahead(nxt, prepared=prepared)
                 self._inflight = None
                 cur = nxt
                 i += 1
         finally:
             self._inflight = None
+            drain = getattr(self.adapter, "drain_ahead", None)
+            if drain is not None:
+                try:
+                    drain()  # an abandoned run must not strand an epoch
+                except Exception:
+                    pass
             pool.shutdown(wait=True)
         return outs
 

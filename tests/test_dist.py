@@ -69,13 +69,28 @@ def _chunks(items):
 # ---------------------------------------------------------------------------
 
 class TestDistributedPlaneBitExact:
-    def test_grow_shrink_nondivisor_degrees_bit_exact(self, tmp_path):
+    @pytest.mark.parametrize(
+        "transport,spk,overlap",
+        [
+            ("pipe", 1, False),
+            ("pipe", 1, True),
+            ("shm", 1, True),
+            ("shm", 2, True),
+        ],
+        ids=["pipe", "pipe-overlap", "shm-overlap", "shm-mux2-overlap"],
+    )
+    def test_grow_shrink_nondivisor_degrees_bit_exact(
+        self, tmp_path, transport, spk, overlap
+    ):
         """One executor over worker *processes*, one over in-process shards,
         same schedule with grow (2->3->7) and shrink (7->2) at degrees that
         do NOT divide num_slots=20: emissions, early firings, late records,
         migration row counts, barrier snapshots, and final state all match
         each other and the serial oracle — the process boundary changes
-        transport, never semantics."""
+        transport, never semantics.  Parametrized over the pipe and
+        shared-memory transports, shard-host multiplexing, and the
+        overlapped scatter/gather pipeline (which must drain transparently
+        at every scheduled resize)."""
         spec = WindowSpec("tumbling", size=8, lateness=3, late_policy="side",
                           early_every=2)
         items = synthetic_keyed_items(10 * CHUNK + 9, num_keys=12,
@@ -89,10 +104,12 @@ class TestDistributedPlaneBitExact:
 
         ad = DistributedKeyedPlane(spec, num_slots=NUM_SLOTS,
                                    backend="device_table", capacity=64,
-                                   prespawn=7,
+                                   prespawn=7, transport=transport,
+                                   shards_per_host=spk,
                                    blackbox_dir=str(tmp_path / "bb"))
         try:
-            ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+            ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK,
+                                pipeline=overlap)
             outs = ex.run(_chunks(items), schedule=schedule)
 
             # bit-exact vs the in-process fused plane, chunk by chunk
@@ -131,8 +148,55 @@ class TestDistributedPlaneBitExact:
             assert payload <= vol["bytes"] <= payload + vol["handoffs"] * 7 * 512
             assert ad.wire_bytes["migration"] == vol["bytes"]
             assert ad.wire_bytes["step"] > 0
+            # the transport split meters every byte exactly once: the pipe
+            # transport never touches shared memory, the shm transport moves
+            # the column payloads (the bulk of the traffic) through the rings
+            assert ad.wire_bytes["piped"] > 0
+            if transport == "shm":
+                assert ad.wire_bytes["shm"] > 0
+            else:
+                assert ad.wire_bytes["shm"] == 0
         finally:
             ad.close()
+
+    def test_overlap_actually_engages(self, tmp_path):
+        """Guard against the pipeline silently degrading to synchronous:
+        with ``pipeline=True`` and full-size chunks, every chunk after the
+        first is scattered ahead (`step_ahead` returns True), and the
+        outputs stay bit-exact vs the synchronous run."""
+        spec = WindowSpec("tumbling", size=12, lateness=3, late_policy="side")
+        items = synthetic_keyed_items(CHUNK * 6, num_keys=8, disorder=3,
+                                      seed=5)
+
+        def run(pipeline, counter=None):
+            ad = DistributedKeyedPlane(
+                spec, num_slots=NUM_SLOTS, prespawn=2, transport="shm",
+                blackbox_dir=str(tmp_path / "bb"),
+            )
+            try:
+                if counter is not None:
+                    inner = ad.step_ahead
+
+                    def counting(chunk, prepared=None):
+                        ok = inner(chunk, prepared=prepared)
+                        counter.append(ok)
+                        return ok
+
+                    ad.step_ahead = counting
+                ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK,
+                                    pipeline=pipeline)
+                outs = ex.run(_chunks(items))
+                return outs, ex.state
+            finally:
+                ad.close()
+
+        ref_outs, ref_state = run(False)
+        hits = []
+        outs, state = run(True, counter=hits)
+        assert len(hits) == 5 and all(hits)  # chunks 1..5 scattered ahead
+        assert _emissions(outs) == _emissions(ref_outs)
+        assert _late(outs) == _late(ref_outs)
+        assert _state_rows(state) == _state_rows(ref_state)
 
 
 # ---------------------------------------------------------------------------
@@ -140,12 +204,18 @@ class TestDistributedPlaneBitExact:
 # ---------------------------------------------------------------------------
 
 class TestKilledWorkerRecovery:
-    def test_killed_worker_recovers_through_supervisor(self, tmp_path):
+    @pytest.mark.parametrize("transport,spares", [("pipe", 0), ("shm", 1)],
+                             ids=["pipe", "shm-spare"])
+    def test_killed_worker_recovers_through_supervisor(
+        self, tmp_path, transport, spares
+    ):
         """A CRASH frame makes shard 1's host dump its flight recorder and
         ``os._exit`` mid-stream — a *real* process death.  The unmodified
         Supervisor restores survivors from the canonical snapshot, the pool
-        respawns the hole, and replay is bit-exact vs the oracle.  The dead
-        worker's black box is collected."""
+        refills the hole (a promoted warm spare when ``spares>0``), and
+        replay is bit-exact vs the oracle.  The dead worker's black box is
+        collected.  Run under both transports — a death must also release
+        the dead host's shared-memory rings."""
         spec = WindowSpec("tumbling", size=30, lateness=5, late_policy="side",
                           early_every=2)
         NCH = 6
@@ -155,7 +225,8 @@ class TestKilledWorkerRecovery:
 
         ad = DistributedKeyedPlane(spec, num_slots=10, backend="device_table",
                                    capacity=8, max_probes=2, ttl=4,
-                                   prespawn=3,
+                                   prespawn=3, transport=transport,
+                                   spares=spares,
                                    blackbox_dir=str(tmp_path / "bb"))
         try:
             ex = StreamExecutor(ad, degree=3, chunk_size=CHUNK)
@@ -187,6 +258,12 @@ class TestKilledWorkerRecovery:
             # the dead worker's flight-recorder dump was collected
             assert ad.collected_blackboxes
             assert os.path.exists(ad.collected_blackboxes[0])
+            if spares:
+                # the hole was filled by promotion and the spare pool was
+                # replenished asynchronously — failover never waits for a
+                # process to boot
+                assert len(ad._spares) == spares
+                assert all(h is not None for h in ad._pool)
         finally:
             ad.close()
 
