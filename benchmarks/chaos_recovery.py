@@ -1,0 +1,300 @@
+"""Chaos recovery benchmark: the fault-injection harness under gates.
+
+Three measurements, one JSON report (``results/chaos_recovery.json``):
+
+* **Seeded fault storm, both transports** — a 200-chunk stream through an
+  unmodified :class:`repro.runtime.Supervisor` over the distributed plane
+  with a :class:`repro.dist.faults.FaultPlan` storm armed (a hung worker,
+  a hard crash, corrupt / truncated / dropped / delayed frames in both
+  directions, plus a corrupted shm span on the shm transport).  Claims:
+  the replayed stream is **bit-exact** vs the serial oracle on both
+  transports (``storm_exact``), every kill is detected *and attributed*
+  to its armed fault (``kills_attributed``), and every fault event lands
+  on the obs plane — ``dist.fault.*`` counters plus the MTTR histogram
+  (``events_recorded``).
+* **Hung-worker detection latency** — arm a single ``hang``, time from
+  the chunk send to ``WorkerFailure(cause="hung")``.  The gate is the
+  bound the fault model promises (docs/fault-model.md): detection within
+  ``step deadline + probe window`` plus a fixed scheduling margin —
+  reported as ``detection.ratio`` (measured / budget), gated <= 1.0.
+* **MTTR vs the checkpoint cycle** — per-recovery mean-time-to-recovery
+  off the plane's ``mttr_s`` meter (death -> successful re-attach; the
+  pool keeps warm spares promoted FIFO, so recovery pays re-attach, never
+  process boot), against one full checkpoint cycle (barrier + detach +
+  re-attach from the canonical snapshot) on the same standing state —
+  the cost the snapshot-path recovery pays.  Gated by the same ceiling
+  the worker-death recovery path established (``recover_vs_barrier``
+  <= 12.0 in ``dist_plane``): ``mttr.worst_vs_cycle`` <= 12.0.
+
+``benchmarks/check_gates.py`` compares this report against the committed
+``results/baselines.json`` in the CI ``bench`` job; the chaos CI lane
+additionally re-runs the dist suite under a storm (see
+``.github/workflows/ci.yml``).
+
+Run:  PYTHONPATH=src python -m benchmarks.chaos_recovery
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, derived
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+NUM_SLOTS = 20
+CHUNK = 16
+STORM_CHUNKS = 200
+STORM_SEED = 11
+N_SHARDS = 3
+
+
+def _spec():
+    from repro.keyed import WindowSpec
+
+    return WindowSpec("tumbling", size=24, lateness=5, late_policy="side")
+
+
+def _items(n_chunks: int, seed: int):
+    from repro.keyed import synthetic_keyed_items
+
+    return synthetic_keyed_items(CHUNK * n_chunks, num_keys=12, disorder=5,
+                                 seed=seed)
+
+
+def _tight(**kw):
+    from repro.dist.plane import Deadlines
+
+    base = dict(step=2.5, snapshot=30.0, migrate=30.0, health=15.0,
+                default=30.0, attach=60.0, probe=1.0, retry_base=0.01)
+    base.update(kw)
+    return Deadlines(**base)
+
+
+def _triples(items):
+    return [(int(r["key"]), int(r["value"]), int(r["ts"])) for r in items]
+
+
+def _rows(d, cols=("key", "start", "end", "value", "count")):
+    return [tuple(int(x) for x in row) for row in zip(*(d[k] for k in cols))]
+
+
+def _emissions(outs):
+    return [r for o in outs for r in _rows(o["emissions"])]
+
+
+def _late(outs):
+    return [
+        r for o in outs for r in _rows(o["late"], ("key", "value", "ts",
+                                                   "start"))
+    ]
+
+
+def _state_rows(state):
+    return [
+        tuple(int(x) for x in r)
+        for r in zip(
+            *(np.asarray(state[k]).tolist()
+              for k in ("w_key", "w_start", "w_end", "w_value", "w_count"))
+        )
+    ]
+
+
+def _storm_cell(transport: str, oracle, items, workdir: str) -> dict:
+    """One storm run: Supervisor-driven, seeded faults, timed recoveries."""
+    from repro.dist import DistributedKeyedPlane
+    from repro.dist.faults import FaultPlan
+    from repro.obs import MetricsRegistry
+    from repro.runtime import BoundedSource, StreamExecutor, Supervisor
+
+    src = BoundedSource(items)
+    plan = FaultPlan.storm(seed=STORM_SEED, n_shards=N_SHARDS,
+                           n_chunks=STORM_CHUNKS,
+                           include_shm=(transport == "shm"))
+    reg = MetricsRegistry()
+    ad = DistributedKeyedPlane(
+        _spec(), num_slots=NUM_SLOTS, backend="device_table", capacity=16,
+        max_probes=2, ttl=6, prespawn=N_SHARDS, spares=2,
+        transport=transport, faults=plan, deadlines=_tight(),
+        registry=reg, blackbox_dir=os.path.join(workdir, f"bb-{transport}"),
+    )
+    try:
+        ex = StreamExecutor(ad, degree=N_SHARDS, chunk_size=CHUNK)
+
+        def chunk_fn(i):
+            src.seek(i * CHUNK)
+            return src.take(CHUNK)
+
+        sup = Supervisor(ex, chunk_fn, num_chunks=STORM_CHUNKS,
+                         ckpt_dir=os.path.join(workdir, f"ckpt-{transport}"),
+                         ckpt_every=5)
+        t0 = time.perf_counter()
+        outs = sup.run()
+        wall_s = time.perf_counter() - t0
+
+        o_em, o_open, o_late = oracle
+        ordered = [outs[i] for i in range(STORM_CHUNKS)]
+        exact = (
+            _emissions(ordered) == o_em
+            and _late(ordered) == o_late
+            and _state_rows(ex.state) == [tuple(t) for t in o_open]
+        )
+
+        # the MTTR yardstick on the post-storm standing state: one barrier,
+        # and one full checkpoint cycle (barrier + detach + re-attach from
+        # the canonical snapshot) — the cost the snapshot-path recovery
+        # pays, which warm-spare MTTR must stay a bounded multiple of
+        barrier_s = None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            ex.snapshot_barrier()
+            dt = time.perf_counter() - t0
+            barrier_s = dt if barrier_s is None else min(barrier_s, dt)
+        t0 = time.perf_counter()
+        cyc = ex.snapshot_barrier()
+        ad.detach()
+        ad.attach(cyc, ex.degree)
+        full_cycle_s = time.perf_counter() - t0
+
+        fired = plan.kinds_fired()
+        ev = dict(ad.fault_events)
+        ad.export_health(reg)
+        mttr = list(ad.mttr_s)
+        events_recorded = (
+            reg.counter("dist.fault.recoveries").value == ev["recoveries"]
+            and reg.counter("dist.fault.probes").value == ev["probes"]
+            and reg.histogram("dist.fault.mttr_s").count == len(mttr)
+        )
+    finally:
+        ad.close()
+    return {
+        "transport": transport,
+        "wall_s": wall_s,
+        "exact": bool(exact),
+        "kinds_fired": fired,
+        "kills_attributed": (
+            fired.get("worker:hang") == 1 and fired.get("worker:crash") == 1
+            and ev.get("death_hung") == 1 and ev.get("death_dead") == 1
+        ),
+        "events": ev,
+        "events_recorded": bool(events_recorded),
+        "recoveries": ev.get("recoveries", 0),
+        "mttr_s": mttr,
+        "worst_mttr_s": max(mttr) if mttr else 0.0,
+        "barrier_s": barrier_s,
+        "full_cycle_s": full_cycle_s,
+        "worst_mttr_vs_cycle": (max(mttr) / full_cycle_s) if mttr else 0.0,
+    }
+
+
+def _detection_cell(workdir: str) -> dict:
+    """Arm one hang; measure send -> WorkerFailure(cause='hung')."""
+    from repro.dist import DistributedKeyedPlane
+    from repro.dist.faults import Fault, FaultPlan
+    from repro.runtime import StreamExecutor, WorkerFailure
+
+    MARGIN_S = 2.5        # scheduling noise allowance on a loaded CI box
+    dl = _tight(step=1.5, probe=0.5)
+    items = _items(2, seed=7)
+    plan = FaultPlan([Fault("worker", "STEP", "hang", nth=2, shard=1)])
+    ad = DistributedKeyedPlane(
+        _spec(), num_slots=NUM_SLOTS, prespawn=2, transport="pipe",
+        faults=plan, deadlines=dl,
+        blackbox_dir=os.path.join(workdir, "bb-detect"),
+    )
+    try:
+        ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+        ex.process(items[:CHUNK])
+        t0 = time.perf_counter()
+        cause = ""
+        try:
+            ex.process(items[CHUNK: 2 * CHUNK])
+        except WorkerFailure as e:
+            cause = e.cause
+        latency_s = time.perf_counter() - t0
+    finally:
+        ad.close()
+    budget_s = dl.step + dl.probe + MARGIN_S
+    return {
+        "cause": cause,
+        "latency_s": latency_s,
+        "deadline_s": dl.step,
+        "probe_s": dl.probe,
+        "margin_s": MARGIN_S,
+        "budget_s": budget_s,
+        "ratio": latency_s / budget_s,
+    }
+
+
+def run():
+    def _oracle(items):
+        from repro.core import semantics
+
+        spec = _spec()
+        return semantics.keyed_windows(
+            "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+        )
+
+    items = _items(STORM_CHUNKS, seed=STORM_SEED)
+    oracle = _oracle(items)
+
+    cells = {}
+    with tempfile.TemporaryDirectory(prefix="chaos_recovery_") as workdir:
+        for transport in ("pipe", "shm"):
+            cells[transport] = _storm_cell(transport, oracle, items, workdir)
+        detection = _detection_cell(workdir)
+
+    worst = max(cells.values(), key=lambda c: c["worst_mttr_vs_cycle"])
+    report = {
+        "chunks": STORM_CHUNKS,
+        "chunk_size": CHUNK,
+        "storm_seed": STORM_SEED,
+        "storm": cells,
+        "detection": detection,
+        "mttr": {
+            "worst_s": worst["worst_mttr_s"],
+            "barrier_s": worst["barrier_s"],
+            "full_cycle_s": worst["full_cycle_s"],
+            "worst_vs_cycle": worst["worst_mttr_vs_cycle"],
+        },
+        "storm_exact": all(c["exact"] for c in cells.values()),
+        "kills_attributed": all(c["kills_attributed"]
+                                for c in cells.values()),
+        "events_recorded": all(c["events_recorded"]
+                               for c in cells.values()),
+    }
+    out = os.path.join(_REPO, "results", "chaos_recovery.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+
+    rows = [
+        Row(
+            f"chaos/storm/{t}",
+            1e6 * c["wall_s"] / STORM_CHUNKS,
+            derived(exact=int(c["exact"]), recoveries=c["recoveries"],
+                    worst_mttr_s=round(c["worst_mttr_s"], 4)),
+        )
+        for t, c in cells.items()
+    ]
+    rows.append(
+        Row(
+            "chaos/detection/hung",
+            1e6 * detection["latency_s"],
+            derived(budget_s=detection["budget_s"],
+                    ratio=round(detection["ratio"], 3)),
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    print("name,us_per_call,derived")
+    emit(run())

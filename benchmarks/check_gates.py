@@ -186,6 +186,10 @@ def main(argv=None) -> int:
                     help="directory the suite 'file' paths are relative to")
     ap.add_argument("--update", action="store_true",
                     help="refresh band centers from current results")
+    ap.add_argument("--suite", action="append", default=None,
+                    help="check only this suite (repeatable) — used by CI "
+                         "jobs that produce a subset of the reports, e.g. "
+                         "the chaos lane")
     args = ap.parse_args(argv)
     if not os.path.exists(args.baselines):
         print(
@@ -202,6 +206,13 @@ def main(argv=None) -> int:
             f.write("\n")
         print(f"updated band centers in {args.baselines}")
         return 0
+    if args.suite:
+        unknown = [s for s in args.suite if s not in baselines]
+        if unknown:
+            print(f"FAIL  unknown suite(s) {unknown} — "
+                  f"known: {sorted(baselines)}")
+            return 1
+        baselines = {n: baselines[n] for n in args.suite}
     rows = []
     for name, spec in baselines.items():
         rows.extend(check_suite(name, spec, args.root))

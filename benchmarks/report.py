@@ -406,6 +406,50 @@ def dist_plane_table(path: str) -> None:
     print(f"wrote {path}")
 
 
+def chaos_recovery_table(path: str) -> None:
+    """Markdown view of results/chaos_recovery.json (produced by
+    benchmarks/chaos_recovery.py): the seeded fault storm — bit-exact
+    recovery per transport, hung-worker detection latency vs its bound,
+    and per-recovery MTTR vs the checkpoint cycle."""
+    src = "results/chaos_recovery.json"
+    if not os.path.exists(src):
+        print(f"skip {path}: run benchmarks/chaos_recovery.py first")
+        return
+    with open(src) as f:
+        rep = json.load(f)
+    det = rep["detection"]
+    lines = [
+        f"### Seeded fault storm ({rep['chunks']} chunks of "
+        f"{rep['chunk_size']}, seed {rep['storm_seed']})",
+        "",
+        "| transport | exact | recoveries | worst MTTR | full cycle | "
+        "MTTR/cycle | faults fired |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for t, c in rep["storm"].items():
+        fired = ", ".join(f"{k}:{v}" for k, v in
+                          sorted(c["kinds_fired"].items()))
+        lines.append(
+            f"| {t} | {'yes' if c['exact'] else '**NO**'} | "
+            f"{c['recoveries']} | {1e3 * c['worst_mttr_s']:.1f} ms | "
+            f"{1e3 * c['full_cycle_s']:.1f} ms | "
+            f"{c['worst_mttr_vs_cycle']:.2f}x | {fired} |"
+        )
+    lines.append("")
+    lines.append(
+        f"hung-worker detection: **{det['latency_s']:.2f} s** against the "
+        f"fault-model bound (step deadline {det['deadline_s']:.1f} s + "
+        f"probe {det['probe_s']:.1f} s + margin {det['margin_s']:.1f} s = "
+        f"{det['budget_s']:.1f} s) — ratio **{det['ratio']:.2f}** · cause "
+        f"attributed: **{det['cause']}** · every kill attributed to its "
+        f"armed fault: **{rep['kills_attributed']}** · fault events on the "
+        f"obs plane: **{rep['events_recorded']}**"
+    )
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path}")
+
+
 if __name__ == "__main__":
     os.makedirs("results", exist_ok=True)
     dryrun_table("results/dryrun_table.md")
@@ -416,3 +460,4 @@ if __name__ == "__main__":
     keyed_fused_table("results/keyed_fused.md")
     slo_loop_table("results/slo_loop.md")
     dist_plane_table("results/dist_plane.md")
+    chaos_recovery_table("results/chaos_recovery.md")

@@ -31,6 +31,7 @@ def main() -> None:
         "benchmarks.keyed_fused",
         "benchmarks.slo_loop",
         "benchmarks.dist_plane",
+        "benchmarks.chaos_recovery",
         "benchmarks.kernel_bench",
         "benchmarks.roofline",
     ]

@@ -78,6 +78,7 @@ from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.dist import shardhost, wire
+from repro.dist.faults import FaultPlan
 from repro.dist.shm import ShmError, ShmRing, ShmTransport
 from repro.keyed.runtime import (
     KeyedWindowAdapter,
@@ -100,12 +101,55 @@ def _owned(d: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
     return {k: (v if v.flags.owndata else v.copy()) for k, v in d.items()}
 
 
+@dataclasses.dataclass
+class Deadlines:
+    """Per-frame-family reply deadlines plus the liveness-probe/retry knobs.
+
+    Every coordinator receive polls with the family's timeout; on expiry a
+    PING probe goes out and the worker gets ``probe`` more seconds to show
+    life.  A PONG without the awaited reply means the request (or its
+    reply) was lost in transit — the coordinator retransmits everything
+    pending.  Silence past the probe window is a **hung** worker: killed
+    and surfaced as ``WorkerFailure(cause="hung")``, so detection latency
+    is bounded by ``family deadline + probe`` (+ scheduling noise).
+
+    Corrupt frames (CRC mismatch / undecodable) are retried with
+    exponential backoff (``retry_base * 2**k``) up to ``max_retries``
+    before the worker is declared ``corrupt``.
+
+    ``slow_after`` marks replies slower than that as *slow* (counter +
+    trace instant, never fatal by itself); with ``slow_strikes`` set, that
+    many **consecutive** slow replies escalate to
+    ``WorkerFailure(cause="slow")`` — off by default.
+
+    Defaults are production-loose (a deadline trip should mean a genuinely
+    wedged worker, not a slow CI box); chaos tests construct tight ones.
+    """
+
+    hello: float = 180.0      # spawn + interpreter + JAX import
+    attach: float = 120.0
+    step: float = 60.0
+    snapshot: float = 120.0
+    migrate: float = 120.0    # EXTRACT / INGEST / APPLY / departing HEALTH
+    health: float = 30.0
+    default: float = 60.0
+    probe: float = 5.0        # grace window after a PING
+    retry_base: float = 0.05  # backoff base for corrupt-frame retries
+    max_retries: int = 4
+    slow_after: Optional[float] = None
+    slow_strikes: Optional[int] = None
+
+    def for_family(self, family: str) -> float:
+        return float(getattr(self, family, self.default))
+
+
 class _HostHandle:
     """One pooled shard-host process (shard-agnostic; shards are routed to
     it by the coordinator's ``shard -> host`` map)."""
 
     __slots__ = ("ident", "proc", "chan", "pid", "blackbox_path", "rings",
-                 "tids", "tid_tracer", "seq", "outstanding", "hello_done")
+                 "tids", "tid_tracer", "seq", "outstanding", "hello_done",
+                 "pending", "inbox", "slow_strikes")
 
     def __init__(self, ident, proc, chan, blackbox_path, rings):
         self.ident = ident                  # spawn ordinal (label only)
@@ -119,6 +163,13 @@ class _HostHandle:
         self.seq = 0                        # request sequence (epoch hygiene)
         self.outstanding: Deque[int] = collections.deque()  # awaited seqs
         self.hello_done = False
+        #: seq -> (ftype, meta, cols) of every un-acked request, kept for
+        #: retransmission after a NACK / lost-frame probe (freed on reply)
+        self.pending: Dict[int, Tuple] = {}
+        #: valid replies that arrived ahead of the awaited seq (a
+        #: retransmit raced its original) — consumed when their turn comes
+        self.inbox: Dict[int, Tuple] = {}
+        self.slow_strikes = 0               # consecutive slow replies
 
 
 class DistributedKeyedPlane(KeyedWindowAdapter):
@@ -152,7 +203,12 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
                  transport: Optional[str] = None,
                  shards_per_host: int = 1,
                  spares: int = 0,
-                 shm_capacity: int = 4 << 20):
+                 shm_capacity: int = 4 << 20,
+                 deadlines: Optional[Deadlines] = None,
+                 faults: Optional[FaultPlan] = None,
+                 crc: bool = True,
+                 worker_crc: bool = True,
+                 registry: Any = None):
         super().__init__(
             spec, num_slots=num_slots, impl=impl, backend=backend,
             capacity=capacity, ttl=ttl, max_probes=max_probes,
@@ -189,6 +245,48 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
             "attach": 0, "step": 0, "migration": 0, "snapshot": 0,
             "piped": 0, "shm": 0,
         }
+        self.deadlines = deadlines or Deadlines()
+        self.faults = faults
+        if faults is None:
+            # CI chaos lane: REPRO_DIST_CHAOS=<seed> arms a seeded storm of
+            # *recoverable* transit faults (corrupt / truncate / drop /
+            # delay, both directions — no kills) on every plane that did
+            # not bring its own plan, so the whole dist suite must stay
+            # bit-exact through transparent retry
+            chaos = os.environ.get("REPRO_DIST_CHAOS")
+            if chaos:
+                self.faults = FaultPlan.storm(
+                    seed=int(chaos), n_shards=8, n_chunks=10,
+                    include_kills=False,
+                    include_shm=(self.transport == "shm"),
+                )
+                if deadlines is None:
+                    # a dropped frame is only noticed at deadline expiry —
+                    # production-loose deadlines would stall the suite for
+                    # a minute per drop
+                    self.deadlines = Deadlines(step=2.5, probe=1.0,
+                                               retry_base=0.01)
+        self.crc = bool(crc)
+        #: worker-side CRC capability knob — False simulates a v1 peer
+        #: (interop tests); the coordinator then never enables CRC for it
+        self._worker_crc = bool(worker_crc)
+        self.registry = registry
+        #: detection / retry / recovery event counters — exported as
+        #: ``dist.fault.*`` by :meth:`export_health`, asserted by chaos CI
+        self.fault_events: Dict[str, int] = {
+            "death_dead": 0, "death_hung": 0, "death_corrupt": 0,
+            "death_slow": 0, "crc_errors": 0, "nacks": 0, "retransmits": 0,
+            "probes": 0, "probes_answered": 0, "slow_replies": 0,
+            "injected_send": 0, "armed_worker": 0, "degraded": 0,
+            "fenced_replays": 0, "recoveries": 0,
+        }
+        #: degree ceiling while respawn is failing (``None`` = healthy);
+        #: :meth:`feasible_degrees` clamps autoscaler candidates to it, so
+        #: the plane degrades through the autoscaler instead of dying
+        self.capacity_limit: Optional[int] = None
+        self.mttr_s: List[float] = []         # per-recovery detect->reattach
+        self._death_at: Optional[float] = None
+        self._epoch = 0                       # resize-handoff fencing epoch
         self._closed = False
         atexit.register(self.close)
 
@@ -215,6 +313,7 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
             "host": ident,
             "spec": dataclasses.asdict(self.spec),
             "engine_kwargs": self._engine_kwargs(),
+            "crc": self._worker_crc,
             "blackbox_path": os.path.join(
                 self.blackbox_dir, f"host{ident}.json"
             ),
@@ -238,7 +337,7 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         for h in handles:
             if h.hello_done:
                 continue
-            ftype, meta, _ = self._recv(h)
+            ftype, meta, _ = self._reply(h, family="hello")
             if ftype != wire.HELLO:
                 raise WorkerFailure(
                     f"shard host {h.ident}: bad handshake frame {ftype}"
@@ -258,6 +357,20 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
                 for ring in h.rings:
                     ring.close()
                 h.rings = None
+            # CRC negotiation: enable per-link only when the worker
+            # advertised the algorithm (an old peer without the cap keeps
+            # byte-identical v1 frames both ways)
+            if self.crc and "crc32" in caps:
+                h.chan.crc = True
+            # arm injected faults exactly once per worker-process lifetime,
+            # before any ATTACH can reach it (FIFO pipe ordering); spent
+            # kill-faults were consumed at death attribution, so recovery
+            # cannot loop on them
+            if self.faults is not None:
+                wf = self.faults.worker_faults()
+                if wf:
+                    self._send_oob(h, wire.FAULT, {"faults": wf})
+                    self.fault_events["armed_worker"] += len(wf)
 
     def _ensure_pool(self, k: int) -> None:
         """Fill pool slots ``0..k-1`` with live hosts.  Holes are filled by
@@ -268,15 +381,39 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         only — their handshakes are awaited at promotion)."""
         while len(self._pool) < k:
             self._pool.append(None)
+        if any(h is None for h in self._pool):
+            # hosts are shard-agnostic: compact live hosts into the leading
+            # slots so a degraded pool still fields a contiguous prefix
+            live = [h for h in self._pool if h is not None]
+            self._pool = live + [None] * (len(self._pool) - len(live))
         for i in range(k):
             if self._pool[i] is None and self._spares:
-                self._pool[i] = self._spares.pop()
+                # FIFO: the oldest spare has had the longest to finish its
+                # interpreter boot — promoting LIFO would grab the spare
+                # most recently spawned (possibly still importing) while a
+                # warm one idles
+                self._pool[i] = self._spares.pop(0)
         for i in range(k):
             if self._pool[i] is None:
-                self._pool[i] = self._spawn()
+                try:
+                    self._pool[i] = self._spawn()
+                except Exception as e:
+                    # spares exhausted AND respawn failing: degrade instead
+                    # of dying — record the capacity we can still field and
+                    # let the Supervisor/autoscaler shrink onto it
+                    self._note_degraded(e)
+                    raise WorkerFailure(
+                        f"cannot spawn shard host for pool slot {i}: {e!r}",
+                        cause="spawn", capacity=self.capacity_limit,
+                    ) from e
         while len(self._spares) < self.spares:
-            self._spares.append(self._spawn())
+            try:
+                self._spares.append(self._spawn())
+            except Exception:
+                break  # degraded: run without a full spare set
         self._wait_hello(self._pool[:k])
+        # the full pool answered: spawn capability is demonstrably back
+        self.capacity_limit = None
 
     def _track(self, h: _HostHandle, shard: int) -> int:
         """The shard's tracer track (allocated lazily; re-allocated when
@@ -300,39 +437,157 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
     # -- fallible transport ----------------------------------------------------
     def _send(self, h: _HostHandle, ftype, meta=None, cols=None) -> int:
         """Ship one request, stamped with the host's next sequence number
-        (the worker echoes it in the reply — see :meth:`_reply`); returns
-        total bytes (piped + shm) for the frame-family accounting."""
+        (the worker echoes it in the reply — see :meth:`_reply`).  The
+        frame is parked in ``h.pending`` BEFORE it leaves, so a NACK or a
+        lost-frame probe can always retransmit it; the entry is freed when
+        its reply lands.  Send-site injected faults (drop / corrupt /
+        truncate / delay) are applied here.  Returns total bytes (piped +
+        shm) for the frame-family accounting."""
         h.seq += 1
         m = dict(meta) if meta else {}
         m["seq"] = h.seq
+        h.pending[h.seq] = (ftype, m, cols)
+        h.outstanding.append(h.seq)
+        fault = None
+        if self.faults is not None:
+            fault = self.faults.draw(
+                "send", wire.FRAME_NAMES.get(ftype, str(ftype)),
+                m.get("shard"),
+            )
         try:
+            if fault is not None:
+                self.fault_events["injected_send"] += 1
+                self.tracer.instant("fault_injected", site="send",
+                                    kind=fault.kind, host=h.ident)
+                if fault.kind == "drop":
+                    return 0  # never transmitted: probe/NACK recovers it
+                if fault.kind == "delay":
+                    time.sleep(fault.seconds)
+                elif fault.kind in ("corrupt", "truncate"):
+                    raw = bytearray(wire.encode(
+                        ftype, m, cols,
+                        flags=wire.FLAG_CRC if h.chan.crc else 0,
+                    ))
+                    if fault.kind == "corrupt" and h.chan.crc:
+                        raw[fault.seed % len(raw)] ^= 0xFF
+                    elif fault.kind == "corrupt":
+                        raw[0] ^= 0xFF  # no CRC: mangle the magic, so the
+                        # flip is always *detected*, never silently decoded
+                    else:
+                        keep = wire.HEADER_BYTES + (
+                            fault.seed % max(1, len(raw) - wire.HEADER_BYTES)
+                        )
+                        raw = raw[:keep]
+                    h.chan.conn.send_bytes(bytes(raw))
+                    self.wire_bytes["piped"] += len(raw)
+                    return len(raw)
             piped, shm_b = h.chan.send(ftype, m, cols)
         except (BrokenPipeError, OSError) as e:
-            self._on_death(h, repr(e))
-        h.outstanding.append(h.seq)
+            self._kill_and_fail(h, repr(e), cause="dead")
         self.wire_bytes["piped"] += piped
         self.wire_bytes["shm"] += shm_b
         return piped + shm_b
 
-    def _recv(self, h: _HostHandle):
+    def _send_oob(self, h: _HostHandle, ftype, meta=None) -> None:
+        """Ship an out-of-band control frame (PING / FAULT) — no sequence
+        number, no pending entry, never retransmitted."""
         try:
-            ftype, meta, cols = h.chan.recv()
-        except (EOFError, OSError, ShmError, wire.WireError) as e:
-            self._on_death(h, repr(e))
-        if ftype == wire.ERR:
-            # the host reported the error and then died: same failure path,
-            # but with the worker's own traceback attached
-            self._on_death(h, meta.get("error", "worker error"),
-                           detail=meta.get("traceback", ""))
-        return ftype, meta, cols
+            h.chan.send(ftype, dict(meta) if meta else {})
+        except (BrokenPipeError, OSError) as e:
+            self._kill_and_fail(h, repr(e), cause="dead")
 
-    def _on_death(self, h: _HostHandle, err: str, detail: str = ""):
+    def _retransmit(self, h: _HostHandle, after: Optional[int] = None) -> None:
+        """Resend every pending (un-acked) request with seq > ``after`` in
+        sequence order — the answer to a NACK and to a PONG that proves the
+        worker alive while the awaited reply is missing.  The worker serves
+        already-executed seqs from its reply cache (exactly-once)."""
+        seqs = sorted(s for s in h.pending if after is None or s > after)
+        for s in seqs:
+            ftype, m, cols = h.pending[s]
+            try:
+                piped, shm_b = h.chan.send(ftype, m, cols)
+            except (BrokenPipeError, OSError) as e:
+                self._kill_and_fail(h, repr(e), cause="dead")
+            self.wire_bytes["piped"] += piped
+            self.wire_bytes["shm"] += shm_b
+        if seqs:
+            self.fault_events["retransmits"] += len(seqs)
+            self.tracer.instant("retransmit", host=h.ident, n=len(seqs),
+                                first=seqs[0])
+
+    def _probe(self, h: _HostHandle) -> None:
+        """Liveness probe: a PING the worker answers out-of-band even while
+        requests are pending (the serve loop handles it before the seq
+        discipline) — distinguishes *lost frame* from *hung worker*."""
+        self.fault_events["probes"] += 1
+        self.tracer.instant("probe", host=h.ident)
+        self._send_oob(h, wire.PING, {"host": h.ident})
+
+    def _kill_and_fail(self, h: _HostHandle, err: str, *, cause: str = "dead",
+                       detail: str = ""):
+        """Terminate a misbehaving host and surface the failure.  ``hung``
+        / ``slow`` / ``corrupt`` hosts are still alive — kill first so
+        :meth:`_on_death` reaps a corpse, not a wedged protocol peer."""
+        if h.proc.is_alive():
+            try:
+                h.proc.kill()
+            except Exception:
+                pass
+        self._on_death(h, err, cause=cause, detail=detail)
+
+    def _note_degraded(self, err: Exception) -> None:
+        """Respawn capability just failed: record the degree we can still
+        field so :meth:`feasible_degrees` (and through it the autoscaler /
+        supervisor) shrinks the plane onto the surviving capacity instead
+        of dying on the next spawn attempt."""
+        live = sum(1 for x in self._pool if x is not None) + len(self._spares)
+        self.capacity_limit = live * self.shards_per_host
+        self.fault_events["degraded"] += 1
+        self.tracer.instant("degraded", capacity=self.capacity_limit,
+                            error=repr(err)[:200])
+
+    def _note_reply_time(self, h: _HostHandle, elapsed: float) -> None:
+        """Slow-worker soft signal: replies slower than ``slow_after`` are
+        counted and traced; ``slow_strikes`` *consecutive* ones escalate to
+        a kill with ``cause="slow"`` (off unless both knobs are set)."""
+        d = self.deadlines
+        if d.slow_after is None:
+            return
+        if elapsed > d.slow_after:
+            self.fault_events["slow_replies"] += 1
+            h.slow_strikes += 1
+            self.tracer.instant("slow_reply", host=h.ident,
+                                elapsed_s=round(elapsed, 4))
+            if d.slow_strikes is not None and h.slow_strikes >= d.slow_strikes:
+                self._kill_and_fail(
+                    h, f"{h.slow_strikes} consecutive replies slower than "
+                       f"{d.slow_after}s", cause="slow",
+                )
+        else:
+            h.slow_strikes = 0
+
+    def _on_death(self, h: _HostHandle, err: str, *, cause: str = "dead",
+                  detail: str = ""):
         """A shard host died: collect its black box, reap the process,
         refill its pool slot immediately (warm spare if available, else a
         fresh spawn whose import runs concurrently with the restore), and
         surface the §4 worker-failure the supervisor knows how to drive —
         restore survivors + re-attach from the canonical checkpoint."""
         ident, pid = h.ident, h.pid
+        key = f"death_{cause}"
+        self.fault_events[key] = self.fault_events.get(key, 0) + 1
+        if self._death_at is None:
+            self._death_at = time.monotonic()  # MTTR clock: detect->reattach
+        # attribute the death to its armed kill-fault so a Supervisor
+        # recovery does not re-arm the same kill into an infinite loop
+        if self.faults is not None:
+            slot = self._pool.index(h) if h in self._pool else None
+            shards = (
+                range(slot * self.shards_per_host,
+                      (slot + 1) * self.shards_per_host)
+                if slot is not None else ()
+            )
+            self.faults.consume_kill(cause, shards)
         # give the dying process a moment to finish its black-box dump
         deadline = time.monotonic() + 2.0
         while h.proc.is_alive() and time.monotonic() < deadline:
@@ -351,74 +606,217 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
             slot = self._pool.index(h)
             # refill the hole now: promotion is instant, a spawn's import
             # overlaps the checkpoint restore that must follow anyway
+            # (FIFO — the oldest spare is the warmest, see _ensure_pool)
             if self._spares:
-                self._pool[slot] = self._spares.pop()
+                self._pool[slot] = self._spares.pop(0)
             elif not self._closed:
-                self._pool[slot] = self._spawn()
+                try:
+                    self._pool[slot] = self._spawn()
+                except Exception as e:
+                    self._pool[slot] = None
+                    self._note_degraded(e)
             else:
                 self._pool[slot] = None
         self._active = 0   # live state is gone: force re-attach after restore
         self._ahead = None  # the overlapped epoch died with the fleet
         self.tracer.instant(
-            "worker_death", host=ident, pid=pid, error=err,
+            "worker_death", host=ident, pid=pid, error=err, cause=cause,
             blackbox=blackbox or "",
         )
-        msg = f"shard host {ident} (pid {pid}) died: {err}"
+        msg = f"shard host {ident} (pid {pid}) {cause}: {err}"
         if blackbox:
             msg += f" [black box: {blackbox}]"
-        raise WorkerFailure(msg + ("\n" + detail if detail else ""))
+        raise WorkerFailure(
+            msg + ("\n" + detail if detail else ""),
+            cause=cause, capacity=self.capacity_limit,
+        )
 
-    def _reply(self, h: _HostHandle):
-        """Receive the oldest outstanding reply, discarding stale frames
-        from an epoch a worker failure interrupted (a crash mid-scatter
-        leaves already-scattered peers' replies in their pipes; the echoed
-        sequence number identifies and drops them)."""
+    def _reply(self, h: _HostHandle, family: str = "step",
+               spent_deadline: bool = False):
+        """Receive the oldest outstanding reply under the ``family``
+        deadline, driving the full detection/recovery automaton:
+
+        * deadline expiry -> PING probe; PONG without the awaited reply
+          means a frame was lost in transit -> retransmit everything
+          pending; silence past the probe window -> **hung**, kill;
+        * NACK -> retransmit the pending tail the worker named;
+        * corrupt/undecodable reply -> exponential-backoff retransmit, up
+          to ``max_retries``, then **corrupt**, kill;
+        * a valid reply ahead of the awaited seq (a retransmit raced its
+          original) is parked in ``h.inbox``; stale duplicates (seq already
+          served, or stranded by an interrupted epoch) are dropped.
+        """
+        t_start = time.monotonic()
         expect = h.outstanding[0] if h.outstanding else None
+        deadline = self.deadlines.for_family(family)
+        # ``spent_deadline``: the caller (a collective gather wait) already
+        # burned the family deadline — skip straight to the probe so the
+        # detection bound stays ``deadline + probe``, not double-counted
+        budget_end = t_start if spent_deadline else t_start + deadline
+        probed = False
+        retries = 0
         while True:
-            ftype, meta, cols = self._recv(h)
-            if expect is None or meta.get("seq") == expect:
-                if h.outstanding:
-                    h.outstanding.popleft()
+            if expect is not None and expect in h.inbox:
+                ftype, meta, cols = h.inbox.pop(expect)
+                h.outstanding.popleft()
+                h.pending.pop(expect, None)
+                self._note_reply_time(h, time.monotonic() - t_start)
                 return ftype, meta, cols
+            remaining = max(0.0, budget_end - time.monotonic())
+            if not h.chan.conn.poll(remaining):
+                if not probed:
+                    probed = True
+                    self._probe(h)
+                    budget_end = time.monotonic() + self.deadlines.probe
+                    continue
+                self._kill_and_fail(
+                    h, f"no {family} reply within {deadline}s "
+                       f"(+{self.deadlines.probe}s probe grace)",
+                    cause="hung",
+                )
+            try:
+                ftype, meta, cols = h.chan.recv()
+            except (EOFError, OSError) as e:
+                self._kill_and_fail(h, repr(e), cause="dead")
+            except (ShmError, wire.WireError) as e:
+                # mangled reply: the request is still held in pending —
+                # back off, retransmit, and let the worker's reply cache
+                # serve the clean copy (never re-executes the handler)
+                self.fault_events["crc_errors"] += 1
+                self.tracer.instant("reply_corrupt", host=h.ident,
+                                    error=f"{type(e).__name__}: {e}"[:200])
+                retries += 1
+                if retries > self.deadlines.max_retries:
+                    self._kill_and_fail(
+                        h, f"{retries} corrupt replies in a row: {e!r}",
+                        cause="corrupt",
+                    )
+                time.sleep(self.deadlines.retry_base * (2 ** (retries - 1)))
+                self._retransmit(h)
+                budget_end = time.monotonic() + deadline
+                probed = False
+                continue
+            if ftype == wire.ERR:
+                # the host reported the error and then died: same failure
+                # path, with the worker's own traceback attached
+                self._kill_and_fail(
+                    h, meta.get("error", "worker error"),
+                    cause="dead", detail=meta.get("traceback", ""),
+                )
+            if ftype == wire.PONG:
+                if probed:
+                    # alive, but the awaited reply never came: the request
+                    # (or its reply) was lost — retransmit and rearm the
+                    # full deadline
+                    self.fault_events["probes_answered"] += 1
+                    self._retransmit(h)
+                    budget_end = time.monotonic() + deadline
+                    probed = False
+                continue  # stale PONG from an earlier probe: ignore
+            if ftype == wire.NACK:
+                self.fault_events["nacks"] += 1
+                self.tracer.instant("nack", host=h.ident,
+                                    have=meta.get("have"))
+                self._retransmit(h, after=int(meta.get("have", 0)))
+                budget_end = time.monotonic() + deadline
+                probed = False
+                continue
+            seq = meta.get("seq")
+            if expect is None:
+                # unsolicited worker-initiated frame (HELLO)
+                return ftype, meta, cols
+            if seq == expect:
+                h.outstanding.popleft()
+                h.pending.pop(expect, None)
+                self._note_reply_time(h, time.monotonic() - t_start)
+                return ftype, meta, cols
+            if seq is not None and int(seq) in h.pending:
+                # a later outstanding request's reply arrived first (its
+                # retransmit raced the original): park it, RE-OWNED — a
+                # zero-copy shm span dies at the next recv on this channel
+                h.inbox[int(seq)] = (ftype, meta, _owned(cols or {}))
+                continue
+            # stale duplicate (already served, or stranded by an
+            # interrupted epoch): drop
+            continue
 
-    def _gather(self, handles: Sequence[_HostHandle], expect: int):
+    def _gather(self, handles: Sequence[_HostHandle], expect: int,
+                family: str = "step"):
         """Receive one reply per entry of ``handles`` (repeats allowed —
         one per outstanding request on that host), in **completion order**
         across hosts via ``connection.wait`` and FIFO order within each
-        host.  Returns replies aligned with ``handles``.  A failure
-        mid-gather still drains the surviving hosts' replies before
-        raising, so no pipe is left holding a frame the next epoch would
-        misread."""
+        host.  Returns replies aligned with ``handles``.
+
+        ``connection.wait`` runs under the family deadline; when it expires
+        with hosts still owing replies, each one is driven through the
+        sequential :meth:`_reply` automaton (probe -> retransmit -> kill),
+        so a hung worker is detected within the same bound whether the wait
+        is collective or per-host.  A failure mid-gather still drains the
+        surviving hosts' replies before raising, so no pipe is left holding
+        a frame the next epoch would misread."""
         slots: List[Any] = [None] * len(handles)
         want: Dict[_HostHandle, Deque[int]] = {}
         for i, h in enumerate(handles):
             want.setdefault(h, collections.deque()).append(i)
         failure: Optional[WorkerFailure] = None
+
+        def take(h: _HostHandle, spent_deadline: bool = False) -> None:
+            nonlocal failure
+            try:
+                ftype, meta, cols = self._reply(
+                    h, family=family, spent_deadline=spent_deadline
+                )
+            except WorkerFailure as e:
+                if failure is None:
+                    failure = e
+                want.pop(h, None)
+                return
+            if ftype != expect:
+                if failure is None:
+                    failure = WorkerFailure(
+                        f"shard host {h.ident}: expected frame "
+                        f"{expect}, got {ftype}", cause="corrupt",
+                    )
+                want.pop(h, None)
+                return
+            q = want.get(h)
+            if q:
+                slots[q.popleft()] = (meta, cols)
+                if not q:
+                    want.pop(h, None)
+
+        deadline = self.deadlines.for_family(family)
         while want:
+            # serve replies already parked in an inbox first — no new bytes
+            # will ever announce them to ``wait``
+            progressed = False
+            for h in list(want):
+                while h in want and h.outstanding and \
+                        h.outstanding[0] in h.inbox:
+                    take(h)
+                    progressed = True
+            if not want:
+                break
+            if progressed:
+                continue
             by_conn = {h.chan.conn: h for h in want}
-            ready = multiprocessing.connection.wait(list(by_conn))
+            ready = multiprocessing.connection.wait(
+                list(by_conn), timeout=deadline
+            )
+            if not ready:
+                # collective deadline expired: drive every host still owing
+                # replies through the sequential probe/kill automaton (the
+                # deadline is already spent — probe immediately)
+                for h in list(want):
+                    first = True
+                    while h in want and want.get(h):
+                        take(h, spent_deadline=first)
+                        first = False
+                continue
             for conn in ready:
                 h = by_conn[conn]
-                if h not in want:
-                    continue
-                try:
-                    ftype, meta, cols = self._reply(h)
-                except WorkerFailure as e:
-                    if failure is None:
-                        failure = e
-                    want.pop(h, None)
-                    continue
-                if ftype != expect:
-                    if failure is None:
-                        failure = WorkerFailure(
-                            f"shard host {h.ident}: expected frame "
-                            f"{expect}, got {ftype}"
-                        )
-                    want.pop(h, None)
-                    continue
-                slots[want[h].popleft()] = (meta, cols)
-                if not want[h]:
-                    want.pop(h)
+                if h in want:
+                    take(h)
         if failure is not None:
             raise failure
         return slots
@@ -444,7 +842,11 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         )
         for h in self._pool:
             if h is not None:
-                h.outstanding.clear()  # stale epochs died with the old state
+                # stale epochs died with the old state: nothing outstanding
+                # survives a re-attach, so nothing may be retransmitted
+                h.outstanding.clear()
+                h.pending.clear()
+                h.inbox.clear()
         keys = np.asarray(state["w_key"], np.int64)
         row_owner = (
             np.asarray(sm.table, np.int64)[
@@ -480,9 +882,20 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
                 self.wire_bytes["attach"] += self._send(
                     self._host(w), wire.ATTACH, meta, cols
                 )
-            self._gather([self._host(w) for w in range(n_w)], wire.OK)
+            self._gather(
+                [self._host(w) for w in range(n_w)], wire.OK, family="attach"
+            )
         self._slot_map = sm
         self._active = n_w
+        if self._death_at is not None:
+            # a recovery just completed: detect -> successful re-attach
+            mttr = time.monotonic() - self._death_at
+            self._death_at = None
+            self.mttr_s.append(mttr)
+            self.fault_events["recoveries"] += 1
+            self.tracer.instant("recovered", mttr_s=round(mttr, 4), n_w=n_w)
+            if self.registry is not None:
+                self.registry.histogram("dist.fault.mttr_s").record(mttr)
         self._tally = [
             int(items[w]) if w < len(items) else 0 for w in range(n_w)
         ]
@@ -507,7 +920,7 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
                 continue
         for h in sent:
             try:
-                self._reply(h)
+                self._reply(h, family="default")
             except WorkerFailure:
                 continue
 
@@ -667,7 +1080,8 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
             for w in range(n_w):
                 self._send(self._host(w), wire.SNAPSHOT_REQ, {"shard": w})
             replies = self._gather(
-                [self._host(w) for w in range(n_w)], wire.SNAPSHOT
+                [self._host(w) for w in range(n_w)], wire.SNAPSHOT,
+                family="snapshot",
             )
             snaps = []
             for w, (meta, cols) in enumerate(replies):
@@ -689,6 +1103,11 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         is amortized by the warm pool, never paid here unless the pool is
         genuinely too small."""
         self.drain_ahead()
+        # one fencing epoch per resize: INGEST/APPLY frames carry it, and a
+        # replayed handoff (retransmit beyond the reply cache, or a partial
+        # resize re-driven after recovery) becomes a fenced no-op on any
+        # shard that already applied this epoch — exactly-once effects
+        self._epoch += 1
         sm_old = self._slot_map
         sm_new, moved = sm_old.rebalance(n_new)
         old_owner = np.asarray(sm_old.table, np.int64)
@@ -723,7 +1142,8 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
                     self._host(w), wire.ATTACH, dict(meta, shard=w), cols
                 )
             self._gather(
-                [self._host(w) for w in range(n_old, n_new)], wire.OK
+                [self._host(w) for w in range(n_old, n_new)], wire.OK,
+                family="migrate",
             )
         # donor side: one EXTRACT per donor of moved slots, gathered rows
         # bucketed by the NEW ownership of each row's key
@@ -739,7 +1159,8 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         per_recipient: Dict[int, List[Tuple[np.ndarray, ...]]] = {}
         for d, (meta, cols) in zip(
             donors,
-            self._gather([self._host(d) for d in donors], wire.ROWS),
+            self._gather([self._host(d) for d in donors], wire.ROWS,
+                         family="migrate"),
         ):
             rows = wire.cols_to_rows(cols)
             if not len(rows[0]):
@@ -762,10 +1183,11 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
             order = np.lexsort((cat[2], cat[1], cat[0]))
             wire_bytes += self._send(
                 self._host(r), wire.INGEST,
-                {"shard": r},
+                {"shard": r, "epoch": self._epoch},
                 wire.rows_to_cols(tuple(c[order] for c in cat)),
             )
-        self._gather([self._host(r) for r in recipients], wire.OK)
+        self._gather([self._host(r) for r in recipients], wire.OK,
+                     family="migrate")
         # departing shards: fold their stream-global counters into shard 0,
         # then drop their engines (hosts stay warm for a later grow)
         folded = fold_worker_items(
@@ -779,7 +1201,8 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
             for w in departing:
                 self._send(self._host(w), wire.HEALTH_REQ, {"shard": w})
             for meta, _ in self._gather(
-                [self._host(w) for w in departing], wire.HEALTH
+                [self._host(w) for w in departing], wire.HEALTH,
+                family="migrate",
             ):
                 c = meta["counters"]
                 adds["late_add"] += c["late_count"]
@@ -789,18 +1212,21 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
                 adds["evicted_add"] += c["evicted"]
             for w in departing:
                 self._send(self._host(w), wire.DETACH, {"shard": w})
-            self._gather([self._host(w) for w in departing], wire.OK)
+            self._gather([self._host(w) for w in departing], wire.OK,
+                         family="migrate")
         # new ownership epoch on every surviving shard (shard 0 absorbs the
         # departing counters exactly like the in-process fold)
         for w in range(n_new):
-            meta = {"shard": w, "n_new": n_new, "tally": int(folded[w])}
+            meta = {"shard": w, "n_new": n_new, "tally": int(folded[w]),
+                    "epoch": self._epoch}
             if w == 0:
                 meta.update(adds)
             self._send(
                 self._host(w), wire.APPLY, meta,
                 {"slot_table": sm_new.table},
             )
-        self._gather([self._host(w) for w in range(n_new)], wire.OK)
+        self._gather([self._host(w) for w in range(n_new)], wire.OK,
+                     family="migrate")
         self._slot_map = sm_new
         self._active = n_new
         self._tally = [int(v) for v in folded]
@@ -820,6 +1246,16 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         """Publish the distributed plane's health gauges (same names as the
         in-process plane, values fetched over HEALTH frames)."""
         self.drain_ahead()
+        # fault/detection/recovery events export unconditionally — a plane
+        # whose fleet just died still reports how it died
+        for k, v in self.fault_events.items():
+            registry.counter(f"dist.fault.{k}").value = v
+        if self.mttr_s:
+            registry.gauge("dist.fault.mttr_last_s").set(self.mttr_s[-1])
+        if self.capacity_limit is not None:
+            registry.gauge("dist.fault.capacity_limit").set(
+                self.capacity_limit
+            )
         n_w = self._active
         if not n_w:
             return
@@ -827,7 +1263,8 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         for w in range(n_w):
             self._send(self._host(w), wire.HEALTH_REQ, {"shard": w})
         replies = self._gather(
-            [self._host(w) for w in range(n_w)], wire.HEALTH
+            [self._host(w) for w in range(n_w)], wire.HEALTH,
+            family="health",
         )
         totals = {"inserted": 0, "hits": 0, "spilled": 0, "evicted": 0}
         late_total = 0
@@ -860,6 +1297,19 @@ class DistributedKeyedPlane(KeyedWindowAdapter):
         ):
             registry.counter(name).value = totals[k]
         registry.counter("keyed.late").value = late_total
+
+    # -- degraded capacity -----------------------------------------------------
+    def feasible_degrees(self, chunk_size: int, candidates) -> List[int]:
+        """Pattern-feasible degrees, additionally clamped to the capacity
+        the plane can still field while respawn is failing — the autoscaler
+        (and the supervisor's shrink) then move the degree onto surviving
+        hosts instead of re-tripping the spawn failure."""
+        out = super().feasible_degrees(chunk_size, candidates)
+        if self.capacity_limit is not None:
+            clamped = [n for n in out if n <= self.capacity_limit]
+            # never empty: the smallest valid degree is the least-bad ask
+            out = clamped or ([min(out)] if out else out)
+        return out
 
     # -- failure drill ---------------------------------------------------------
     def kill_worker(self, shard: int) -> None:

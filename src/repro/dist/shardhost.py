@@ -38,6 +38,7 @@ initialized JAX threads) and ``"fork"`` both work.
 
 from __future__ import annotations
 
+import collections
 import os
 import time
 import traceback
@@ -46,9 +47,23 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.dist import wire
-from repro.dist.shm import ShmRing, ShmTransport
+from repro.dist.faults import Fault, FaultMatcher
+from repro.dist.shm import ShmError, ShmRing, ShmTransport
 from repro.keyed.windows import KeyedWindowEngine, WindowSpec
 from repro.obs.trace import FlightRecorder, Tracer
+
+#: how many served replies are kept for retransmission (must exceed the
+#: coordinator's maximum outstanding window per host — shards_per_host plus
+#: the one-deep overlap — by a wide margin)
+REPLY_CACHE = 64
+
+#: how many (op, shard, epoch) fence keys are remembered for idempotent
+#: INGEST/APPLY replay detection
+FENCE_CACHE = 512
+
+#: a ``hang`` fault sleeps this long — far past any configured deadline;
+#: the coordinator's liveness probe kills the process well before it wakes
+HANG_SECONDS = 3600.0
 
 
 class _Host:
@@ -65,6 +80,50 @@ class _Host:
         self.recorder = FlightRecorder(capacity=1024)
         self.tracer = Tracer(max_events=0, recorder=self.recorder)
         self._spans: List[List] = []  # per-request span log shipped upstream
+        # -- robustness state --------------------------------------------------
+        self.matcher: Optional[FaultMatcher] = None  # armed injected faults
+        self.reply_cache: "collections.OrderedDict[int, tuple]" = (
+            collections.OrderedDict()
+        )
+        self.expected_seq = 1     # next request seq this host will serve
+        self._fence_keys: set = set()
+        self._fence_fifo: "collections.deque" = collections.deque()
+
+    # -- fault injection -------------------------------------------------------
+    def arm(self, faults: List[Dict]) -> None:
+        """(Re)arm injected faults — idempotent set-replace, occurrence
+        counters reset (the coordinator strips already-fired kill faults
+        before re-arming, so recovery cannot loop on the same kill)."""
+        self.matcher = FaultMatcher([Fault.from_dict(d) for d in faults])
+        self.tracer.instant("faults_armed", host=self.host, n=len(faults))
+
+    def draw_fault(self, site: str, ftype: int, meta) -> Optional[Fault]:
+        if self.matcher is None:
+            return None
+        shard = meta.get("shard")
+        f = self.matcher.draw(site, wire.FRAME_NAMES.get(ftype, str(ftype)),
+                              None if shard is None else int(shard))
+        if f is not None:
+            self.tracer.instant("fault_fired", host=self.host, site=f.site,
+                                kind=f.kind, op=f.op, shard=shard)
+        return f
+
+    # -- idempotent replay fence ----------------------------------------------
+    def fenced(self, ftype: int, meta) -> bool:
+        """True if this INGEST/APPLY epoch was already applied on this
+        shard — a replayed resize handoff must be exactly-once, so the
+        duplicate becomes a fenced no-op acknowledged with ``fenced=True``."""
+        epoch = meta.get("epoch")
+        if epoch is None:
+            return False
+        key = (ftype, int(meta["shard"]), int(epoch))
+        if key in self._fence_keys:
+            return True
+        self._fence_keys.add(key)
+        self._fence_fifo.append(key)
+        while len(self._fence_fifo) > FENCE_CACHE:
+            self._fence_keys.discard(self._fence_fifo.popleft())
+        return False
 
     # -- span capture ---------------------------------------------------------
     def _span(self, name: str, t0: float, t1: float, **args) -> None:
@@ -135,6 +194,8 @@ class _Host:
         return wire.ROWS, {"rows": int(len(rows[0]))}, wire.rows_to_cols(rows)
 
     def on_ingest(self, meta, cols):
+        if self.fenced(wire.INGEST, meta):
+            return wire.OK, {"rows": 0, "fenced": True}, None
         self._eng(meta).ingest_rows(*wire.cols_to_rows(cols))
         return wire.OK, {"rows": int(len(cols["key"]))}, None
 
@@ -144,6 +205,8 @@ class _Host:
         shards' stream-global counters."""
         from repro.keyed.store import SlotMap
 
+        if self.fenced(wire.APPLY, meta):
+            return wire.OK, {"fenced": True}, None
         shard = int(meta["shard"])
         eng = self._eng(meta)
         n_new = int(meta["n_new"])
@@ -233,23 +296,67 @@ def _make_channel(conn, cfg: Dict[str, Any]) -> ShmTransport:
                         zero_copy=(wire.STEP,))
 
 
+def _send_mangled(chan: ShmTransport, rtype: int, rmeta, rcols,
+                  seed: int) -> None:
+    """Ship a reply with one byte flipped — the ``reply``-site ``corrupt``
+    fault.  Encoded inline (bypassing the ring) so the flip rides the pipe;
+    the CRC trailer computed *before* the flip makes the receiver reject it
+    and retransmit, at which point the clean cached reply is re-sent."""
+    flags = wire.FLAG_CRC if chan.crc else 0
+    raw = bytearray(wire.encode(rtype, rmeta, rcols, flags=flags))
+    raw[seed % len(raw)] ^= 0xFF
+    chan.conn.send_bytes(bytes(raw))
+
+
 def serve(conn, cfg: Dict[str, Any]) -> None:
     """Worker-process entry point: handshake, then serve frames until
     SHUTDOWN.  On CRASH (the supervisor failure drill) or any internal
     error the host dumps its flight recorder and exits nonzero — the
-    coordinator sees the pipe close and raises ``WorkerFailure``."""
+    coordinator sees the pipe close and raises ``WorkerFailure``.  On EOF
+    (the coordinator died first) it dumps the black box, detaches + unlinks
+    the shm rings, and exits **cleanly** — a dead coordinator must never
+    leave orphaned workers or leaked segments behind.
+
+    Robustness discipline (see ``docs/fault-model.md``):
+
+    * every seq-stamped request is served exactly once, in order; served
+      replies are cached so a retransmitted request is answered from the
+      cache without re-executing the handler (exactly-once effects);
+    * a corrupt/truncated request triggers ``NACK{have}`` + resync: frames
+      are dropped until the retransmit stream reaches ``have + 1``;
+    * out-of-band frames (PING -> PONG, FAULT -> arm) bypass the seq
+      discipline entirely.
+    """
     chan = _make_channel(conn, cfg)
+    chan.crc_capable = bool(cfg.get("crc", True))
     host = _Host(chan, cfg)
-    caps = ["shm"] if chan.send_ring is not None else []
+    caps = (["shm"] if chan.send_ring is not None else []) \
+        + (["crc32"] if chan.crc_capable else [])
     chan.send(wire.HELLO, {
         "host": host.host, "pid": os.getpid(),
         "blackbox_path": host.blackbox_path, "caps": caps,
     })
+    resync = False
     while True:
         try:
             ftype, meta, cols = chan.recv()
         except (EOFError, OSError):
-            return  # coordinator is gone: nothing to report to
+            # coordinator is gone: leave a black box for the post-mortem,
+            # reap the shm segments (nobody else will), exit clean
+            host.dump_blackbox("coordinator EOF")
+            chan.close(unlink=True)
+            return
+        except (wire.WireError, ShmError) as e:
+            # mangled request: tell the coordinator where the good prefix
+            # ends and drop everything until the retransmit reaches it
+            host.tracer.instant("request_corrupt", host=host.host,
+                                error=f"{type(e).__name__}: {e}")
+            try:
+                chan.send(wire.NACK, {"have": host.expected_seq - 1})
+            except (BrokenPipeError, OSError):
+                return
+            resync = True
+            continue
         if ftype == wire.SHUTDOWN:
             try:
                 chan.send(wire.OK, {"seq": meta.get("seq")})
@@ -261,6 +368,57 @@ def serve(conn, cfg: Dict[str, Any]) -> None:
             # dump the black box, close nothing gracefully, exit nonzero
             host.dump_blackbox("injected crash (CRASH frame)")
             os._exit(17)
+        if ftype == wire.PING:
+            try:
+                chan.send(wire.PONG, {"host": host.host})
+            except (BrokenPipeError, OSError):
+                return
+            continue
+        if ftype == wire.FAULT:
+            host.arm(meta.get("faults") or [])
+            continue
+        seq = meta.get("seq")
+        if seq is not None:
+            seq = int(seq)
+            if resync and seq != host.expected_seq:
+                continue  # still inside the corrupt gap
+            resync = False
+            if seq < host.expected_seq:
+                # retransmitted request: answer from the cache, never
+                # re-execute (exactly-once effects under replay)
+                cached = host.reply_cache.get(seq)
+                try:
+                    if cached is not None:
+                        host.tracer.instant("reply_from_cache", seq=seq)
+                        chan.send(*cached)
+                    else:
+                        chan.send(wire.ERR, {
+                            "error": f"retransmit of evicted seq {seq} "
+                                     f"(serving {host.expected_seq})",
+                        })
+                except (BrokenPipeError, OSError):
+                    return
+                continue
+            if seq > host.expected_seq:
+                # gap: a request before this one was lost in transit
+                try:
+                    chan.send(wire.NACK, {"have": host.expected_seq - 1})
+                except (BrokenPipeError, OSError):
+                    return
+                resync = True
+                continue
+            host.expected_seq = seq + 1
+        fault = host.draw_fault("worker", ftype, meta)
+        if fault is not None:
+            if fault.kind == "hang":
+                time.sleep(HANG_SECONDS)  # probe kill arrives long before
+            elif fault.kind == "slow":
+                time.sleep(fault.seconds)
+            elif fault.kind == "crash":
+                host.dump_blackbox(
+                    f"injected crash at {wire.FRAME_NAMES.get(ftype, ftype)}"
+                )
+                os._exit(17)
         handler = _HANDLERS.get(ftype)
         try:
             if handler is None:
@@ -273,6 +431,22 @@ def serve(conn, cfg: Dict[str, Any]) -> None:
             rmeta = dict(rmeta) if rmeta else {}
             rmeta["seq"] = meta.get("seq")
             rmeta["shard"] = meta.get("shard")
+            if seq is not None:
+                host.reply_cache[seq] = (rtype, rmeta, rcols)
+                while len(host.reply_cache) > REPLY_CACHE:
+                    host.reply_cache.popitem(last=False)
+            rfault = host.draw_fault("reply", ftype, meta)
+            if rfault is not None and rfault.kind == "drop":
+                continue  # computed + cached, never sent: retransmit serves it
+            if rfault is not None and rfault.kind == "corrupt":
+                _send_mangled(chan, rtype, rmeta, rcols, rfault.seed)
+                continue
+            if rfault is not None and rfault.kind == "delay":
+                time.sleep(rfault.seconds)
+            if rcols and chan.send_ring is not None:
+                sfault = host.draw_fault("shm", ftype, meta)
+                if sfault is not None:
+                    chan.corrupt_next_span = True
             chan.send(rtype, rmeta, rcols)
         except (BrokenPipeError, OSError):
             return

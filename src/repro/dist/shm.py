@@ -199,6 +199,14 @@ class ShmRing:
         if end > self.read_pos:
             self.read_pos = end
 
+    # -- fault injection -------------------------------------------------------
+    def corrupt(self, gen: int, offset: int = 0) -> None:
+        """Flip one payload byte of a pushed span — the fault-injection hook
+        that simulates a torn/corrupted ring slot.  The span's descriptor CRC
+        (computed before the flip) then fails verification on the receiver."""
+        base = HEADER_BYTES + (gen % self.capacity) + STAMP_BYTES
+        self._buf[base + offset] ^= 0xFF
+
     # -- lifecycle ------------------------------------------------------------
     def close(self) -> None:
         if self._closed:
@@ -230,6 +238,16 @@ class ShmRing:
                 self._shm.unlink()
             except (FileNotFoundError, OSError):
                 pass
+
+    def unlink(self) -> None:
+        """Force-unlink the segment regardless of ownership — the orphan
+        cleanup path: a worker whose coordinator died (EOF on the doorbell
+        pipe) is the last process that will ever touch the segment, so it
+        must reap it or the name leaks until reboot."""
+        try:
+            self._shm.unlink()
+        except (FileNotFoundError, OSError):
+            pass
 
 
 class ShmTransport:
@@ -264,11 +282,22 @@ class ShmTransport:
         self.shm_frames = 0
         self.piped_frames = 0
         self._held: List[Tuple[int, int]] = []  # (gen, length) awaiting release
+        #: emit CRC trailers (pipe frames) + span CRCs (ring descriptors).
+        #: The coordinator sets this after HELLO advertises the "crc32" cap;
+        #: a worker mirrors it on the first received frame carrying FLAG_CRC.
+        self.crc = False
+        #: whether this endpoint is *allowed* to mirror CRC (False simulates
+        #: a v1 peer for the HELLO-negotiation interop tests)
+        self.crc_capable = True
+        #: fault-injection hook: flip one byte of the next pushed span after
+        #: its descriptor CRC is computed (simulates a corrupted ring slot)
+        self.corrupt_next_span = False
 
     # -- send ------------------------------------------------------------------
     def send(self, ftype: int, meta=None, cols=None) -> Tuple[int, int]:
         """Ship one frame; returns ``(piped_bytes, shm_bytes)`` for it."""
         cols = cols or {}
+        base_flags = wire.FLAG_CRC if self.crc else 0
         if self.send_ring is not None and cols:
             specs, bufs, total = [], [], 0
             try:
@@ -282,14 +311,26 @@ class ShmTransport:
                 gen = None  # unsupported column: the inline path will raise
             if gen is not None:
                 m = dict(meta) if meta else {}
-                m["_shm"] = {"gen": gen, "cols": specs}
+                desc = {"gen": gen, "cols": specs}
+                if self.crc:
+                    # span CRC rides the descriptor: the pipe frame's own
+                    # trailer covers the descriptor, the descriptor covers
+                    # the ring bytes — end-to-end integrity either path
+                    desc["crc"] = wire.crc_of(bufs)
+                m["_shm"] = desc
+                if self.corrupt_next_span and total:
+                    # strike the next span that actually carries payload —
+                    # flipping a byte of a zero-length span is a no-op the
+                    # receiver could never detect
+                    self.corrupt_next_span = False
+                    self.send_ring.corrupt(gen)
                 piped = wire.send(self.conn, ftype, m, None,
-                                  flags=wire.FLAG_SHM)
+                                  flags=wire.FLAG_SHM | base_flags)
                 self.piped_bytes += piped
                 self.shm_bytes += total
                 self.shm_frames += 1
                 return piped, total
-        piped = wire.send(self.conn, ftype, meta, cols)
+        piped = wire.send(self.conn, ftype, meta, cols, flags=base_flags)
         self.piped_bytes += piped
         self.piped_frames += 1
         return piped, 0
@@ -305,7 +346,11 @@ class ShmTransport:
 
     def recv(self) -> Tuple[int, Dict, Dict[str, np.ndarray]]:
         self.release_held()
-        ftype, meta, cols = wire.recv(self.conn)
+        ftype, meta, cols, flags = wire.decode_ex(self.conn.recv_bytes())
+        if flags & wire.FLAG_CRC and self.crc_capable and not self.crc:
+            # the peer ships CRC-covered frames: mirror it on our replies
+            # (this is how the worker side of the negotiation latches on)
+            self.crc = True
         desc = meta.pop("_shm", None)
         if desc is None:
             return ftype, meta, cols
@@ -317,6 +362,16 @@ class ShmTransport:
         gen = int(desc["gen"])
         length = sum(int(nb) for _, _, nb in desc["cols"])
         payload = self.recv_ring.view(gen, length)
+        want_crc = desc.get("crc")
+        if want_crc is not None:
+            got = wire.crc_of((payload,))
+            if got != int(want_crc):
+                self.recv_ring.release(gen, length)
+                raise wire.CorruptFrame(
+                    f"shm span CRC mismatch on "
+                    f"{wire.FRAME_NAMES.get(ftype, ftype)}: computed "
+                    f"{got:#010x} != descriptor {int(want_crc):#010x}"
+                )
         out: Dict[str, np.ndarray] = {}
         off = 0
         copy = ftype not in self.zero_copy
@@ -338,11 +393,16 @@ class ShmTransport:
         return ftype, meta, out
 
     # -- lifecycle -------------------------------------------------------------
-    def close(self) -> None:
+    def close(self, unlink: bool = False) -> None:
+        """Close rings + pipe.  ``unlink=True`` force-unlinks the ring
+        segments even from the attach side — the orphaned-worker path where
+        the owning coordinator is already dead."""
         self.release_held()
         for ring in (self.send_ring, self.recv_ring):
             if ring is not None:
                 ring.close()
+                if unlink:
+                    ring.unlink()
         self.send_ring = self.recv_ring = None
         try:
             self.conn.close()

@@ -28,6 +28,24 @@ against ``io.BytesIO``.
 Versioning: ``VERSION`` bumps on ANY layout change; a decoder receiving a
 frame with an unknown magic or version raises :class:`WireError` instead of
 guessing — the coordinator treats that as a worker failure, never as data.
+Version 2 appends an optional CRC32 trailer (``FLAG_CRC``) over the whole
+frame; emitters label each frame with the *minimum* version that can decode
+it (plain frames stay v1), so a CRC-off peer negotiated via HELLO caps
+interoperates byte-for-byte with a v1 decoder.
+
+Integrity: when ``FLAG_CRC`` is set the last 4 bytes of the frame are the
+little-endian CRC32 (``zlib.crc32``; the container ships no crc32c module,
+and the algorithm name is negotiated via HELLO caps as ``"crc32"`` so both
+ends always agree) of everything before them.  A mismatch raises
+:class:`CorruptFrame` — a retriable subclass of :class:`WireError` — so the
+coordinator can retransmit instead of declaring the worker dead.
+
+Hostile input: :func:`decode` and :func:`read_frame` sanity-cap every
+declared length (frame, meta, column count) *before* allocating, and wrap
+every malformed-input failure (struct underflow, bad UTF-8, bad JSON,
+unknown dtype, ragged column bytes) in a precise :class:`WireError` — a
+hostile or bit-flipped frame can never raise a raw ``struct.error`` or
+force a giant allocation.
 """
 
 from __future__ import annotations
@@ -35,12 +53,22 @@ from __future__ import annotations
 import json
 import os
 import struct
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 MAGIC = b"RKWP"          # Repro Keyed Wire Protocol
-VERSION = 1
+VERSION = 2
+
+#: hard ceilings on declared sizes — checked BEFORE any allocation so a
+#: corrupt length prefix cannot OOM the receiver.  Generous vs real traffic
+#: (the largest legitimate frames are multi-MB snapshots).
+MAX_FRAME_BYTES = 1 << 28   # 256 MiB per frame
+MAX_META_BYTES = 1 << 20    # 1 MiB of JSON meta
+MAX_COLS = 4096
+
+CRC_BYTES = 4
 
 _HEADER = struct.Struct("<4sBBHIHH")  # magic, ver, ftype, flags, meta, ncols, rsvd
 HEADER_BYTES = _HEADER.size
@@ -52,6 +80,12 @@ HEADER_BYTES = _HEADER.size
 #: column-free frame); the descriptor is only meaningful to a receiver
 #: attached to the sender's ring.
 FLAG_SHM = 0x0001
+
+#: header flag: the frame ends with a 4-byte CRC32 trailer over everything
+#: before it (header included, so the flag itself is covered).  Emission is
+#: negotiated per-link via HELLO caps (``"crc32"``); verification is
+#: unconditional whenever the flag is present.
+FLAG_CRC = 0x0002
 
 # -- frame types -------------------------------------------------------------
 HELLO = 0x01         # worker -> coord: alive, pid, blackbox path
@@ -71,10 +105,17 @@ SHUTDOWN = 0x0E      # coord -> worker: exit cleanly
 CRASH = 0x0F         # coord -> worker: die mid-flight (failure drills)
 OK = 0x10            # worker -> coord: ack (may carry counters in meta)
 ERR = 0x11           # worker -> coord: exception text in meta
+FAULT = 0x12         # coord -> worker: arm injected faults (repro.dist.faults)
+PING = 0x13          # coord -> worker: liveness probe (out-of-band, no seq)
+PONG = 0x14          # worker -> coord: probe answer
+NACK = 0x15          # worker -> coord: corrupt/gapped request; meta carries
+                     #   "have" = last seq served, coordinator retransmits
 
 FRAME_NAMES = {
     v: k for k, v in list(globals().items())
-    if isinstance(v, int) and k.isupper() and k not in ("VERSION", "HEADER_BYTES")
+    if isinstance(v, int) and k.isupper()
+    and k not in ("VERSION", "HEADER_BYTES", "CRC_BYTES")
+    and not k.startswith(("FLAG_", "MAX_"))
 }
 
 #: wire dtype codes — int64 is the plane's lingua franca (rows, chunks,
@@ -98,6 +139,22 @@ _CANON = {  # anything else canonicalizes to one of the wire dtypes
 
 class WireError(RuntimeError):
     """Malformed, truncated, or version-incompatible frame."""
+
+
+class CorruptFrame(WireError):
+    """Frame failed its CRC check — the *transport* mangled it in flight.
+
+    Distinguished from plain :class:`WireError` because it is retriable:
+    the sender still holds the request, so the coordinator retransmits with
+    exponential backoff instead of declaring the worker dead."""
+
+
+def crc_of(parts) -> int:
+    """CRC32 (``zlib.crc32``) over a sequence of byte buffers."""
+    c = 0
+    for p in parts:
+        c = zlib.crc32(p, c)
+    return c & 0xFFFFFFFF
 
 
 def column_buffer(name: str, arr: np.ndarray) -> Tuple[int, memoryview]:
@@ -131,9 +188,13 @@ def encode_parts(
     """
     meta_b = json.dumps(meta, separators=(",", ":")).encode() if meta else b""
     cols = cols or {}
+    # label the frame with the minimum version able to decode it: plain
+    # frames are exactly v1 frames, so a CRC-off link stays interoperable
+    # with v1-only peers
+    ver = 2 if flags & FLAG_CRC else 1
     parts = [
         memoryview(
-            _HEADER.pack(MAGIC, VERSION, ftype, flags, len(meta_b),
+            _HEADER.pack(MAGIC, ver, ftype, flags, len(meta_b),
                          len(cols), 0)
         ),
         memoryview(meta_b),
@@ -146,6 +207,8 @@ def encode_parts(
         parts.append(memoryview(struct.pack("<B", len(nb)) + nb
                                 + struct.pack("<BI", code, len(raw))))
         parts.append(raw)
+    if flags & FLAG_CRC:
+        parts.append(memoryview(struct.pack("<I", crc_of(parts))))
     return parts
 
 
@@ -170,38 +233,83 @@ def decode(buf: bytes) -> Tuple[int, Dict, Dict[str, np.ndarray]]:
     Decoded columns are fresh arrays in native byte order (little-endian
     platforms share the buffer layout; the copy decouples them from ``buf``).
     """
+    ftype, meta, cols, _flags = decode_ex(buf)
+    return ftype, meta, cols
+
+
+def decode_ex(buf: bytes) -> Tuple[int, Dict, Dict[str, np.ndarray], int]:
+    """:func:`decode` plus the raw header flags, for transports that need
+    them (a worker mirrors ``FLAG_CRC`` back once it sees the coordinator
+    emit it, so CRC negotiation needs no extra round trip)."""
+    if len(buf) > MAX_FRAME_BYTES:
+        raise WireError(f"frame too large: {len(buf)} > {MAX_FRAME_BYTES}")
     if len(buf) < HEADER_BYTES:
         raise WireError(f"truncated header: {len(buf)} < {HEADER_BYTES}")
-    magic, ver, ftype, _flags, meta_len, ncols, _rsvd = _HEADER.unpack_from(buf)
+    magic, ver, ftype, flags, meta_len, ncols, _rsvd = _HEADER.unpack_from(buf)
     if magic != MAGIC:
         raise WireError(f"bad magic {magic!r}")
-    if ver != VERSION:
-        raise WireError(f"wire version {ver} != {VERSION}")
+    if ver not in (1, 2):
+        raise WireError(f"wire version {ver} not in (1, 2)")
+    end = len(buf)
+    if flags & FLAG_CRC:
+        if end < HEADER_BYTES + CRC_BYTES:
+            raise WireError("truncated CRC trailer")
+        end -= CRC_BYTES
+        (want,) = struct.unpack_from("<I", buf, end)
+        got = zlib.crc32(buf[:end]) & 0xFFFFFFFF
+        if got != want:
+            raise CorruptFrame(
+                f"CRC mismatch: computed {got:#010x} != trailer {want:#010x}"
+            )
+    if meta_len > MAX_META_BYTES:
+        raise WireError(f"declared meta_len {meta_len} > {MAX_META_BYTES}")
+    if ncols > MAX_COLS:
+        raise WireError(f"declared ncols {ncols} > {MAX_COLS}")
     off = HEADER_BYTES
-    if len(buf) < off + meta_len:
+    if end < off + meta_len:
         raise WireError("truncated meta")
-    meta = json.loads(buf[off:off + meta_len]) if meta_len else {}
+    if meta_len:
+        try:
+            meta = json.loads(buf[off:off + meta_len])
+        except (ValueError, UnicodeDecodeError) as e:
+            raise WireError(f"malformed meta JSON: {e}") from None
+        if not isinstance(meta, dict):
+            raise WireError(f"meta is {type(meta).__name__}, not an object")
+    else:
+        meta = {}
     off += meta_len
     cols: Dict[str, np.ndarray] = {}
-    for _ in range(ncols):
+    for i in range(ncols):
+        if end < off + 1:
+            raise WireError(f"column {i}: truncated name length")
         (nlen,) = struct.unpack_from("<B", buf, off)
         off += 1
-        name = buf[off:off + nlen].decode()
+        if end < off + nlen + 5:
+            raise WireError(f"column {i}: truncated descriptor")
+        try:
+            name = buf[off:off + nlen].decode()
+        except UnicodeDecodeError as e:
+            raise WireError(f"column {i}: malformed name: {e}") from None
         off += nlen
         code, nbytes = struct.unpack_from("<BI", buf, off)
         off += 5
         dt = _DTYPES.get(code)
         if dt is None:
             raise WireError(f"column {name!r}: unknown dtype code {code}")
-        if len(buf) < off + nbytes:
+        if end < off + nbytes:
             raise WireError(f"column {name!r}: truncated payload")
+        if nbytes % dt.itemsize:
+            raise WireError(
+                f"column {name!r}: {nbytes} bytes not a multiple of "
+                f"itemsize {dt.itemsize}"
+            )
         arr = np.frombuffer(buf, dtype=dt, count=nbytes // dt.itemsize,
                             offset=off).copy()
         cols[name] = arr.astype(arr.dtype.newbyteorder("="), copy=False)
         off += nbytes
-    if off != len(buf):
-        raise WireError(f"{len(buf) - off} trailing bytes after last column")
-    return ftype, meta, cols
+    if off != end:
+        raise WireError(f"{end - off} trailing bytes after last column")
+    return ftype, meta, cols, flags
 
 
 # -- transport: multiprocessing.Connection ----------------------------------
@@ -262,12 +370,22 @@ def write_frame(stream, ftype: int, meta=None, cols=None, flags: int = 0) -> int
     return 4 + n
 
 
-def read_frame(stream) -> Tuple[int, Dict, Dict[str, np.ndarray]]:
-    """Read one length-prefixed frame from a byte stream."""
+def read_frame(
+    stream, max_bytes: int = MAX_FRAME_BYTES
+) -> Tuple[int, Dict, Dict[str, np.ndarray]]:
+    """Read one length-prefixed frame from a byte stream.
+
+    The declared length is capped at ``max_bytes`` BEFORE the payload read,
+    so a corrupt or hostile prefix (e.g. ``0xFFFFFFFF``) raises a precise
+    :class:`WireError` instead of attempting a 4 GiB allocation."""
     prefix = stream.read(4)
     if len(prefix) < 4:
         raise WireError("truncated length prefix")
     (n,) = struct.unpack("<I", prefix)
+    if n > max_bytes:
+        raise WireError(f"declared frame length {n} > cap {max_bytes}")
+    if n < HEADER_BYTES:
+        raise WireError(f"declared frame length {n} < header {HEADER_BYTES}")
     buf = stream.read(n)
     if len(buf) < n:
         raise WireError(f"truncated frame: {len(buf)} < {n}")

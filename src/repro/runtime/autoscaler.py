@@ -313,9 +313,47 @@ class Autoscaler:
         self._pending, self._pending_count = None, 0
 
     def maybe_scale(self, executor, queue=None) -> Optional[Decision]:
-        """Consult the policy and apply the transition if accepted."""
+        """Consult the policy and apply the transition if accepted.
+
+        Before consulting the policy at all: if the adapter reports a
+        ``capacity_limit`` below the current degree (a degraded distributed
+        plane whose respawn capability failed), the degree is **forced**
+        down onto the surviving capacity — capacity loss is a hard
+        constraint, not a load signal, so it bypasses cooldown and
+        hysteresis entirely."""
         bus = executor.metrics
         current = executor.degree
+        cap = getattr(executor.adapter, "capacity_limit", None)
+        if cap is not None and current > cap:
+            feas = executor.feasible_degrees(self.candidates)
+            target = max([c for c in feas if c <= cap], default=None)
+            if target is not None and target < current:
+                rec = executor.set_degree(
+                    target,
+                    reason=f"forced degrade: capacity limit {cap} "
+                           f"< degree {current}",
+                )
+                self.notify_resized()
+                d = Decision(
+                    chunk_index=executor.chunks_done,
+                    current=current,
+                    proposed=target,
+                    applied=rec is not None,
+                    reason=rec.reason if rec else "noop",
+                    handoff_slots=rec.handoff_items if rec else 0,
+                    handoff_rows=rec.handoff_rows if rec else 0,
+                    handoff_bytes=rec.handoff_bytes if rec else 0,
+                    signal="capacity",
+                )
+                tracer = getattr(executor, "tracer", None)
+                if tracer is not None:
+                    tracer.instant(
+                        "autoscale.decision", chunk=d.chunk_index,
+                        current=current, proposed=target, applied=d.applied,
+                        policy="capacity-guard", signal="forced degrade",
+                    )
+                self.decisions.append(d)
+                return d
         target = self.propose(
             bus,
             current,

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.checkpoint import checkpoint as ckpt_lib
@@ -30,7 +31,22 @@ from repro.runtime.executor import StreamExecutor
 
 
 class WorkerFailure(RuntimeError):
-    """A worker (or its host) died mid-chunk."""
+    """A worker (or its host) died mid-chunk.
+
+    ``cause`` classifies the failure domain (see ``docs/fault-model.md``):
+    ``dead`` (process exit / EOF), ``hung`` (liveness-probe timeout),
+    ``slow`` (consecutive deadline-adjacent replies escalated), ``corrupt``
+    (persistent CRC/decode failures), ``spawn`` (replacement processes
+    cannot start).  ``capacity`` (optional) is the largest degree the
+    failing plane can still field — the supervisor clamps its post-failure
+    degree to it, so exhausted spawn capability degrades the computation
+    instead of killing it."""
+
+    def __init__(self, msg: str = "", *, cause: str = "dead",
+                 capacity: Optional[int] = None):
+        super().__init__(msg)
+        self.cause = cause
+        self.capacity = capacity
 
 
 @dataclasses.dataclass
@@ -88,6 +104,8 @@ class Supervisor:
         self.registry = registry
         self.events: List[SupervisorEvent] = []
         self.outputs: Dict[int, Any] = {}
+        #: per-recovery time from failure catch to degraded-degree resume
+        self.mttr_s: List[float] = []
 
     def _log(self, i: int, kind: str, detail: str) -> None:
         self.events.append(SupervisorEvent(i, kind, detail))
@@ -152,13 +170,21 @@ class Supervisor:
         self._log(latest, "restore", f"restored checkpoint at chunk {latest}")
         return int(meta["cursor"])
 
-    def _shrink_for_failure(self, healthy_degree: int) -> int:
+    def _shrink_for_failure(self, healthy_degree: int,
+                            capacity: Optional[int] = None) -> int:
+        """Post-failure degree: the configured degraded degree (or the
+        largest proper divisor of the healthy one), further clamped to the
+        ``capacity`` the failing plane reported it can still field."""
         if self.degraded_degree is not None:
-            return self.degraded_degree
-        downs = [
-            n for n in range(1, healthy_degree) if healthy_degree % n == 0
-        ]
-        return max(downs) if downs else 1
+            target = self.degraded_degree
+        else:
+            downs = [
+                n for n in range(1, healthy_degree) if healthy_degree % n == 0
+            ]
+            target = max(downs) if downs else 1
+        if capacity is not None:
+            target = min(target, max(1, capacity))
+        return max(1, target)
 
     def run(self) -> Dict[int, Any]:
         os.makedirs(self.ckpt_dir, exist_ok=True)
@@ -199,19 +225,33 @@ class Supervisor:
                 if i % self.ckpt_every == 0:
                     self._checkpoint(i)
             except WorkerFailure as e:
-                self._log(i, "failure", str(e))
-                self.executor.tracer.instant("failure", chunk=i, detail=str(e))
+                t_fail = time.monotonic()
+                cause = getattr(e, "cause", "dead")
+                self._log(i, "failure", f"[{cause}] {e}")
+                self.executor.tracer.instant("failure", chunk=i, cause=cause,
+                                             detail=str(e))
                 # black box FIRST: the dump must show the timeline into the
                 # failure unmodified by the recovery that follows
                 self._dump_blackbox(i, "failure")
                 cursor = self._restore_latest()
                 self._dump_blackbox(i, "restore")
-                target = self._shrink_for_failure(healthy)
+                target = self._shrink_for_failure(
+                    healthy, capacity=getattr(e, "capacity", None)
+                )
                 rec = self.executor.set_degree(
-                    target, reason=f"failure: lost capacity at chunk {i}"
+                    target, reason=f"failure ({cause}): lost capacity "
+                                   f"at chunk {i}"
                 )
                 if rec:
                     self._log(i, "shrink", f"{rec.n_old}->{rec.n_new}")
+                mttr = time.monotonic() - t_fail
+                self.mttr_s.append(mttr)
+                if self.registry is not None:
+                    self.registry.histogram("supervisor.mttr_s").record(mttr)
+                    self.registry.counter("supervisor.recoveries").inc()
+                    self.registry.counter(
+                        f"supervisor.failures.{cause}"
+                    ).inc()
                 degraded_since = cursor
                 i = cursor
         return self.outputs

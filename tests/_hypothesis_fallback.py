@@ -58,6 +58,10 @@ def floats(
     return Strategy(lambda rng: rng.uniform(min_value, max_value))
 
 
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
 def sampled_from(seq) -> Strategy:
     pool = list(seq)
     return Strategy(lambda rng: pool[rng.randrange(len(pool))])

@@ -20,7 +20,7 @@ except ModuleNotFoundError:
     _mod.given = _hf.given
     _mod.settings = _hf.settings
     _st = types.ModuleType("hypothesis.strategies")
-    for _name in ("integers", "floats", "lists", "sampled_from"):
+    for _name in ("integers", "floats", "lists", "sampled_from", "booleans"):
         setattr(_st, _name, getattr(_hf, _name))
     _mod.strategies = _st
     sys.modules["hypothesis"] = _mod

@@ -1,0 +1,590 @@
+"""Chaos tests for the distributed keyed plane (`repro.dist.faults`).
+
+Acceptance contract (ISSUE 10): under a seeded :class:`FaultPlan` storm —
+hung workers, hard crashes, corrupt/truncated/dropped/delayed frames, and
+corrupted shared-memory spans — the plane's detection and recovery
+machinery (deadline + liveness probe, CRC + NACK + retransmit, reply-cache
+exactly-once, epoch-fenced migration, Supervisor restore) keeps the stream
+**bit-exact** vs the serial oracle on both transports; hung-worker
+detection latency is bounded by ``deadline + probe`` (+ scheduling noise);
+a CRC-off peer interoperates byte-for-byte; a donor crash mid-resize
+recovers with migration accounting intact; a SIGKILLed coordinator leaves
+no orphaned workers or leaked shm segments; and spawn failure degrades
+capacity through the autoscaler instead of killing the computation.
+"""
+
+import dataclasses
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import semantics
+from repro.dist import DistributedKeyedPlane
+from repro.dist import shardhost, wire
+from repro.dist.faults import Fault, FaultPlan
+from repro.dist.plane import Deadlines
+from repro.keyed import WindowSpec, synthetic_keyed_items
+from repro.keyed.runtime import ROW_BYTES
+from repro.obs import MetricsRegistry
+from repro.runtime import (
+    Autoscaler,
+    BoundedSource,
+    QueueDepthPolicy,
+    StreamExecutor,
+    Supervisor,
+)
+from repro.runtime.supervisor import FailurePlan, WorkerFailure
+
+NUM_SLOTS = 20
+CHUNK = 16
+
+
+def _triples(items):
+    return [(int(r["key"]), int(r["value"]), int(r["ts"])) for r in items]
+
+
+def _rows(d, cols=("key", "start", "end", "value", "count")):
+    return [tuple(int(x) for x in row) for row in zip(*(d[k] for k in cols))]
+
+
+def _emissions(outs, channel="emissions"):
+    return [r for o in outs for r in _rows(o[channel])]
+
+
+def _late(outs):
+    return [
+        r for o in outs for r in _rows(o["late"], ("key", "value", "ts",
+                                                   "start"))
+    ]
+
+
+def _state_rows(state):
+    return [
+        tuple(int(x) for x in r)
+        for r in zip(
+            *(np.asarray(state[k]).tolist()
+              for k in ("w_key", "w_start", "w_end", "w_value", "w_count"))
+        )
+    ]
+
+
+def _chunks(items):
+    return [items[i: i + CHUNK] for i in range(0, len(items), CHUNK)]
+
+
+#: production-loose deadlines would stall chaos tests for minutes — these
+#: are tight enough to drive the probe/kill automaton in seconds while
+#: leaving generous headroom over real worker compute (sub-millisecond)
+def _tight(**kw):
+    base = dict(step=2.5, snapshot=30.0, migrate=30.0, health=15.0,
+                default=30.0, attach=60.0, probe=1.0, retry_base=0.01)
+    base.update(kw)
+    return Deadlines(**base)
+
+
+# ---------------------------------------------------------------------------
+# the seeded storm: every failure domain at once, bit-exact recovery
+# ---------------------------------------------------------------------------
+
+class TestFaultStorm:
+    @pytest.mark.parametrize("transport", ["pipe", "shm"])
+    def test_storm_recovers_bit_exact(self, tmp_path, transport):
+        """A seeded ``FaultPlan.storm`` — a hang, a crash, corrupt /
+        truncated / dropped / delayed frames in both directions (plus a
+        corrupted shm span on the shm transport) — against an unmodified
+        Supervisor: every kill is detected and attributed, every transport
+        fault is retried transparently, and the replayed stream is
+        bit-exact vs the serial oracle.  MTTR is recorded per recovery."""
+        spec = WindowSpec("tumbling", size=24, lateness=5, late_policy="side",
+                          early_every=2)
+        NCH = 10
+        items = synthetic_keyed_items(CHUNK * NCH, num_keys=9, disorder=5,
+                                      seed=13)
+        src = BoundedSource(items)
+        plan = FaultPlan.storm(seed=4, n_shards=3, n_chunks=NCH,
+                               include_shm=(transport == "shm"))
+
+        ad = DistributedKeyedPlane(spec, num_slots=NUM_SLOTS,
+                                   backend="device_table", capacity=16,
+                                   max_probes=2, ttl=6, prespawn=3,
+                                   transport=transport, faults=plan,
+                                   deadlines=_tight(),
+                                   blackbox_dir=str(tmp_path / "bb"))
+        try:
+            ex = StreamExecutor(ad, degree=3, chunk_size=CHUNK)
+
+            def chunk_fn(i):
+                src.seek(i * CHUNK)
+                return src.take(CHUNK)
+
+            sup = Supervisor(ex, chunk_fn, num_chunks=NCH,
+                             ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=2)
+            outs = sup.run()
+
+            o_em, o_open, o_late, o_early = semantics.keyed_windows(
+                "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+            )
+            ordered = [outs[i] for i in range(NCH)]
+            assert _emissions(ordered) == o_em
+            assert _emissions(ordered, "early") == o_early
+            assert _late(ordered) == o_late
+            assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+
+            # both kills fired and were attributed to their armed faults
+            fired = plan.kinds_fired()
+            assert fired.get("worker:hang") == 1
+            assert fired.get("worker:crash") == 1
+            ev = ad.fault_events
+            assert ev["death_hung"] == 1      # probe-detected, killed
+            assert ev["death_dead"] == 1      # hard exit, EOF-detected
+            assert ev["probes"] >= 1
+            assert ev["injected_send"] >= 1   # send-side faults drawn
+            # every death was followed by a timed re-attach recovery
+            assert ev["recoveries"] == len(ad.mttr_s) >= 1
+            assert all(m > 0 for m in ad.mttr_s)
+            assert len(sup.mttr_s) >= 1
+            kinds = [e.kind for e in sup.events]
+            assert "failure" in kinds and "restore" in kinds
+            assert "shrink" in kinds and "grow" in kinds
+            # dead workers' black boxes were collected
+            assert ad.collected_blackboxes
+        finally:
+            ad.close()
+
+    def test_every_transport_fault_family_is_transparent(self, tmp_path):
+        """Deterministic single-occurrence faults covering every recoverable
+        family — send corrupt/truncate/drop/delay, reply corrupt/drop/delay,
+        shm span corruption — with NO kills: the run completes with no
+        ``WorkerFailure``, stays bit-exact, and each fault leaves its
+        fingerprint on the ``dist.fault.*`` counters (exported through
+        ``export_health``)."""
+        spec = WindowSpec("tumbling", size=12, lateness=3, late_policy="side")
+        NCH = 8
+        items = synthetic_keyed_items(CHUNK * NCH, num_keys=8, disorder=4,
+                                      seed=21)
+        plan = FaultPlan([
+            Fault("send", "STEP", "corrupt", nth=2, shard=0, seed=12345),
+            Fault("send", "STEP", "truncate", nth=3, shard=1, seed=777),
+            Fault("send", "STEP", "drop", nth=4, shard=2),
+            Fault("send", "STEP", "delay", nth=2, shard=1, seconds=0.02),
+            Fault("reply", "STEP", "corrupt", nth=5, shard=0, seed=99),
+            Fault("reply", "STEP", "drop", nth=5, shard=1),
+            Fault("reply", "STEP", "delay", nth=3, shard=2, seconds=0.02),
+            # struck where the reply span carries payload (corrupting a
+            # zero-length span is a no-op by construction)
+            Fault("shm", "STEP", "corrupt", nth=2, shard=0),
+        ])
+        ad = DistributedKeyedPlane(spec, num_slots=NUM_SLOTS, backend="host",
+                                   prespawn=3, transport="shm", faults=plan,
+                                   deadlines=_tight(),
+                                   blackbox_dir=str(tmp_path / "bb"))
+        try:
+            ex = StreamExecutor(ad, degree=3, chunk_size=CHUNK)
+            outs = ex.run(_chunks(items))
+
+            o_em, o_open, o_late = semantics.keyed_windows(
+                "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+            )
+            assert _emissions(outs) == o_em
+            assert _late(outs) == o_late
+            assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+
+            # all four coordinator-side faults were drawn ...
+            assert plan.kinds_fired() == {
+                "send:corrupt": 1, "send:truncate": 1,
+                "send:drop": 1, "send:delay": 1,
+            }
+            ev = ad.fault_events
+            assert ev["injected_send"] == 4
+            # ... and every fault family left its detection fingerprint:
+            # mangled requests NACKed, corrupt replies (frame + shm span)
+            # CRC-caught, lost frames probed out and retransmitted
+            assert ev["nacks"] >= 2            # send corrupt + truncate
+            assert ev["crc_errors"] >= 2       # reply corrupt + shm corrupt
+            assert ev["probes"] >= 2           # send drop + reply drop
+            assert ev["probes_answered"] >= 2  # alive both times -> resend
+            assert ev["retransmits"] >= 4
+            # nothing escalated to a death; CRC was negotiated on every link
+            assert sum(v for k, v in ev.items()
+                       if k.startswith("death_")) == 0
+            assert all(h.chan.crc for h in ad._pool if h is not None)
+
+            reg = MetricsRegistry()
+            ad.export_health(reg)
+            assert reg.counter("dist.fault.injected_send").value == 4
+            assert (reg.counter("dist.fault.crc_errors").value
+                    == ev["crc_errors"])
+        finally:
+            ad.close()
+
+
+# ---------------------------------------------------------------------------
+# bounded hung-worker detection
+# ---------------------------------------------------------------------------
+
+class TestHungWorkerDetection:
+    def test_detection_latency_bounded(self, tmp_path):
+        """A worker that hangs mid-STEP is detected within the family
+        deadline plus the probe grace window (+ kill/respawn overhead) and
+        surfaced as ``WorkerFailure(cause="hung")`` — never a silent
+        stall."""
+        spec = WindowSpec("tumbling", size=12, lateness=3, late_policy="side")
+        items = synthetic_keyed_items(CHUNK * 3, num_keys=6, disorder=3,
+                                      seed=2)
+        dl = _tight(step=1.5, probe=0.5)
+        plan = FaultPlan([Fault("worker", "STEP", "hang", nth=2, shard=1)])
+        ad = DistributedKeyedPlane(spec, num_slots=NUM_SLOTS, backend="host",
+                                   prespawn=2, transport="pipe", faults=plan,
+                                   deadlines=dl,
+                                   blackbox_dir=str(tmp_path / "bb"))
+        try:
+            ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+            chunks = _chunks(items)
+            ex.process(chunks[0])           # occurrence 1: no fault yet
+            t0 = time.monotonic()
+            with pytest.raises(WorkerFailure) as ei:
+                ex.process(chunks[1])       # occurrence 2: shard 1 hangs
+            elapsed = time.monotonic() - t0
+            assert ei.value.cause == "hung"
+            # lower bound: the full deadline was actually honored; upper
+            # bound: deadline + probe + epsilon (kill, black-box wait,
+            # refill spawn, scheduling noise)
+            assert dl.step * 0.9 <= elapsed <= dl.step + dl.probe + 2.5
+            assert ad.fault_events["death_hung"] == 1
+            assert ad.fault_events["probes"] >= 1
+        finally:
+            ad.close()
+
+
+# ---------------------------------------------------------------------------
+# CRC negotiation interop
+# ---------------------------------------------------------------------------
+
+class TestCrcNegotiation:
+    def test_crc_off_peer_interoperates_bit_exact(self, tmp_path):
+        """``worker_crc=False`` simulates a v1 peer: HELLO advertises no
+        ``crc32`` cap, the coordinator keeps the link plain (byte-identical
+        v1 frames), and the stream stays bit-exact — the CRC upgrade never
+        breaks an old peer."""
+        spec = WindowSpec("tumbling", size=12, lateness=3, late_policy="side")
+        items = synthetic_keyed_items(CHUNK * 4, num_keys=7, disorder=3,
+                                      seed=9)
+        ad = DistributedKeyedPlane(spec, num_slots=NUM_SLOTS, backend="host",
+                                   prespawn=2, transport="pipe",
+                                   worker_crc=False,
+                                   blackbox_dir=str(tmp_path / "bb"))
+        try:
+            ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+            outs = ex.run(_chunks(items))
+            assert all(not h.chan.crc for h in ad._pool if h is not None)
+            assert ad.fault_events["crc_errors"] == 0
+            o_em, o_open, _ = semantics.keyed_windows(
+                "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+            )
+            assert _emissions(outs) == o_em
+            assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+        finally:
+            ad.close()
+
+
+# ---------------------------------------------------------------------------
+# exactly-once effects: reply cache + epoch fence
+# ---------------------------------------------------------------------------
+
+class TestExactlyOnce:
+    def test_dropped_ingest_reply_served_from_cache(self, tmp_path):
+        """A dropped INGEST acknowledgment forces probe + retransmit; the
+        worker answers the retransmit from its reply cache WITHOUT
+        re-ingesting the rows — a double-apply would corrupt the state and
+        break the oracle comparison."""
+        spec = WindowSpec("tumbling", size=12, lateness=3, late_policy="side")
+        items = synthetic_keyed_items(CHUNK * 5, num_keys=8, disorder=3,
+                                      seed=17)
+        plan = FaultPlan([Fault("reply", "INGEST", "drop", nth=1)])
+        ad = DistributedKeyedPlane(spec, num_slots=NUM_SLOTS, backend="host",
+                                   prespawn=3, transport="shm", faults=plan,
+                                   deadlines=_tight(migrate=2.0, probe=0.5),
+                                   blackbox_dir=str(tmp_path / "bb"))
+        try:
+            ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+            outs = ex.run(_chunks(items), schedule={2: 3})
+            assert ad.fault_events["probes"] >= 1
+            assert ad.fault_events["probes_answered"] >= 1
+            assert ad.fault_events["retransmits"] >= 1
+            o_em, o_open, _ = semantics.keyed_windows(
+                "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+            )
+            assert _emissions(outs) == o_em
+            assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+        finally:
+            ad.close()
+
+    def test_ingest_apply_epoch_fence(self):
+        """The (ftype, shard, epoch) fence: a replayed INGEST/APPLY epoch —
+        a retransmit past the reply cache, or a recovery-re-driven resize —
+        is a fenced no-op; distinct shards, frame types, and epochs are
+        not conflated, and the fence forgets oldest-first at capacity."""
+        spec = WindowSpec("tumbling", size=8, lateness=3, late_policy="side")
+        host = shardhost._Host(None, {
+            "spec": dataclasses.asdict(spec), "engine_kwargs": {},
+        })
+        assert not host.fenced(wire.INGEST, {"shard": 1, "epoch": 4})
+        assert host.fenced(wire.INGEST, {"shard": 1, "epoch": 4})  # replay
+        # not conflated across frame type / shard / epoch
+        assert not host.fenced(wire.APPLY, {"shard": 1, "epoch": 4})
+        assert not host.fenced(wire.INGEST, {"shard": 2, "epoch": 4})
+        assert not host.fenced(wire.INGEST, {"shard": 1, "epoch": 5})
+        # epoch-less frames (pre-fence senders) are never fenced
+        assert not host.fenced(wire.INGEST, {"shard": 1})
+        assert not host.fenced(wire.INGEST, {"shard": 1})
+        # bounded memory: oldest keys are forgotten at FENCE_CACHE
+        for e in range(shardhost.FENCE_CACHE + 1):
+            host.fenced(wire.INGEST, {"shard": 0, "epoch": 1000 + e})
+        assert not host.fenced(wire.INGEST, {"shard": 1, "epoch": 4})
+
+
+# ---------------------------------------------------------------------------
+# mid-resize partial failure
+# ---------------------------------------------------------------------------
+
+class TestMidResizeFailure:
+    @pytest.mark.parametrize(
+        "transport,op",
+        [("pipe", "EXTRACT"), ("shm", "INGEST")],
+        ids=["pipe-donor-extract", "shm-recipient-ingest"],
+    )
+    def test_crash_mid_migration_recovers_bit_exact(self, tmp_path,
+                                                    transport, op):
+        """A worker crash in the middle of a live resize — the donor dying
+        on EXTRACT (rows never shipped) or a recipient dying on INGEST
+        (partial application across recipients) — rolls back through the
+        Supervisor to the last checkpoint, replays bit-exact, and the
+        migration byte accounting reconciles (aborted handoffs are never
+        half-counted)."""
+        # size=60 keeps one window open across the recovery grow, so the
+        # 1->3 resize genuinely ships rows (an empty handoff would make the
+        # INGEST-crash variant vacuous)
+        spec = WindowSpec("tumbling", size=60, lateness=5, late_policy="side",
+                          early_every=2)
+        NCH = 6
+        items = synthetic_keyed_items(CHUNK * NCH, num_keys=10, disorder=5,
+                                      seed=3)
+        src = BoundedSource(items)
+        plan = FaultPlan([Fault("worker", op, "crash", nth=1)])
+        ad = DistributedKeyedPlane(spec, num_slots=NUM_SLOTS,
+                                   backend="device_table", capacity=16,
+                                   prespawn=3, transport=transport,
+                                   faults=plan, deadlines=_tight(),
+                                   blackbox_dir=str(tmp_path / "bb"))
+        try:
+            ex = StreamExecutor(ad, degree=3, chunk_size=CHUNK)
+
+            def chunk_fn(i):
+                src.seek(i * CHUNK)
+                return src.take(CHUNK)
+
+            # the injected supervisor failure forces shrink-to-1 then a
+            # recovery *grow* — a live 1->3 resize whose EXTRACT/INGEST
+            # traffic the armed crash fault strikes mid-flight
+            sup = Supervisor(ex, chunk_fn, num_chunks=NCH,
+                             ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=2,
+                             failure_plan=FailurePlan(fail_at=2,
+                                                      recover_after=1))
+            outs = sup.run()
+
+            o_em, o_open, o_late, o_early = semantics.keyed_windows(
+                "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+            )
+            ordered = [outs[i] for i in range(NCH)]
+            assert _emissions(ordered) == o_em
+            assert _emissions(ordered, "early") == o_early
+            assert _late(ordered) == o_late
+            assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+
+            # the crash really struck mid-resize and was attributed
+            assert ad.fault_events["death_dead"] >= 1
+            assert plan.kinds_fired().get("worker:crash", 0) >= 1
+            assert len([e for e in sup.events if e.kind == "failure"]) >= 2
+
+            # migration accounting reconciles: ONLY completed resizes were
+            # recorded (the aborted mid-crash handoff is absent — exactly
+            # the post-failure shrink and the successful recovery grow),
+            # bytes are bounded by payload + per-frame envelope, and the
+            # wire meter (live resizes only; the shrink ran serialized
+            # after restore) never exceeds the bus total
+            tl = ex.metrics.resize_timeline()
+            assert [(r["n_old"], r["n_new"]) for r in tl] == [(3, 1), (1, 3)]
+            vol = ex.metrics.migration_volume()
+            assert vol["rows"] > 0          # the handoff was not vacuous
+            payload = vol["rows"] * ROW_BYTES
+            assert payload <= vol["bytes"] \
+                <= payload + vol["handoffs"] * 7 * 512
+            assert 0 < ad.wire_bytes["migration"] <= vol["bytes"]
+        finally:
+            ad.close()
+
+
+# ---------------------------------------------------------------------------
+# orphaned-worker hygiene: coordinator SIGKILL
+# ---------------------------------------------------------------------------
+
+class TestCoordinatorDeath:
+    def test_sigkill_coordinator_leaves_no_orphans(self, tmp_path):
+        """SIGKILL the coordinator process: every worker detects EOF on its
+        pipe, dumps its black box, unlinks its shm rings, and exits cleanly
+        — no orphaned processes, no leaked ``/dev/shm`` segments."""
+        bb_dir = tmp_path / "bb"
+        script = textwrap.dedent(f"""
+            import time
+            from repro.keyed import WindowSpec
+            from repro.dist import DistributedKeyedPlane
+
+            def main():  # spawn-safe: workers re-import this module
+                ad = DistributedKeyedPlane(
+                    WindowSpec("tumbling", size=8, lateness=3,
+                               late_policy="side"),
+                    num_slots=12, prespawn=2, transport="shm",
+                    blackbox_dir={str(bb_dir)!r},
+                )
+                ad._ensure_pool(2)
+                pids = [str(h.pid) for h in ad._pool if h is not None]
+                rings = [r._shm.name for h in ad._pool if h is not None
+                         for r in (h.rings or ())]
+                print("READY", ",".join(pids), ";", ",".join(rings),
+                      flush=True)
+                time.sleep(300)
+
+            if __name__ == "__main__":
+                main()
+        """)
+        path = tmp_path / "coordinator.py"
+        path.write_text(script)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.abspath("src") + os.pathsep \
+            + env.get("PYTHONPATH", "")
+        proc = subprocess.Popen([sys.executable, str(path)], env=env,
+                                stdout=subprocess.PIPE, text=True)
+        try:
+            line = ""
+            while not line.startswith("READY"):
+                line = proc.stdout.readline()
+                assert line, "coordinator exited before READY"
+            _, pids_s, _, rings_s = line.split()
+            pids = [int(p) for p in pids_s.split(",")]
+            rings = [r for r in rings_s.split(",") if r]
+            assert len(pids) == 2 and len(rings) == 4
+        finally:
+            os.kill(proc.pid, signal.SIGKILL)
+            proc.wait()
+
+        def gone(pid):
+            try:
+                with open(f"/proc/{pid}/stat") as f:
+                    # zombies count as exited (init may reap lazily)
+                    return f.read().split(")")[-1].split()[0] in ("Z", "X")
+            except OSError:
+                return True
+
+        deadline = time.monotonic() + 20
+        while time.monotonic() < deadline:
+            if all(gone(p) for p in pids):
+                break
+            time.sleep(0.1)
+        assert all(gone(p) for p in pids), "orphaned worker processes"
+        # shm segments were unlinked by the dying workers
+        leaked = [r for r in rings if os.path.exists(f"/dev/shm/{r}")]
+        assert not leaked, f"leaked shm segments: {leaked}"
+        # each worker left a black box for the post-mortem
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline and not (
+            bb_dir.exists() and list(bb_dir.iterdir())
+        ):
+            time.sleep(0.1)
+        assert bb_dir.exists() and list(bb_dir.iterdir())
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: spawn failure clamps capacity
+# ---------------------------------------------------------------------------
+
+class TestGracefulDegradation:
+    def test_spawn_failure_sets_capacity_limit(self, tmp_path):
+        """When a dead worker cannot be replaced (spawn fails), the plane
+        reports the capacity it can still field on the ``WorkerFailure``
+        and clamps ``feasible_degrees`` — degradation, not death."""
+        spec = WindowSpec("tumbling", size=12, lateness=3, late_policy="side")
+        items = synthetic_keyed_items(CHUNK * 3, num_keys=6, disorder=3,
+                                      seed=5)
+        ad = DistributedKeyedPlane(spec, num_slots=NUM_SLOTS, backend="host",
+                                   prespawn=2, transport="pipe",
+                                   deadlines=_tight(),
+                                   blackbox_dir=str(tmp_path / "bb"))
+        try:
+            ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+            chunks = _chunks(items)
+            ex.process(chunks[0])
+
+            def refuse():
+                raise RuntimeError("spawn refused (drill)")
+
+            ad._spawn = refuse                 # no replacement available
+            ad.kill_worker(1)
+            with pytest.raises(WorkerFailure) as ei:
+                ex.process(chunks[1])
+            assert ei.value.cause == "dead"
+            assert ei.value.capacity == 1      # one live host remains
+            assert ad.capacity_limit == 1
+            assert ad.fault_events["degraded"] >= 1
+            assert ad.feasible_degrees(CHUNK, [1, 2, 3]) == [1]
+            # the supervisor's shrink honors the reported capacity
+            sup = Supervisor(ex, lambda i: chunks[i], num_chunks=3,
+                             ckpt_dir=str(tmp_path / "ckpt"))
+            assert sup._shrink_for_failure(2, capacity=1) == 1
+            reg = MetricsRegistry()
+            ad.export_health(reg)
+            assert reg.gauge("dist.fault.capacity_limit").value == 1
+        finally:
+            del ad.__dict__["_spawn"]
+            ad.close()
+
+    def test_autoscaler_forces_degrade_onto_capacity(self, tmp_path):
+        """A capacity limit below the current degree makes the autoscaler
+        force a shrink onto the surviving capacity, bypassing cooldown and
+        hysteresis — capacity loss is a constraint, not a load signal."""
+        spec = WindowSpec("tumbling", size=12, lateness=3, late_policy="side")
+        items = synthetic_keyed_items(CHUNK * 4, num_keys=7, disorder=3,
+                                      seed=11)
+        ad = DistributedKeyedPlane(spec, num_slots=NUM_SLOTS, backend="host",
+                                   prespawn=2, transport="pipe",
+                                   blackbox_dir=str(tmp_path / "bb"))
+        try:
+            ex = StreamExecutor(ad, degree=2, chunk_size=CHUNK)
+            sc = Autoscaler(QueueDepthPolicy(), [1, 2, 3],
+                            cooldown_chunks=100)   # cooldown MUST be moot
+
+            class _Q:
+                high_watermark, low_watermark = 8, 1
+                depth = 0
+
+            chunks = _chunks(items)
+            outs = [ex.process(chunks[0])]
+            ad.capacity_limit = 1                  # simulate failed respawn
+            d = sc.maybe_scale(ex, queue=_Q())
+            assert d is not None and d.applied and d.signal == "capacity"
+            assert ad._active == 1 and ex.degree == 1
+            ad.capacity_limit = None
+            for c in chunks[1:]:
+                outs.append(ex.process(c))
+            o_em, o_open, _ = semantics.keyed_windows(
+                "tumbling", _triples(items), **spec.oracle_kwargs(CHUNK)
+            )
+            assert _emissions(outs) == o_em
+            assert _state_rows(ex.state) == [tuple(t) for t in o_open]
+        finally:
+            ad.close()

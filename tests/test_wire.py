@@ -247,3 +247,126 @@ class TestVectoredSend:
         frame = wire.encode(wire.OK, {"seq": 1}, flags=wire.FLAG_SHM)
         ftype, meta, cols = wire.decode(frame)
         assert ftype == wire.OK and meta == {"seq": 1} and cols == {}
+
+
+class TestCrcTrailer:
+    """The v2 CRC32 trailer (FLAG_CRC): end-to-end frame integrity with
+    byte-exact v1 interop for plain frames."""
+
+    def _frame(self, flags=wire.FLAG_CRC):
+        return wire.encode(
+            wire.STEP, {"seq": 9, "shard": 1},
+            {"key": np.arange(6, dtype=np.int64),
+             "tbl": np.arange(4, dtype=np.int32)},
+            flags=flags,
+        )
+
+    def test_crc_frame_round_trips(self):
+        frame = self._frame()
+        assert frame[4] == 2  # CRC frames are labelled v2
+        ftype, meta, cols, flags = wire.decode_ex(frame)
+        assert ftype == wire.STEP and meta == {"seq": 9, "shard": 1}
+        assert flags & wire.FLAG_CRC
+        assert np.array_equal(cols["key"], np.arange(6))
+
+    def test_plain_frames_stay_v1(self):
+        """A CRC-off link emits byte-identical v1 frames — the old-peer
+        interop half of the HELLO negotiation."""
+        frame = self._frame(flags=0)
+        assert frame[4] == 1
+        ftype, meta, cols = wire.decode(frame)
+        assert ftype == wire.STEP and meta == {"seq": 9, "shard": 1}
+
+    def test_crc_flag_adds_exactly_trailer_bytes(self):
+        assert (len(self._frame()) - len(self._frame(flags=0))
+                == wire.CRC_BYTES)
+
+    def test_every_byte_flip_detected(self):
+        """No single flipped byte anywhere in a CRC frame decodes silently
+        — header, meta, payload, and trailer are all covered."""
+        frame = self._frame()
+        for i in range(len(frame)):
+            bad = bytearray(frame)
+            bad[i] ^= 0xFF
+            with pytest.raises(wire.WireError):
+                wire.decode(bytes(bad))
+
+    def test_payload_flip_is_retriable_corrupt_frame(self):
+        """A transport-mangled payload raises CorruptFrame specifically —
+        the coordinator's cue to retransmit rather than declare death."""
+        frame = bytearray(self._frame())
+        frame[wire.HEADER_BYTES + 3] ^= 0x01
+        with pytest.raises(wire.CorruptFrame):
+            wire.decode(bytes(frame))
+        assert issubclass(wire.CorruptFrame, wire.WireError)
+
+    def test_truncated_crc_trailer_rejected(self):
+        header_only = self._frame()[:wire.HEADER_BYTES]
+        with pytest.raises(wire.WireError, match="CRC"):
+            wire.decode(header_only)
+
+
+class TestHostileInput:
+    """`decode`/`read_frame` against adversarial bytes: declared-length
+    caps before allocation, and WireError (never a raw struct/json/numpy
+    error) on any malformed input."""
+
+    def test_read_frame_giant_prefix_capped(self):
+        """A corrupt 4 GiB length prefix raises before any allocation."""
+        stream = io.BytesIO(b"\xff\xff\xff\xff" + b"x" * 64)
+        with pytest.raises(wire.WireError, match="cap"):
+            wire.read_frame(stream)
+
+    def test_read_frame_sub_header_length_rejected(self):
+        stream = io.BytesIO(b"\x02\x00\x00\x00ab")
+        with pytest.raises(wire.WireError, match="header"):
+            wire.read_frame(stream)
+
+    def test_declared_meta_len_capped(self):
+        import struct
+        frame = bytearray(wire.encode(wire.OK, {"a": 1}))
+        struct.pack_into("<I", frame, 8, wire.MAX_META_BYTES + 1)
+        with pytest.raises(wire.WireError, match="meta_len"):
+            wire.decode(bytes(frame))
+
+    def test_declared_ncols_capped(self):
+        import struct
+        frame = bytearray(wire.encode(wire.OK))
+        struct.pack_into("<H", frame, 12, wire.MAX_COLS + 1)
+        with pytest.raises(wire.WireError, match="ncols"):
+            wire.decode(bytes(frame))
+
+    def test_oversize_frame_rejected(self):
+        buf = b"RKWP" + b"\x00" * wire.MAX_FRAME_BYTES
+        with pytest.raises(wire.WireError, match="too large"):
+            wire.decode(buf)
+
+    def test_meta_non_object_rejected(self):
+        import json
+        meta_b = json.dumps([1, 2, 3]).encode()
+        frame = (wire._HEADER.pack(wire.MAGIC, 1, wire.OK, 0,
+                                   len(meta_b), 0, 0) + meta_b)
+        with pytest.raises(wire.WireError, match="not an object"):
+            wire.decode(frame)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 10 ** 9), st.booleans())
+    def test_fuzz_truncate_or_flip_never_escapes_wire_error(self, n, crc):
+        """Random truncation points and byte flips over a real frame: the
+        decoder either succeeds (flip on a CRC-less frame may land in the
+        payload) or raises a WireError subclass — never struct.error,
+        UnicodeDecodeError, json.JSONDecodeError, or a numpy ValueError."""
+        frame = bytearray(wire.encode(
+            wire.STEP, {"seq": 3, "wm_ts": 12345},
+            {"key": np.arange(9, dtype=np.int64),
+             "f": np.linspace(0, 1, 5)},
+            flags=wire.FLAG_CRC if crc else 0,
+        ))
+        if n % 2:
+            frame = frame[: n % len(frame)]           # truncate
+        else:
+            frame[n % len(frame)] ^= 1 << (n % 8)      # bit flip
+        try:
+            wire.decode(bytes(frame))
+        except wire.WireError:
+            pass
